@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks: ciphertext histogram / modmul / binning.
+
+On this CPU container the Pallas kernels run in interpret mode (not
+representative of TPU); we therefore time the jitted REFERENCE formulations
+(the same math XLA would fuse on TPU) and report op-level throughput plus
+the analytic MXU utilisation the kernel formulation achieves on the target
+(one-hot matmul: 2*n_i*n_f*n_b*L FLOPs per histogram)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit
+
+from repro.core.he import limbs, get_cipher
+from repro.kernels.histogram import hist_ref
+from repro.kernels.binning import bucketize_ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def main(quick: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+
+    n_i, n_f, n_b, L = (20000, 32, 32, 128) if not quick else (2000, 8, 32, 32)
+    bins = jnp.asarray(rng.integers(0, n_b, (n_i, n_f)), jnp.int32)
+    cts = jnp.asarray(rng.integers(0, 256, (n_i, L)), jnp.int32)
+    f = jax.jit(lambda b, c: hist_ref(b, c, n_b))
+    dt = _time(f, bins, cts)
+    flops = 2 * n_i * n_f * n_b * L
+    rows.append(("kernel/ciphertext_histogram", dt * 1e6,
+                 f"n_i={n_i};n_f={n_f};L={L};"
+                 f"target_flops_per_call={flops:.3g}"))
+
+    aff = get_cipher("affine", key_bits=1024, seed=0)
+    pts = jnp.asarray(limbs.from_pyints(
+        [int(x) for x in rng.integers(1, 2 ** 62, 512)], aff.Ln))
+    g = jax.jit(lambda x: aff.encrypt_limbs(x))
+    dt = _time(g, pts)
+    rows.append(("kernel/modmul_encrypt_batch512_1024b", dt * 1e6,
+                 f"ciphers_per_s={512 / dt:.0f}"))
+
+    v = jnp.asarray(rng.normal(0, 1, (n_i, n_f)), jnp.float32)
+    thr = jnp.asarray(np.sort(rng.normal(0, 1, (n_f, n_b - 1)), axis=1),
+                      jnp.float32)
+    h = jax.jit(bucketize_ref)
+    dt = _time(h, v, thr)
+    rows.append(("kernel/bucketize", dt * 1e6,
+                 f"elems_per_s={n_i * n_f / dt:.3g}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Shared benchmark helpers: datasets shaped like the paper's (scaled to
+CPU), AUC/accuracy metrics, timing."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.data import synthetic_tabular  # noqa: E402
+
+# paper datasets, scaled down for single-core CPU wall-time (aspect ratios
+# preserved: susy/higgs instance-heavy, epsilon feature-heavy)
+DATASETS = {
+    "give_credit": dict(n=3000, d=10, task="binary"),
+    "susy": dict(n=5000, d=18, task="binary"),
+    "higgs": dict(n=6000, d=28, task="binary"),
+    "epsilon": dict(n=1200, d=100, task="binary"),   # high-dimensional
+}
+
+MULTI_DATASETS = {
+    "sensorless": dict(n=3000, d=48, task="multi", n_classes=11),
+    "covtype": dict(n=4000, d=54, task="multi", n_classes=7),
+    "svhn": dict(n=1200, d=128, task="multi", n_classes=10),
+}
+
+
+def load(name: str, seed: int = 0, sparsity: float = 0.0):
+    spec = {**DATASETS, **MULTI_DATASETS}[name]
+    X, y = synthetic_tabular(spec["n"], spec["d"], seed=seed,
+                             task=spec["task"],
+                             n_classes=spec.get("n_classes", 2),
+                             sparsity=sparsity)
+    half = spec["d"] // 2
+    return X[:, :half], X[:, half:], y, spec
+
+
+def auc(p: np.ndarray, y: np.ndarray) -> float:
+    pos, neg = p[y == 1], p[y == 0]
+    if len(pos) == 0 or len(neg) == 0:
+        return 0.5
+    return float((pos[:, None] > neg[None, :]).mean()
+                 + 0.5 * (pos[:, None] == neg[None, :]).mean())
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def emit(rows):
+    """CSV contract: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` runs reduced dataset
+lists (CI); default runs the full set (minutes on CPU).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+sys.path.insert(0, "src")
+
+BENCHES = {
+    "fig7_tree_build": "benchmarks.bench_tree_build",
+    "table3_lossless": "benchmarks.bench_lossless",
+    "fig8_modes": "benchmarks.bench_modes",
+    "fig9_mo": "benchmarks.bench_mo",
+    "cost_model": "benchmarks.bench_cost_model",
+    "kernels": "benchmarks.bench_kernels",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, mod_name in BENCHES.items():
+        if only and key not in only:
+            continue
+        print(f"# --- {key} ---", flush=True)
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main(quick=args.quick)
+        except Exception as e:        # noqa: BLE001
+            failures += 1
+            print(f"{key},0.0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Assigned-architecture registry: ``get_config(name, smoke=False)``.
+
+Each module exposes ``full_config()`` (the exact published shape) and
+``smoke_config()`` (reduced same-family config for CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "deepseek_moe_16b",
+    "llama4_maverick_400b_a17b",
+    "recurrentgemma_2b",
+    "qwen3_1_7b",
+    "stablelm_12b",
+    "command_r_35b",
+    "minitron_4b",
+    "qwen2_vl_72b",
+    "mamba2_130m",
+    "whisper_large_v3",
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def get_config(name: str, smoke: bool = False):
+    mod_name = _ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.smoke_config() if smoke else mod.full_config()

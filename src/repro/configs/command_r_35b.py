@@ -1,0 +1,25 @@
+"""command-r-35b [dense]: 40L d_model=8192 64H (GQA kv=8) d_ff=22528
+vocab=256000, no-bias [hf:CohereForAI/c4ai-command-r-v01; unverified]."""
+
+import dataclasses
+
+from ..models.common import ModelConfig
+
+# seq-parallel residual + dots-saveable remat: measured +61% roofline on
+# command-r train (EXPERIMENTS.md Perf-3); safe for dense/VLM stacks.
+_FULL = ModelConfig(
+    seq_shard=True, remat_policy="dots",
+    name="command-r-35b", family="dense",
+    n_layers=40, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=22528, vocab=256000,
+)
+
+
+def full_config() -> ModelConfig:
+    return _FULL
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        _FULL, name="command-r-smoke", n_layers=2, d_model=64, n_heads=8,
+        n_kv_heads=2, d_ff=192, vocab=256, remat=False)

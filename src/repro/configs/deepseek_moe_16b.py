@@ -1,0 +1,26 @@
+"""deepseek-moe-16b [moe]: 28L d_model=2048 16H (GQA kv=16) d_ff=1408
+vocab=102400, 2 shared + 64 routed top-6 fine-grained experts
+[arXiv:2401.06066; hf].  (The released model's layer 0 is a dense FFN; we
+keep all layers MoE for uniformity -- noted deviation.)"""
+
+import dataclasses
+
+from ..models.common import ModelConfig
+
+_FULL = ModelConfig(
+    name="deepseek-moe-16b", family="moe",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, d_ff_expert=1408, vocab=102400,
+    n_experts=64, n_shared_experts=2, top_k=6,
+)
+
+
+def full_config() -> ModelConfig:
+    return _FULL
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        _FULL, name="deepseek-moe-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=48, d_ff_expert=48, vocab=256, n_experts=8,
+        n_shared_experts=2, top_k=2, remat=False)

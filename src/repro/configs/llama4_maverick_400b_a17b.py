@@ -1,0 +1,25 @@
+"""llama4-maverick-400b-a17b [moe]: 48L d_model=5120 40H (GQA kv=8)
+d_ff=8192 vocab=202048, 128 routed experts top-1 + 1 shared, early fusion
+[hf:meta-llama/Llama-4-*; unverified]."""
+
+import dataclasses
+
+from ..models.common import ModelConfig
+
+_FULL = ModelConfig(
+    name="llama4-maverick-400b-a17b", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=8192, d_ff_expert=8192, vocab=202048,
+    n_experts=128, n_shared_experts=1, top_k=1,
+)
+
+
+def full_config() -> ModelConfig:
+    return _FULL
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        _FULL, name="llama4-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=96, d_ff_expert=96, vocab=256, n_experts=8,
+        n_shared_experts=1, top_k=1, remat=False)

@@ -1,0 +1,23 @@
+"""mamba2-130m [ssm]: 24L d_model=768 attn-free, ssm_state=128, SSD
+[arXiv:2405.21060; unverified].  Sub-quadratic: runs long_500k."""
+
+import dataclasses
+
+from ..models.common import ModelConfig
+
+_FULL = ModelConfig(
+    name="mamba2-130m", family="ssm",
+    n_layers=24, d_model=768, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab=50280, ssm_state=128, ssm_head_dim=64, ssm_expand=2,
+    ssm_chunk=64, conv_width=4,
+)
+
+
+def full_config() -> ModelConfig:
+    return _FULL
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        _FULL, name="mamba2-smoke", n_layers=2, d_model=64, vocab=256,
+        ssm_state=16, ssm_head_dim=16, ssm_chunk=8, remat=False)

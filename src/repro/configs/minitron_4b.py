@@ -1,0 +1,25 @@
+"""minitron-4b [dense]: 32L d_model=3072 24H (GQA kv=8) d_ff=9216
+vocab=256000, pruned nemotron [arXiv:2407.14679; hf]."""
+
+import dataclasses
+
+from ..models.common import ModelConfig
+
+# seq-parallel residual + dots-saveable remat: measured +61% roofline on
+# command-r train (EXPERIMENTS.md Perf-3); safe for dense/VLM stacks.
+_FULL = ModelConfig(
+    seq_shard=True, remat_policy="dots",
+    name="minitron-4b", family="dense",
+    n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8,
+    d_ff=9216, vocab=256000,
+)
+
+
+def full_config() -> ModelConfig:
+    return _FULL
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        _FULL, name="minitron-smoke", n_layers=2, d_model=48, n_heads=4,
+        n_kv_heads=2, d_ff=144, vocab=256, remat=False)

@@ -1,0 +1,29 @@
+"""qwen2-vl-72b [vlm backbone]: 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064, M-RoPE, dynamic resolution [arXiv:2409.12191; hf].
+
+The vision frontend is a STUB per the brief: the backbone consumes text
+tokens plus optional precomputed patch embeddings (``input_specs`` supplies
+them); M-RoPE degenerates to 1-D rotary on the text stream."""
+
+import dataclasses
+
+from ..models.common import ModelConfig
+
+# seq-parallel residual + dots-saveable remat: measured +61% roofline on
+# command-r train (EXPERIMENTS.md Perf-3); safe for dense/VLM stacks.
+_FULL = ModelConfig(
+    seq_shard=True, remat_policy="dots",
+    name="qwen2-vl-72b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=29568, vocab=152064, mrope=True, frontend="patch_stub",
+)
+
+
+def full_config() -> ModelConfig:
+    return _FULL
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        _FULL, name="qwen2-vl-smoke", n_layers=2, d_model=64, n_heads=8,
+        n_kv_heads=2, d_ff=192, vocab=256, remat=False)

@@ -1,0 +1,25 @@
+"""qwen3-1.7b [dense]: 28L d_model=2048 16H (GQA kv=8) d_ff=6144
+vocab=151936, qk_norm [hf:Qwen/Qwen3-*; hf]."""
+
+import dataclasses
+
+from ..models.common import ModelConfig
+
+# seq-parallel residual + dots-saveable remat: measured +61% roofline on
+# command-r train (EXPERIMENTS.md Perf-3); safe for dense/VLM stacks.
+_FULL = ModelConfig(
+    seq_shard=True, remat_policy="dots",
+    name="qwen3-1.7b", family="dense",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=8,
+    d_ff=6144, vocab=151936, qk_norm=True,
+)
+
+
+def full_config() -> ModelConfig:
+    return _FULL
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        _FULL, name="qwen3-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=256, remat=False)

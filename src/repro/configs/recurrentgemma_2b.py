@@ -1,0 +1,25 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000 -- RG-LRU + local attention, pattern 2 recurrent : 1 attn,
+window 2048 [arXiv:2402.19427; hf].  Sub-quadratic: runs long_500k."""
+
+import dataclasses
+
+from ..models.common import ModelConfig
+
+_FULL = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1,
+    d_ff=7680, vocab=256000, window=2048, lru_width=2560, conv_width=4,
+    head_dim=256,
+)
+
+
+def full_config() -> ModelConfig:
+    return _FULL
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        _FULL, name="recurrentgemma-smoke", n_layers=5, d_model=64,
+        n_heads=4, n_kv_heads=1, d_ff=128, vocab=256, window=16,
+        lru_width=64, head_dim=16, remat=False)

@@ -1,0 +1,25 @@
+"""stablelm-12b [dense]: 40L d_model=5120 32H (GQA kv=8) d_ff=13824
+vocab=100352 [hf:stabilityai/stablelm-2-12b; hf]."""
+
+import dataclasses
+
+from ..models.common import ModelConfig
+
+# seq-parallel residual + dots-saveable remat: measured +61% roofline on
+# command-r train (EXPERIMENTS.md Perf-3); safe for dense/VLM stacks.
+_FULL = ModelConfig(
+    seq_shard=True, remat_policy="dots",
+    name="stablelm-12b", family="dense",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+    d_ff=13824, vocab=100352,
+)
+
+
+def full_config() -> ModelConfig:
+    return _FULL
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        _FULL, name="stablelm-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=160, vocab=256, remat=False)

@@ -1,0 +1,24 @@
+"""whisper-large-v3 [audio]: enc-dec, 32+32L d_model=1280 20H d_ff=5120
+vocab=51866, conv frontend STUB (input_specs supplies precomputed frame
+embeddings) [arXiv:2212.04356; unverified]."""
+
+import dataclasses
+
+from ..models.common import ModelConfig
+
+_FULL = ModelConfig(
+    name="whisper-large-v3", family="audio",
+    n_layers=32, n_enc_layers=32, enc_dec=True,
+    d_model=1280, n_heads=20, n_kv_heads=20,
+    d_ff=5120, vocab=51866, frontend="audio_stub",
+)
+
+
+def full_config() -> ModelConfig:
+    return _FULL
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        _FULL, name="whisper-smoke", n_layers=2, n_enc_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, d_ff=128, vocab=256, remat=False)

@@ -1,0 +1,3 @@
+"""SecureBoost+ core: vertical federated GBDT over homomorphic encryption."""
+
+from .boosting import LocalGBDT, SBTParams, VerticalBoosting  # noqa: F401

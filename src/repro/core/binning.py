@@ -1,0 +1,62 @@
+"""Quantile binning (paper §2.3.1) with sparse-aware zero bin (§6.2).
+
+Each party bins its own features once, up front.  ``BinnedData`` keeps the
+int32 bin matrix, the thresholds (for split-point interpretation at
+inference), and -- when ``sparse=True`` -- the per-feature bin index that
+value 0.0 falls into, enabling the sparse histogram recovery trick: zero
+entries are masked out of histogram accumulation and their bin is recovered
+as node_total - sum(other bins).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..kernels.binning import bucketize, fit_quantile_thresholds
+
+
+@dataclasses.dataclass
+class BinnedData:
+    bins: np.ndarray           # (n_i, n_f) int32
+    thresholds: np.ndarray     # (n_f, n_b-1) fp32, +inf padded
+    n_bins: int
+    zero_bins: np.ndarray | None = None   # (n_f,) int32, sparse mode only
+    zero_mask: np.ndarray | None = None   # (n_i, n_f) bool: True where x==0
+
+    @property
+    def n_instances(self) -> int:
+        return self.bins.shape[0]
+
+    @property
+    def n_features(self) -> int:
+        return self.bins.shape[1]
+
+    def split_value(self, fid: int, bid: int) -> float:
+        """Threshold meaning 'go left iff bin <= bid'."""
+        thr = self.thresholds[fid]
+        if bid < len(thr) and np.isfinite(thr[bid]):
+            return float(thr[bid])
+        return float("inf")
+
+
+def bin_features(X: np.ndarray, n_bins: int = 32, sparse: bool = False,
+                 use_pallas: bool = True) -> BinnedData:
+    X = np.asarray(X, np.float32)
+    thr = fit_quantile_thresholds(X, n_bins)
+    bins = np.asarray(bucketize(X, thr, use_pallas=use_pallas))
+    zero_bins = zero_mask = None
+    if sparse:
+        zeros = np.zeros((1, X.shape[1]), np.float32)
+        zero_bins = np.asarray(bucketize(zeros, thr, use_pallas=False))[0]
+        zero_mask = X == 0.0
+    return BinnedData(bins=bins.astype(np.int32), thresholds=thr,
+                      n_bins=n_bins, zero_bins=zero_bins, zero_mask=zero_mask)
+
+
+def apply_binning(X: np.ndarray, binned: BinnedData,
+                  use_pallas: bool = True) -> np.ndarray:
+    """Bin new data with already-fitted thresholds (inference path)."""
+    return np.asarray(bucketize(np.asarray(X, np.float32), binned.thresholds,
+                                use_pallas=use_pallas)).astype(np.int32)

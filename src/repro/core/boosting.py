@@ -1,0 +1,250 @@
+"""SecureBoost+ boosting driver (paper §3-§6) and the local baseline.
+
+``VerticalBoosting`` orchestrates guest + hosts over a byte-counted channel:
+
+  objective   "binary" (one tree/round), "multiclass" (one tree per class
+              per round -- the paper's *default* multi-class setting), or
+              "mo" (SecureBoost-MO: one multi-output tree per round)
+  tree_mode   "default" | "mix" | "layered"  (paper §5.1-5.2)
+  cipher      "plain" | "affine" | "paillier"
+  packing / histogram_subtraction / compression / goss / sparse  -- ablations
+
+``LocalGBDT`` is the plaintext single-party baseline (the XGBoost role in
+the paper's tables): identical binning, gains, and leaf weights, so the
+federated model with the plain cipher is bit-identical to it (tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from . import encoding, mo_encoding
+from .binning import BinnedData, bin_features
+from .goss import goss_sample
+from .he import get_cipher
+from .histogram import CipherHistogram
+from .loss import LogLoss, SoftmaxLoss
+from .party import Channel, Stats
+from .tree import (GUEST, FederatedTree, HostRuntime, MOCodec, NoPackCodec,
+                   PackedCodec, TreeContext, grow_tree, predict_tree)
+
+
+@dataclasses.dataclass
+class SBTParams:
+    n_trees: int = 10
+    max_depth: int = 5
+    learning_rate: float = 0.3
+    lam: float = 1.0
+    n_bins: int = 32
+    min_leaf: int = 1
+    min_gain: float = 1e-6
+    objective: str = "binary"          # binary | multiclass | mo
+    n_classes: int = 2
+    cipher: str = "plain"              # plain | affine | paillier
+    key_bits: int = 1024
+    precision: int = encoding.DEFAULT_PRECISION
+    goss: bool = False
+    top_rate: float = 0.2
+    other_rate: float = 0.1
+    packing: bool = True
+    histogram_subtraction: bool = True
+    compression: bool = True
+    sparse: bool = False
+    tree_mode: str = "default"         # default | mix | layered
+    guest_depth: int = 2               # layered mode
+    host_depth: int = 3
+    trees_per_party: int = 1           # mix mode
+    use_pallas: bool = True
+    seed: int = 0
+
+
+class VerticalBoosting:
+    def __init__(self, params: SBTParams):
+        self.params = params
+        self.trees: list[FederatedTree] = []
+        self.tree_class: list[int] = []   # multiclass: class of each tree
+        self.channel = Channel()
+        self.stats = Stats()
+        self.init_score = None
+        self._loss = None
+
+    # ------------------------------------------------------------------
+    def fit(self, X_guest: np.ndarray, y: np.ndarray,
+            X_hosts: list[np.ndarray]):
+        p = self.params
+        rng = np.random.default_rng(p.seed)
+        self.guest_data = bin_features(X_guest, p.n_bins, sparse=p.sparse,
+                                       use_pallas=p.use_pallas)
+        self.host_data = [bin_features(Xh, p.n_bins, sparse=p.sparse,
+                                       use_pallas=p.use_pallas)
+                          for Xh in X_hosts]
+        y = np.asarray(y, np.float64)
+        n = len(y)
+
+        if p.objective == "binary":
+            self._loss = LogLoss()
+            self.init_score = self._loss.init_score(y)
+            score = np.full(n, self.init_score)
+        else:
+            self._loss = SoftmaxLoss(p.n_classes)
+            self.init_score = self._loss.init_score(y)
+            score = np.tile(self.init_score, (n, 1))
+
+        cipher = get_cipher(p.cipher, **self._cipher_kwargs())
+        self.cipher = cipher
+
+        n_parties = 1 + len(X_hosts)
+        for t in range(p.n_trees):
+            t0 = time.perf_counter()
+            if p.objective == "multiclass":
+                for c in range(p.n_classes):
+                    g, h = self._loss.grad_hess(y, score)
+                    tree = self._grow(cipher, g[:, c], h[:, c], t, rng,
+                                      mix_party=self._mix_party(t, n_parties))
+                    self.trees.append(tree)
+                    self.tree_class.append(c)
+                    self._apply(score, tree, cls=c)
+            else:
+                g, h = self._loss.grad_hess(y, score)
+                tree = self._grow(cipher, g, h, t, rng,
+                                  mix_party=self._mix_party(t, n_parties))
+                self.trees.append(tree)
+                self.tree_class.append(-1)
+                self._apply(score, tree)
+            self.stats.tree_seconds.append(time.perf_counter() - t0)
+        self.train_score_ = score
+        return self
+
+    def _cipher_kwargs(self):
+        p = self.params
+        if p.cipher == "plain":
+            return {"bits": max(p.key_bits, 256)}
+        if p.cipher == "affine":
+            return {"key_bits": p.key_bits, "seed": p.seed}
+        return {"key_bits": p.key_bits, "seed": p.seed}
+
+    def _mix_party(self, t: int, n_parties: int):
+        if self.params.tree_mode != "mix":
+            return None
+        cycle = t // max(1, self.params.trees_per_party)
+        return cycle % n_parties        # 0 = guest, 1.. = host id + 1
+
+    # ------------------------------------------------------------------
+    def _grow(self, cipher, g, h, t: int, rng, mix_party=None) -> FederatedTree:
+        p = self.params
+        n = g.shape[0]
+        if p.goss:
+            # dedicated per-tree stream: host split-info shuffling must not
+            # perturb GOSS sampling, or federated != local under GOSS
+            goss_rng = np.random.default_rng((p.seed, t, 17))
+            sel, w = goss_sample(g, p.top_rate, p.other_rate, goss_rng)
+            g = g.copy(); h = h.copy()
+            if g.ndim == 1:
+                g[sel] *= w; h[sel] *= w
+            else:
+                g[sel] *= w[:, None]; h[sel] *= w[:, None]
+        else:
+            sel = np.arange(n)
+
+        codec = self._make_codec(cipher, g[sel], h[sel])
+        engines = [CipherHistogram(cipher, p.n_bins, sparse=p.sparse,
+                                   use_pallas=p.use_pallas)
+                   for _ in self.host_data]
+        hosts = [HostRuntime(hid=i, data=d, engine=e)
+                 for i, (d, e) in enumerate(zip(self.host_data, engines))]
+        ctx = TreeContext(params=p, cipher=cipher, codec=codec,
+                          channel=self.channel, stats=self.stats,
+                          guest_data=self.guest_data, g=g, h=h, sel_rows=sel,
+                          hosts=hosts, rng=rng)
+        schedule = self._schedule(mix_party, len(hosts))
+        return grow_tree(ctx, schedule)
+
+    def _schedule(self, mix_party, n_hosts: int):
+        p = self.params
+        if p.tree_mode == "mix" and mix_party is not None:
+            if mix_party == 0:
+                return lambda d: (True, [])
+            return lambda d: (False, [mix_party - 1])
+        if p.tree_mode == "layered":
+            return lambda d: ((False, list(range(n_hosts)))
+                              if d < p.host_depth else (True, []))
+        return None
+
+    def _make_codec(self, cipher, g, h):
+        p = self.params
+        if p.objective == "mo":
+            plan = mo_encoding.plan_mo_packing(g, h, len(g),
+                                               cipher.plaintext_bits,
+                                               p.precision)
+            return MOCodec(plan)
+        if p.packing:
+            plan = encoding.plan_packing(g, h, len(g), cipher.plaintext_bits,
+                                         p.precision)
+            return PackedCodec(plan)
+        return NoPackCodec.plan(g, p.precision)
+
+    # ------------------------------------------------------------------
+    def _apply(self, score, tree: FederatedTree, cls: int = -1):
+        for nd in tree.nodes:
+            if nd.left == -1 and nd.weight is not None:
+                rows = tree.leaf_rows[nd.nid]
+                if cls >= 0:
+                    score[rows, cls] += nd.weight
+                else:
+                    score[rows] += nd.weight
+
+    def predict_score(self, X_guest, X_hosts) -> np.ndarray:
+        from .binning import apply_binning
+        p = self.params
+        gb = apply_binning(X_guest, self.guest_data, p.use_pallas)
+        hb = [apply_binning(X, d, p.use_pallas)
+              for X, d in zip(X_hosts, self.host_data)]
+        n = gb.shape[0]
+        if p.objective == "binary":
+            score = np.full(n, self.init_score)
+        else:
+            score = np.tile(self.init_score, (n, 1))
+        for tree, cls in zip(self.trees, self.tree_class):
+            out = predict_tree(tree, gb, hb)
+            if cls >= 0:
+                score[:, cls] += out
+            else:
+                score += out
+        return score
+
+    def predict_proba(self, X_guest, X_hosts) -> np.ndarray:
+        from .loss import sigmoid, softmax
+        s = self.predict_score(X_guest, X_hosts)
+        return sigmoid(s) if self.params.objective == "binary" else softmax(s)
+
+
+# ---------------------------------------------------------------------------
+# the local plaintext baseline ("XGBoost" role in the paper's tables)
+# ---------------------------------------------------------------------------
+
+class LocalGBDT(VerticalBoosting):
+    """Single-party plaintext GBDT with identical binning/gain/weights.
+
+    Implemented as federated training with zero hosts and the plain cipher:
+    the protocol collapses to local histogram split finding, which makes the
+    parity claim ('lossless', paper Table 3) checkable in one code path.
+    """
+
+    def __init__(self, params: SBTParams):
+        params = dataclasses.replace(params, cipher="plain", packing=True,
+                                     compression=False, tree_mode="default")
+        super().__init__(params)
+
+    def fit(self, X: np.ndarray, y: np.ndarray):   # type: ignore[override]
+        return super().fit(X, y, [])
+
+    def predict_score(self, X) -> np.ndarray:      # type: ignore[override]
+        return super().predict_score(X, [])
+
+    def predict_proba(self, X) -> np.ndarray:      # type: ignore[override]
+        from .loss import sigmoid, softmax
+        s = self.predict_score(X)
+        return sigmoid(s) if self.params.objective == "binary" else softmax(s)

@@ -1,0 +1,88 @@
+"""Cipher compressing (paper §4.4, Algorithm 4).
+
+Hosts pack up to ``eta_s = floor(iota / b_gh)`` split-info ciphertexts into
+one by repeated homomorphic shift-and-add: ``e <- e * 2**b_gh + c``.  The
+guest then performs a single decryption per package and unpacks ``eta_s``
+histogram statistics from the plaintext, dividing decryption count and
+transfer bytes by ``eta_s`` (eqs 15-16).
+
+Works with any cipher suite (limb backends vectorize over whole batches;
+the Paillier oracle loops).  Slot order: the FIRST ciphertext in a group is
+most significant (Algorithm 4 shifts the accumulator before each add).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def compress_batch(cipher, cts, eta_s: int, b_slot: int):
+    """Compress a batch of N ciphertexts into ceil(N / eta_s) packages.
+
+    cts: for limb backends a (N, Ln) array; for pyobj an object array (N,).
+    Returns (packages, group_sizes) where group_sizes[i] is how many source
+    ciphertexts package i holds (the last group may be short).
+    """
+    if eta_s < 1:
+        raise ValueError("eta_s must be >= 1")
+    if cipher.backend == "limb":
+        import jax.numpy as jnp
+        cts = jnp.asarray(cts)
+    n = cts.shape[0]
+    n_groups = -(-n // eta_s)
+    sizes = np.full(n_groups, eta_s, dtype=np.int64)
+    if n % eta_s:
+        sizes[-1] = n % eta_s
+
+    if cipher.backend == "limb":
+        import jax.numpy as jnp
+        pad = n_groups * eta_s - n
+        # pad with encrypted zeros at the END of the last group; they occupy
+        # the LEAST significant slots, so real stats keep their positions iff
+        # we also tell the guest the true group size (we do).  To keep slot
+        # arithmetic simple we instead pad and report the padded size layout:
+        # the guest unpacks eta_s slots and discards the trailing pad.
+        if pad:
+            # E(0) = 0 for both limb schemes; match the incoming width
+            # (canonical histograms may carry headroom limbs).
+            zero_ct = jnp.zeros((pad, cts.shape[-1]), cts.dtype)
+            cts = jnp.concatenate([cts, zero_ct], axis=0)
+        groups = cts.reshape(n_groups, eta_s, -1)
+        acc = groups[:, 0, :]
+        for s in range(1, eta_s):
+            acc = cipher.mul_pow2(acc, b_slot)
+            acc = cipher.add(acc, groups[:, s, :])
+        return acc, sizes
+    else:  # pyobj (Paillier oracle)
+        cts = np.asarray(cts, dtype=object)
+        packages = np.empty(n_groups, dtype=object)
+        for gi in range(n_groups):
+            grp = cts[gi * eta_s: gi * eta_s + int(sizes[gi])]
+            acc = grp[0]
+            for c in grp[1:]:
+                acc = cipher.mul_pow2(np.asarray([acc], dtype=object), b_slot)[0]
+                acc = cipher.add(np.asarray([acc], dtype=object),
+                                 np.asarray([c], dtype=object))[0]
+            packages[gi] = acc
+        return packages, sizes
+
+
+def decompress_ints(plain_ints, sizes, eta_s: int, b_slot: int,
+                    padded: bool) -> list:
+    """Unpack decrypted package ints back into per-split-info ints.
+
+    ``padded`` says whether short groups were zero-padded to eta_s slots
+    (limb backends) or built with their true size (pyobj backend).
+    """
+    out = []
+    mask = (1 << b_slot) - 1
+    for x, size in zip(plain_ints, np.asarray(sizes, dtype=np.int64)):
+        x = int(x)
+        slots_here = eta_s if padded else int(size)
+        vals = []
+        for _ in range(slots_here):
+            vals.append(x & mask)
+            x >>= b_slot
+        vals.reverse()                  # first ciphertext was most significant
+        out.extend(vals[: int(size)])
+    return out

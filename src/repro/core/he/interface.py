@@ -1,0 +1,37 @@
+"""Cipher suite interface for SecureBoost+.
+
+Two backend families implement the same protocol surface:
+
+* ``limb`` backends (:mod:`plain`, :mod:`affine`): a ciphertext batch is a
+  jnp int32 array ``(..., L)`` of radix-2**8 limbs.  Homomorphic addition is
+  limb addition, so histogram building can accumulate *lazily* (no carries,
+  no modular reduction) in a widened accumulator and reduce once per bin.
+  These are the JAX/TPU execution paths.
+
+* ``pyobj`` backend (:mod:`paillier`): ciphertexts are numpy object arrays of
+  python ints.  Real Paillier; used as the correctness/security oracle and
+  for the paper's Paillier cost column.  Not JAX-traceable by design.
+
+All suites expose:
+
+  plaintext_bits   usable plaintext width iota (packing plans against this)
+  backend          "limb" | "pyobj"
+  encrypt / decrypt_to_ints
+  add (canonical), mul_pow2 (homomorphic multiply by 2**k - cipher compress)
+  and for limb backends: lazy histogram hooks (hist_width / reduce).
+"""
+
+from __future__ import annotations
+
+
+def get_cipher(name: str, **kwargs):
+    if name == "plain":
+        from .plain import PlainCipher
+        return PlainCipher(**kwargs)
+    if name == "affine":
+        from .affine import AffineCipher
+        return AffineCipher.keygen(**kwargs)
+    if name == "paillier":
+        from .paillier import PaillierCipher
+        return PaillierCipher.keygen(**kwargs)
+    raise ValueError(f"unknown cipher suite: {name!r}")

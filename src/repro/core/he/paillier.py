@@ -1,0 +1,130 @@
+"""Real Paillier cryptosystem over python ints (correctness/security oracle).
+
+Reproduces the paper's Paillier column functionally: additively homomorphic,
+semantically secure, with homomorphic add = modmul in Z_{n^2} and scalar
+multiply = modexp.  This backend is deliberately NOT JAX-traceable -- per
+DESIGN.md §3, Paillier's modexp-per-op does not map onto the MXU; it exists
+to validate the protocol bit-for-bit and to measure the Paillier cost column
+of the paper's experiments.
+
+Ciphertext batches are numpy object arrays of python ints.
+"""
+
+from __future__ import annotations
+
+import math
+import random as _random
+
+import numpy as np
+
+_SMALL_PRIMES = [3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59,
+                 61, 67, 71, 73, 79, 83, 89, 97]
+
+
+def _is_probable_prime(n: int, rng: _random.Random, rounds: int = 24) -> bool:
+    if n < 2:
+        return False
+    for p in _SMALL_PRIMES:
+        if n % p == 0:
+            return n == p
+    d, s = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        s += 1
+    for _ in range(rounds):
+        a = rng.randrange(2, n - 1)
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(s - 1):
+            x = (x * x) % n
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+def _random_prime(bits: int, rng: _random.Random) -> int:
+    while True:
+        p = rng.getrandbits(bits) | (1 << (bits - 1)) | 1
+        if _is_probable_prime(p, rng):
+            return p
+
+
+class PaillierCipher:
+    backend = "pyobj"
+    name = "paillier"
+
+    def __init__(self, n: int, p: int, q: int, seed: int | None = None):
+        self.n = n
+        self.n2 = n * n
+        self.g = n + 1
+        self._lam = (p - 1) * (q - 1) // math.gcd(p - 1, q - 1)
+        self._mu = pow(self._l_func(pow(self.g, self._lam, self.n2)), -1, n)
+        self.plaintext_bits = n.bit_length() - 1
+        self._rng = _random.Random(seed)
+
+    @classmethod
+    def keygen(cls, key_bits: int = 512, seed: int | None = None) -> "PaillierCipher":
+        rng = _random.Random(seed)
+        while True:
+            p = _random_prime(key_bits // 2, rng)
+            q = _random_prime(key_bits // 2, rng)
+            if p != q and math.gcd(p * q, (p - 1) * (q - 1)) == 1:
+                return cls(p * q, p, q, seed=seed)
+
+    def _l_func(self, x: int) -> int:
+        return (x - 1) // self.n
+
+    # -- guest ---------------------------------------------------------
+    def encrypt_ints(self, xs) -> np.ndarray:
+        out = np.empty(len(list(xs)) if not hasattr(xs, "__len__") else len(xs),
+                       dtype=object)
+        for i, m in enumerate(xs):
+            if not 0 <= m < self.n:
+                raise ValueError("plaintext out of range")
+            r = self._rng.randrange(1, self.n)
+            while math.gcd(r, self.n) != 1:
+                r = self._rng.randrange(1, self.n)
+            out[i] = (pow(self.g, m, self.n2) * pow(r, self.n, self.n2)) % self.n2
+        return out
+
+    def decrypt_to_ints(self, ct) -> list:
+        return [
+            (self._l_func(pow(int(c), self._lam, self.n2)) * self._mu) % self.n
+            for c in np.asarray(ct, dtype=object).reshape(-1)
+        ]
+
+    # -- homomorphic ops ------------------------------------------------
+    def add(self, a, b):
+        a = np.asarray(a, dtype=object)
+        b = np.asarray(b, dtype=object)
+        fa, fb = np.broadcast_arrays(a, b)
+        out = np.empty(fa.shape, dtype=object)
+        for idx in np.ndindex(fa.shape):
+            out[idx] = (int(fa[idx]) * int(fb[idx])) % self.n2
+        return out
+
+    def mul_pow2(self, ct, k: int):
+        e = pow(2, k)
+        ct = np.asarray(ct, dtype=object)
+        out = np.empty(ct.shape, dtype=object)
+        for idx in np.ndindex(ct.shape):
+            out[idx] = pow(int(ct[idx]), e, self.n2)
+        return out
+
+    def sub(self, a, b):
+        """Homomorphic a - b: multiply by b^(n-1) (scalar -1 mod n)."""
+        b = np.asarray(b, dtype=object)
+        neg = np.empty(b.shape, dtype=object)
+        for idx in np.ndindex(b.shape):
+            neg[idx] = pow(int(b[idx]), self.n - 1, self.n2)
+        return self.add(a, neg)
+
+    def zero(self, shape) -> np.ndarray:
+        out = np.empty(tuple(shape), dtype=object)
+        enc_zero = int(self.encrypt_ints([0])[0])
+        for idx in np.ndindex(out.shape):
+            out[idx] = enc_zero
+        return out

@@ -1,0 +1,75 @@
+"""Identity 'cipher' over limb vectors (debug / lossless-parity backend).
+
+Same dataflow and bit layout as the affine scheme but encryption is the
+identity.  Arithmetic is mod 2**(8*L).  Used to prove the federated protocol
+is bit-identical to local plaintext training, and as the fastest JAX path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import limbs
+
+
+class PlainCipher:
+    backend = "limb"
+    name = "plain"
+
+    def __init__(self, bits: int = 512, hist_headroom_limbs: int = 3):
+        self.Ln = limbs.num_limbs_for_bits(bits)
+        self.plaintext_bits = self.Ln * limbs.RADIX_BITS - 1
+        self.hist_headroom_limbs = hist_headroom_limbs
+
+    # -- guest ---------------------------------------------------------
+    def encrypt_ints(self, xs) -> jnp.ndarray:
+        return jnp.asarray(limbs.from_pyints(list(xs), self.Ln))
+
+    def encrypt_limbs(self, x):
+        L = x.shape[-1]
+        if L < self.Ln:
+            x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, self.Ln - L)])
+        return x[..., : self.Ln]
+
+    def decrypt_to_ints(self, ct) -> list:
+        return limbs.to_pyints(np.asarray(ct))
+
+    def decrypt_limbs(self, ct):
+        return ct
+
+    # -- homomorphic ops ------------------------------------------------
+    @staticmethod
+    def _align(a, b):
+        La, Lb = a.shape[-1], b.shape[-1]
+        if La < Lb:
+            a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, Lb - La)])
+        elif Lb < La:
+            b = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, La - Lb)])
+        return a, b
+
+    def add(self, a, b):
+        return limbs.add(*self._align(a, b))
+
+    def sub(self, a, b):
+        """Homomorphic a - b (valid when the underlying plaintexts satisfy
+        a >= b, which histogram subtraction guarantees)."""
+        return limbs.sub(*self._align(a, b))
+
+    def mul_pow2(self, ct, k: int):
+        return limbs.mask_bits(
+            limbs.shift_left_bits(ct, k, self.Ln + self.hist_headroom_limbs),
+            self.Ln * limbs.RADIX_BITS + self.hist_headroom_limbs * limbs.RADIX_BITS,
+        )
+
+    # -- lazy histogram hooks -------------------------------------------
+    @property
+    def hist_width(self) -> int:
+        return self.Ln + self.hist_headroom_limbs
+
+    def reduce(self, acc):
+        """Canonicalize a lazy accumulator (values stay below 2**(8*width))."""
+        return limbs.carry_fix(acc)
+
+    def zero(self, shape) -> jnp.ndarray:
+        return jnp.zeros(tuple(shape) + (self.Ln,), dtype=jnp.int32)

@@ -1,0 +1,187 @@
+"""Node-level histogram engines (paper Algorithms 1 & 5).
+
+Two engines share one split-finding path:
+
+* :class:`CipherHistogram` -- host side.  Accumulates packed-GH ciphertexts
+  into (feature, bin) cells via the Pallas one-hot-matmul kernel (lazy limb
+  sums), then canonicalizes once per bin (``cipher.reduce``: carry-fix +
+  Barrett).  Supports ciphertext histogram subtraction (§4.3), the sparse
+  zero-bin recovery trick (§6.2), and bin cumsum in the ciphertext domain.
+  Ciphertext batches carry a slot axis (SBT-MO packs ``n_k`` ciphertexts per
+  instance): per-instance cts are (n, n_slots, L) limbs (or (n, n_slots)
+  object ints for the Paillier oracle); histograms are (n_f, n_b, n_slots, L)
+  (resp. (n_f, n_b, n_slots)).  Binary tasks use n_slots = 1.
+
+* :class:`PlainHistogram` -- guest side (and the local-XGBoost baseline).
+  Same shapes in plaintext float64 via ``np.add.at``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..kernels.histogram import ciphertext_histogram, count_histogram
+from .binning import BinnedData
+
+
+class PlainHistogram:
+    """Plaintext (g, h, count) histograms: (n_f, n_b) float64 / int64."""
+
+    def __init__(self, n_bins: int, sparse: bool = False):
+        self.n_bins = n_bins
+        self.sparse = sparse
+
+    def node_histogram(self, data: BinnedData, g: np.ndarray, h: np.ndarray,
+                       rows: np.ndarray):
+        bins = data.bins[rows]                        # (r, n_f)
+        n_f = bins.shape[1]
+        out_dim = np.asarray(g).shape[1:]             # () scalar or (l,) MO
+        G = np.zeros((n_f, self.n_bins) + out_dim)
+        H = np.zeros((n_f, self.n_bins) + out_dim)
+        C = np.zeros((n_f, self.n_bins), np.int64)
+        gr, hr = g[rows], h[rows]
+        if self.sparse and data.zero_mask is not None:
+            zmask = data.zero_mask[rows]
+            for f in range(n_f):
+                keep = ~zmask[:, f]
+                np.add.at(G[f], bins[keep, f], gr[keep])
+                np.add.at(H[f], bins[keep, f], hr[keep])
+                np.add.at(C[f], bins[keep, f], 1)
+                zb = int(data.zero_bins[f])
+                G[f, zb] += gr.sum(axis=0) - G[f].sum(axis=0)
+                H[f, zb] += hr.sum(axis=0) - H[f].sum(axis=0)
+                C[f, zb] += len(rows) - C[f].sum()
+        else:
+            for f in range(n_f):
+                np.add.at(G[f], bins[:, f], gr)
+                np.add.at(H[f], bins[:, f], hr)
+                np.add.at(C[f], bins[:, f], 1)
+        return (G, H, C)
+
+    @staticmethod
+    def subtract(parent, child):
+        return tuple(p - c for p, c in zip(parent, child))
+
+    @staticmethod
+    def cumsum(hist):
+        return tuple(np.cumsum(x, axis=1) for x in hist)
+
+
+class CipherHistogram:
+    """Ciphertext histograms over limb arrays (or Paillier object arrays)."""
+
+    def __init__(self, cipher, n_bins: int, sparse: bool = False,
+                 use_pallas: bool = True):
+        self.cipher = cipher
+        self.n_bins = n_bins
+        self.sparse = sparse
+        self.use_pallas = use_pallas
+
+    # -- core accumulation ------------------------------------------------
+    def node_histogram(self, data: BinnedData, cts, rows: np.ndarray):
+        """cts: (n, n_slots, L) limbs or (n, n_slots) object ints.
+        Returns (hist, counts)."""
+        bins = data.bins[rows].astype(np.int32)
+        if self.sparse and data.zero_mask is not None:
+            bins = np.where(data.zero_mask[rows], -1, bins)
+        counts = np.asarray(count_histogram(bins, self.n_bins)).astype(np.int64)
+
+        if self.cipher.backend == "limb":
+            hist = self._limb_hist(bins, cts, rows)
+        else:
+            hist = self._pyobj_hist(bins, cts, rows)
+
+        if self.sparse and data.zero_mask is not None:
+            hist = self._sparse_fix(data, hist, cts, rows)
+            zb = np.asarray(data.zero_bins, np.int64)
+            for f in range(counts.shape[0]):
+                counts[f, zb[f]] += len(rows) - counts[f].sum()
+        return hist, counts
+
+    def _limb_hist(self, bins, cts, rows):
+        import jax.numpy as jnp
+        sel = jnp.asarray(cts)[jnp.asarray(np.asarray(rows, np.int64))]
+        n, n_slots, per = sel.shape
+        width = self.cipher.hist_width
+        padded = jnp.pad(sel, ((0, 0), (0, 0), (0, width - per)))
+        lazy = ciphertext_histogram(bins, padded.reshape(n, n_slots * width),
+                                    self.n_bins, use_pallas=self.use_pallas)
+        lazy = lazy.reshape(lazy.shape[0], self.n_bins, n_slots, width)
+        return self.cipher.reduce(lazy)
+
+    def _pyobj_hist(self, bins, cts, rows):
+        cts = np.asarray(cts, dtype=object)[np.asarray(rows, np.int64)]
+        n_f = bins.shape[1]
+        n_slots = cts.shape[1]
+        hist = self.cipher.zero((n_f, self.n_bins, n_slots))
+        for i in range(bins.shape[0]):
+            for f in range(n_f):
+                b = bins[i, f]
+                if b < 0:
+                    continue
+                hist[f, b] = self.cipher.add(hist[f, b], cts[i])
+        return hist
+
+    # -- paper tricks -------------------------------------------------------
+    def _sparse_fix(self, data: BinnedData, hist, cts, rows):
+        """zero-bin += node_total - sum(all accumulated bins)  (§6.2)."""
+        node_total = self.node_total(cts, rows)            # (n_slots, ...)
+        zb = np.asarray(data.zero_bins, np.int64)
+        if self.cipher.backend == "limb":
+            import jax.numpy as jnp
+            hist = jnp.asarray(hist)
+            width = self.cipher.hist_width
+            wide = jnp.pad(hist, ((0, 0), (0, 0), (0, 0),
+                                  (0, width - hist.shape[-1])))
+            nz = self.cipher.reduce(wide.sum(axis=1))      # (n_f, n_slots, L)
+            rec = self.cipher.sub(
+                jnp.broadcast_to(node_total[None], nz.shape), nz)
+            for f in range(hist.shape[0]):
+                hist = hist.at[f, zb[f]].set(
+                    self.cipher.add(hist[f, zb[f]], rec[f]))
+            return hist
+        n_f = hist.shape[0]
+        for f in range(n_f):
+            acc = hist[f, 0]
+            for b in range(1, self.n_bins):
+                acc = self.cipher.add(acc, hist[f, b])
+            rec = self.cipher.sub(node_total, acc)
+            hist[f, zb[f]] = self.cipher.add(hist[f, zb[f]], rec)
+        return hist
+
+    def node_total(self, cts, rows):
+        """Sum of all instance ciphertexts in the node: (n_slots, ...)."""
+        if self.cipher.backend == "limb":
+            import jax.numpy as jnp
+            sel = jnp.asarray(cts)[jnp.asarray(np.asarray(rows, np.int64))]
+            wide = jnp.pad(sel, ((0, 0), (0, 0),
+                                 (0, self.cipher.hist_width - sel.shape[-1])))
+            return self.cipher.reduce(wide.sum(axis=0))
+        sel = np.asarray(cts, dtype=object)[np.asarray(rows, np.int64)]
+        tot = self.cipher.zero((sel.shape[1],))
+        for i in range(sel.shape[0]):
+            tot = self.cipher.add(tot, sel[i])
+        return tot
+
+    def subtract(self, parent, child):
+        """Ciphertext histogram subtraction: sibling = parent - child (§4.3)."""
+        ph, pc = parent
+        ch, cc = child
+        return self.cipher.sub(ph, ch), pc - cc
+
+    def cumsum(self, hist):
+        """Prefix-sum over the bin axis in the ciphertext domain."""
+        if self.cipher.backend == "limb":
+            import jax.numpy as jnp
+            width = self.cipher.hist_width
+            wide = jnp.pad(jnp.asarray(hist),
+                           ((0, 0), (0, 0), (0, 0),
+                            (0, width - hist.shape[-1])))
+            return self.cipher.reduce(jnp.cumsum(wide, axis=1))
+        out = np.empty(hist.shape, dtype=object)
+        for f in range(hist.shape[0]):
+            acc = None
+            for b in range(hist.shape[1]):
+                acc = hist[f, b] if acc is None else self.cipher.add(acc, hist[f, b])
+                out[f, b] = acc
+        return out

@@ -1,0 +1,62 @@
+"""Party roles and the communication channel (simulation with accounting).
+
+The protocol runs in-process, but every cross-party transfer goes through
+:class:`Channel.send`, which records (src, dst, tag, wire_bytes, n_msgs).
+Wire bytes are counted at *protocol* fidelity, not storage fidelity: a
+ciphertext costs ceil(modulus_bits/8) bytes (2x for Paillier, which lives in
+Z_{n^2}), regardless of our int32-per-limb in-memory layout.  The ledger is
+what the cost-model benchmark (paper eqs 10/16) reads.
+
+HE-operation counters (encrypt / decrypt / hom-add / hom-scalar-mul) live in
+:class:`Stats` and are incremented at call sites with exact analytic counts,
+mirroring the paper's cost accounting (eqs 8-9 / 14-15).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+
+def ct_wire_bytes(cipher) -> int:
+    """Bytes one ciphertext occupies on the wire."""
+    if cipher.backend == "limb":
+        return cipher.Ln            # radix-2**8: one byte per limb
+    return 2 * ((cipher.n.bit_length() + 7) // 8)   # Paillier: Z_{n^2}
+
+
+@dataclasses.dataclass
+class Stats:
+    n_encrypt: int = 0
+    n_decrypt: int = 0
+    n_hom_add: int = 0          # ciphertext-ciphertext additions
+    n_hom_scalar: int = 0       # scalar/shift multiplications (compress)
+    n_split_infos: int = 0      # split-info stats produced (pre-compress)
+    n_packages: int = 0         # ciphertexts actually decrypted/transferred
+    tree_seconds: list = dataclasses.field(default_factory=list)
+
+    def as_dict(self):
+        d = dataclasses.asdict(self)
+        d["tree_seconds"] = list(self.tree_seconds)
+        return d
+
+
+class Channel:
+    def __init__(self):
+        self.ledger = []
+        self.totals = collections.Counter()
+        self.msgs = collections.Counter()
+
+    def send(self, src: str, dst: str, tag: str, payload, nbytes: int):
+        self.ledger.append((src, dst, tag, int(nbytes)))
+        self.totals[tag] += int(nbytes)
+        self.msgs[tag] += 1
+        return payload
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.totals.values())
+
+    def summary(self) -> dict:
+        return {tag: {"bytes": self.totals[tag], "msgs": self.msgs[tag]}
+                for tag in sorted(self.totals)}

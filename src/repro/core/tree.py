@@ -1,0 +1,490 @@
+"""Layer-wise federated decision-tree growth (paper §2.3, Algorithms 1-6).
+
+One function, :func:`grow_tree`, implements the whole node-splitting
+protocol with every optimization toggleable (so the legacy SecureBoost
+baseline and every ablation in the paper's figures run through the same
+code):
+
+  * GH packing on/off        (packed single ciphertext vs separate [[g]],[[h]])
+  * histogram subtraction    (compute smaller child, sibling = parent - child)
+  * cipher compressing       (eta_s split-infos per decrypted package)
+  * sparse-aware histograms  (zero-bin recovery)
+  * MO trees                 (vector g/h, multi-class packing)
+  * mix / layered modes      (via the ``feature_parties`` schedule callback)
+
+Party boundaries are explicit: everything that crosses guest<->host goes
+through ``ctx.channel.send`` with wire-fidelity byte counts, and HE work is
+tallied in ``ctx.stats``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from . import compress as compress_mod
+from . import encoding, mo_encoding
+from .binning import BinnedData
+from .he import limbs
+from .histogram import CipherHistogram, PlainHistogram
+from .party import Channel, Stats, ct_wire_bytes
+from .split import (BestSplit, SplitCandidates, candidates_from_cumsum,
+                    decode_sid, find_best_split, leaf_weight)
+
+GUEST = -1
+LEAF = -2
+
+
+# ---------------------------------------------------------------------------
+# GH codecs: how (g, h) become plaintexts and come back as sums
+# ---------------------------------------------------------------------------
+
+class PackedCodec:
+    """SecureBoost+ default: one packed plaintext per instance (Alg 3/6)."""
+
+    def __init__(self, plan: encoding.PackingPlan):
+        self.plan = plan
+        self.n_slots = 1
+        self.compressible = True
+        self.b_slot = plan.b_gh
+        self.eta_s = plan.compress_capacity
+
+    def encode_plain(self, g, h) -> np.ndarray:
+        return encoding.pack_gh(g, h, self.plan)[:, None, :]   # (n, 1, Lp)
+
+    def decode(self, ints: np.ndarray, counts: np.ndarray):
+        g_l = np.empty(len(counts)); h_l = np.empty(len(counts))
+        for i, (row, c) in enumerate(zip(ints, counts)):
+            g_l[i], h_l[i] = encoding.unpack_gh_int(int(row[0]), self.plan, int(c))
+        return g_l, h_l
+
+
+class NoPackCodec:
+    """Legacy SecureBoost: separate [[g]] and [[h]] ciphertexts."""
+
+    def __init__(self, r: int, g_off: float):
+        self.r = r
+        self.g_off = g_off
+        self.n_slots = 2
+        self.compressible = False
+
+    @classmethod
+    def plan(cls, g, r: int = encoding.DEFAULT_PRECISION):
+        return cls(r=r, g_off=float(max(0.0, -float(np.min(g))))
+                   if np.size(g) else 0.0)
+
+    def encode_plain(self, g, h) -> np.ndarray:
+        g_int = encoding.encode_int64(np.asarray(g, np.float64) + self.g_off, self.r)
+        h_int = encoding.encode_int64(h, self.r)
+        L = limbs.num_limbs_for_bits(70)
+        out = np.stack([encoding._int64_to_limbs(g_int, L),
+                        encoding._int64_to_limbs(h_int, L)], axis=1)
+        return out                                              # (n, 2, L)
+
+    def decode(self, ints: np.ndarray, counts: np.ndarray):
+        scale = float(1 << self.r)
+        g_l = np.asarray([int(r[0]) for r in ints], np.float64) / scale \
+            - self.g_off * np.asarray(counts, np.float64)
+        h_l = np.asarray([int(r[1]) for r in ints], np.float64) / scale
+        return g_l, h_l
+
+
+class MOCodec:
+    """SecureBoost-MO: vector g/h packed across classes (Alg 7/8)."""
+
+    def __init__(self, plan: mo_encoding.MOPackingPlan):
+        self.plan = plan
+        self.n_slots = plan.n_k
+        self.compressible = False    # paper §7.3.2: compress disabled for MO
+
+    def encode_plain(self, G, H) -> np.ndarray:
+        return mo_encoding.pack_gh_mo(G, H, self.plan)          # (n, n_k, Lp)
+
+    def decode(self, ints: np.ndarray, counts: np.ndarray):
+        l = self.plan.n_classes
+        g_l = np.empty((len(counts), l)); h_l = np.empty((len(counts), l))
+        for i, (row, c) in enumerate(zip(ints, counts)):
+            g_l[i], h_l[i] = mo_encoding.unpack_gh_mo_ints(
+                [int(x) for x in row], self.plan, int(c))
+        return g_l, h_l
+
+
+# ---------------------------------------------------------------------------
+# runtime state
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Node:
+    nid: int
+    depth: int
+    party: int = LEAF            # GUEST / host id / LEAF
+    fid: int = -1                # guest splits only (host fids stay private)
+    bid: int = -1
+    sid: int = -1                # host splits: shuffled id (host resolves)
+    left: int = -1
+    right: int = -1
+    weight: np.ndarray | float | None = None
+    gain: float = 0.0
+    n_rows: int = 0
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.party == LEAF
+
+
+@dataclasses.dataclass
+class FederatedTree:
+    nodes: list
+    host_tables: list            # per host: {nid: (fid, bid)} -- host-private
+
+
+@dataclasses.dataclass
+class HostRuntime:
+    hid: int
+    data: BinnedData
+    engine: CipherHistogram
+    cts: object = None           # (n_sel, n_slots, L) limbs / (n_sel, n_slots) obj
+    view: BinnedData | None = None   # rows restricted to the GOSS selection,
+                                     # aligned with cts (host derives it from
+                                     # the synced selected-id list)
+    hist_cache: dict = dataclasses.field(default_factory=dict)
+    perms: dict = dataclasses.field(default_factory=dict)
+    table: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class TreeContext:
+    params: object               # SBTParams (see boosting.py)
+    cipher: object
+    codec: object
+    channel: Channel
+    stats: Stats
+    guest_data: BinnedData
+    g: np.ndarray                # (n,) or (n, l), GOSS-weighted
+    h: np.ndarray
+    sel_rows: np.ndarray         # GOSS-selected row ids (into full set)
+    hosts: list = dataclasses.field(default_factory=list)
+    rng: np.random.Generator = dataclasses.field(
+        default_factory=lambda: np.random.default_rng(0))
+
+
+def _encrypt_all(ctx: TreeContext) -> None:
+    """Guest packs + encrypts g/h of selected rows, broadcasts to hosts."""
+    p = ctx.params
+    plain = ctx.codec.encode_plain(ctx.g[ctx.sel_rows], ctx.h[ctx.sel_rows])
+    n, s, Lp = plain.shape
+    if ctx.cipher.backend == "limb":
+        import jax.numpy as jnp
+        from ..kernels.modmul import encrypt_batch
+        if ctx.cipher.name == "affine" and p.use_pallas:
+            flat = encrypt_batch(ctx.cipher, plain.reshape(n * s, Lp))
+        else:
+            import jax.numpy as jnp
+            flat = ctx.cipher.encrypt_limbs(jnp.asarray(plain.reshape(n * s, Lp)))
+        cts = flat.reshape(n, s, -1)
+    else:
+        ints = limbs.to_pyints(plain.reshape(n * s, Lp))
+        cts = ctx.cipher.encrypt_ints(ints).reshape(n, s)
+    ctx.stats.n_encrypt += n * s
+    nbytes = n * s * ct_wire_bytes(ctx.cipher) + n * 4   # + selected row ids
+    for host in ctx.hosts:
+        host.cts = ctx.channel.send("guest", f"host{host.hid}", "enc_gh",
+                                    cts, nbytes)
+        # host restricts its binned matrix to the synced selected ids so row
+        # positions align with the ciphertext batch
+        host.view = dataclasses.replace(
+            host.data, bins=host.data.bins[ctx.sel_rows],
+            zero_mask=(host.data.zero_mask[ctx.sel_rows]
+                       if host.data.zero_mask is not None else None))
+
+
+def _host_candidates(ctx: TreeContext, host: HostRuntime, nid: int,
+                     rows_sel: np.ndarray, mode: str, parent_nid: int = -1,
+                     sibling_nid: int = -1) -> SplitCandidates:
+    """Host-side Algorithm 5: histogram (direct or by subtraction), cumsum,
+    shuffle, compress, send; guest-side decrypt + decode into candidates."""
+    p = ctx.params
+    engine = host.engine
+    n_f, n_b = host.data.n_features, p.n_bins
+    n_slots = ctx.codec.n_slots
+
+    if mode == "subtract" and (parent_nid not in host.hist_cache
+                               or sibling_nid not in host.hist_cache):
+        mode = "direct"          # sibling exited early as a leaf
+    if mode == "subtract":
+        parent = host.hist_cache[parent_nid]
+        child = host.hist_cache[sibling_nid]
+        hist, counts = engine.subtract(parent, child)
+        ctx.stats.n_hom_add += n_f * n_b * n_slots
+    else:
+        hist, counts = engine.node_histogram(host.view, host.cts, rows_sel)
+        ctx.stats.n_hom_add += int(counts.sum()) * n_slots
+    host.hist_cache[nid] = (hist, counts)
+
+    cum = engine.cumsum(hist)
+    ctx.stats.n_hom_add += n_f * (n_b - 1) * n_slots
+    cum_counts = counts.cumsum(axis=1)
+
+    # flatten to split infos, drop last bin (empty right side)
+    if ctx.cipher.backend == "limb":
+        import jax.numpy as jnp
+        flat = jnp.asarray(cum)[:, : n_b - 1].reshape(n_f * (n_b - 1), n_slots, -1)
+    else:
+        flat = cum[:, : n_b - 1].reshape(n_f * (n_b - 1), n_slots)
+    flat_counts = cum_counts[:, : n_b - 1].reshape(-1)
+    m = flat.shape[0]
+    ctx.stats.n_split_infos += m
+
+    # real sids use the same fid*n_b+bid encoding as decode_sid
+    fid_grid, bid_grid = np.meshgrid(np.arange(n_f), np.arange(n_b - 1),
+                                     indexing="ij")
+    real_sids = (fid_grid * n_b + bid_grid).reshape(-1)
+    perm = ctx.rng.permutation(m)
+    host.perms[nid] = real_sids[perm]      # shuffled position -> real sid
+    if ctx.cipher.backend == "limb":
+        import jax.numpy as jnp
+        flat = flat[jnp.asarray(perm)]
+    else:
+        flat = flat[perm]
+    flat_counts = flat_counts[perm]
+
+    wire = ct_wire_bytes(ctx.cipher)
+    use_compress = (p.compression and ctx.codec.compressible
+                    and ctx.codec.eta_s > 1)
+    if use_compress:
+        eta = ctx.codec.eta_s
+        if ctx.cipher.backend == "limb":
+            src = flat[:, 0, :]
+        else:
+            src = flat[:, 0]
+        pkgs, sizes = compress_mod.compress_batch(
+            ctx.cipher, src, eta, ctx.codec.b_slot)
+        n_pkgs = len(sizes)
+        ctx.stats.n_hom_scalar += int(np.sum(sizes - 1))
+        ctx.stats.n_hom_add += int(np.sum(sizes - 1))
+        payload = (pkgs, sizes, flat_counts)
+        nbytes = n_pkgs * wire + m * 8
+        ctx.stats.n_packages += n_pkgs
+    else:
+        payload = (flat, None, flat_counts)
+        nbytes = m * n_slots * wire + m * 8
+        ctx.stats.n_packages += m * n_slots
+    payload = ctx.channel.send(f"host{host.hid}", "guest", "split_infos",
+                               payload, nbytes)
+
+    # ---- guest side: decrypt + decode (Algorithm 6) ----
+    data, sizes, counts_l = payload
+    if use_compress:
+        plain = _decrypt_ints(ctx, data)
+        ctx.stats.n_decrypt += len(plain)
+        vals = compress_mod.decompress_ints(
+            plain, sizes, ctx.codec.eta_s, ctx.codec.b_slot,
+            padded=(ctx.cipher.backend == "limb"))
+        rows = np.asarray(vals, dtype=object).reshape(m, 1)
+    else:
+        if ctx.cipher.backend == "limb":
+            flat2 = np.asarray(data).reshape(m * n_slots, -1)
+        else:
+            flat2 = data.reshape(m * n_slots)
+        plain = _decrypt_ints(ctx, flat2)
+        ctx.stats.n_decrypt += m * n_slots
+        rows = np.asarray(plain, dtype=object).reshape(m, n_slots)
+    g_l, h_l = ctx.codec.decode(rows, counts_l)
+    return SplitCandidates(party=host.hid, sid=np.arange(m), g_l=g_l, h_l=h_l,
+                           cnt_l=counts_l)
+
+
+def _decrypt_ints(ctx: TreeContext, cts) -> list:
+    if ctx.cipher.backend == "limb":
+        import jax.numpy as jnp
+        if ctx.cipher.name == "affine" and ctx.params.use_pallas:
+            from ..kernels.modmul import decrypt_batch
+            pl_limbs = decrypt_batch(ctx.cipher, jnp.asarray(cts))
+            return limbs.to_pyints(np.asarray(pl_limbs))
+        return ctx.cipher.decrypt_to_ints(jnp.asarray(cts))
+    return ctx.cipher.decrypt_to_ints(cts)
+
+
+def _guest_candidates(ctx: TreeContext, plain_engine: PlainHistogram,
+                      cache: dict, nid: int, rows_sel: np.ndarray, mode: str,
+                      parent_nid: int = -1, sibling_nid: int = -1):
+    if mode == "subtract" and (parent_nid not in cache
+                               or sibling_nid not in cache):
+        mode = "direct"
+    if mode == "subtract":
+        hist = plain_engine.subtract(cache[parent_nid], cache[sibling_nid])
+    else:
+        hist = plain_engine.node_histogram(ctx.guest_data, ctx.g, ctx.h,
+                                           rows_sel)
+    cache[nid] = hist
+    Gc, Hc, Cc = plain_engine.cumsum(hist)
+    return candidates_from_cumsum(Gc, Hc, Cc, party=GUEST)
+
+
+# ---------------------------------------------------------------------------
+# the grower
+# ---------------------------------------------------------------------------
+
+def grow_tree(ctx: TreeContext,
+              feature_parties: Callable[[int], tuple] | None = None
+              ) -> FederatedTree:
+    """Grow one federated tree.  ``feature_parties(depth) -> (use_guest,
+    host_ids)`` schedules which parties contribute split candidates at each
+    depth (mix / layered modes); default: everyone, every depth."""
+    p = ctx.params
+    if feature_parties is None:
+        feature_parties = lambda d: (True, [h.hid for h in ctx.hosts])
+
+    any_host = any(feature_parties(d)[1] for d in range(p.max_depth))
+    if any_host:
+        _encrypt_all(ctx)
+
+    plain_engine = PlainHistogram(p.n_bins, sparse=p.sparse)
+    guest_cache: dict = {}
+
+    n_all = ctx.guest_data.n_instances
+    nodes = [Node(nid=0, depth=0, n_rows=n_all)]
+    rows_all = {0: np.arange(n_all)}
+    rows_sel = {0: np.arange(len(ctx.sel_rows))}   # positions into sel arrays
+    hist_mode = {0: ("direct", -1, -1)}
+
+    frontier = [0]
+    for depth in range(p.max_depth):
+        use_guest, host_ids = feature_parties(depth)
+        active_hosts = [h for h in ctx.hosts if h.hid in host_ids]
+        next_frontier = []
+        # order: direct nodes before subtract nodes (siblings first)
+        ordered = [n for n in frontier if hist_mode[n][0] == "direct"] + \
+                  [n for n in frontier if hist_mode[n][0] == "subtract"]
+        # sync one assignment vector per layer to hosts that participate
+        if active_hosts:
+            node_of = np.full(len(ctx.sel_rows), -1, np.int32)
+            for nid in frontier:
+                node_of[rows_sel[nid]] = nid
+            for h in active_hosts:
+                ctx.channel.send("guest", f"host{h.hid}", "assign_sync",
+                                 node_of, node_of.size * 4)
+
+        for nid in ordered:
+            node = nodes[nid]
+            rs = rows_sel[nid]
+            mode, par, sib = hist_mode[nid]
+            if not p.histogram_subtraction:
+                mode, par, sib = "direct", -1, -1
+
+            gsel = ctx.g[ctx.sel_rows][rs]
+            hsel = ctx.h[ctx.sel_rows][rs]
+            G_tot = gsel.sum(axis=0)
+            H_tot = hsel.sum(axis=0)
+
+            if len(rs) < 2 * p.min_leaf or len(rs) == 0:
+                node.weight = leaf_weight(G_tot, H_tot, p.lam, p.learning_rate)
+                continue
+
+            cands = []
+            if use_guest and ctx.guest_data.n_features > 0:
+                cands.append(_guest_candidates(
+                    ctx, plain_engine, guest_cache, nid, ctx.sel_rows[rs],
+                    mode, par, sib))
+            for h in active_hosts:
+                cands.append(_host_candidates(ctx, h, nid, rs, mode, par, sib))
+
+            best = find_best_split(cands, G_tot, H_tot, len(rs), p.lam,
+                                   p.min_leaf, p.min_gain)
+            if best is None:
+                node.weight = leaf_weight(G_tot, H_tot, p.lam, p.learning_rate)
+                continue
+
+            # resolve the split owner + instance assignment
+            ra = rows_all[nid]
+            fsel = ctx.sel_rows[rs]                 # full ids of selected rows
+            if best.party == GUEST:
+                fid, bid = decode_sid(best.sid, p.n_bins)
+                go_left = ctx.guest_data.bins[ra, fid] <= bid
+                go_left_sel = ctx.guest_data.bins[fsel, fid] <= bid
+                node.party, node.fid, node.bid = GUEST, fid, bid
+            else:
+                host = next(h for h in ctx.hosts if h.hid == best.party)
+                ctx.channel.send("guest", f"host{host.hid}", "chosen_sid",
+                                 (nid, best.sid), 8)
+                real_sid = int(host.perms[nid][best.sid])
+                fid, bid = decode_sid(real_sid, p.n_bins)
+                host.table[nid] = (fid, bid)
+                go_left = host.data.bins[ra, fid] <= bid
+                go_left_sel = host.data.bins[fsel, fid] <= bid
+                ctx.channel.send(f"host{host.hid}", "guest", "assign_mask",
+                                 go_left, (len(go_left) + 7) // 8)
+                node.party, node.sid = host.hid, best.sid
+            node.gain = best.gain
+
+            lid, rid = len(nodes), len(nodes) + 1
+            node.left, node.right = lid, rid
+            rows_all[lid], rows_all[rid] = ra[go_left], ra[~go_left]
+            rows_sel[lid], rows_sel[rid] = rs[go_left_sel], rs[~go_left_sel]
+            nodes.append(Node(nid=lid, depth=depth + 1, n_rows=len(rows_all[lid])))
+            nodes.append(Node(nid=rid, depth=depth + 1, n_rows=len(rows_all[rid])))
+            # subtraction schedule: smaller child direct, sibling subtracts
+            if len(rows_sel[lid]) <= len(rows_sel[rid]):
+                hist_mode[lid] = ("direct", -1, -1)
+                hist_mode[rid] = ("subtract", nid, lid)
+            else:
+                hist_mode[rid] = ("direct", -1, -1)
+                hist_mode[lid] = ("subtract", nid, rid)
+            next_frontier += [lid, rid]
+        # free parent histograms no longer needed
+        for nid in frontier:
+            guest_cache.pop(hist_mode[nid][1], None)
+            for h in ctx.hosts:
+                h.hist_cache.pop(hist_mode[nid][1], None)
+        frontier = next_frontier
+
+    # finalize leaves at max depth
+    for node in nodes:
+        if node.left == -1 and node.weight is None:
+            rs = rows_sel[node.nid]
+            gsel = ctx.g[ctx.sel_rows][rs]
+            hsel = ctx.h[ctx.sel_rows][rs]
+            node.weight = leaf_weight(gsel.sum(axis=0), hsel.sum(axis=0),
+                                      p.lam, p.learning_rate)
+
+    # leaf row assignment for the score update
+    leaf_rows = {n.nid: rows_all[n.nid] for n in nodes if n.left == -1}
+    tree = FederatedTree(nodes=nodes,
+                         host_tables=[h.table for h in ctx.hosts])
+    tree.leaf_rows = leaf_rows
+    return tree
+
+
+def predict_tree(tree: FederatedTree, guest_bins: np.ndarray,
+                 host_bins: list) -> np.ndarray:
+    """Route binned instances through the tree (simulation: reads host
+    tables directly; the real protocol does the same lookups host-side)."""
+    n = guest_bins.shape[0]
+    first = next(nd for nd in tree.nodes if nd.weight is not None)
+    w0 = np.asarray(first.weight)
+    out = np.zeros((n,) + w0.shape)
+    node_of = np.zeros(n, np.int64)
+    changed = True
+    while changed:
+        changed = False
+        for nd in tree.nodes:
+            if nd.left == -1:
+                continue
+            sel = node_of == nd.nid
+            if not sel.any():
+                continue
+            if nd.party == GUEST:
+                go_left = guest_bins[sel, nd.fid] <= nd.bid
+            else:
+                fid, bid = tree.host_tables[nd.party][nd.nid]
+                go_left = host_bins[nd.party][sel, fid] <= bid
+            ids = np.where(sel)[0]
+            node_of[ids[go_left]] = nd.left
+            node_of[ids[~go_left]] = nd.right
+            changed = True
+    for nd in tree.nodes:
+        if nd.left == -1 and nd.weight is not None:
+            out[node_of == nd.nid] = nd.weight
+    return out

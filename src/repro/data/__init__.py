@@ -1,0 +1,1 @@
+from .pipeline import PrefetchLoader, SyntheticTokens, synthetic_tabular  # noqa: F401

@@ -1,0 +1,32 @@
+"""Public wrappers: quantile threshold fitting + kernelized bucketize."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .binning import bucketize_pallas
+from .ref import bucketize_ref
+
+
+def fit_quantile_thresholds(values: np.ndarray, n_bins: int) -> np.ndarray:
+    """Per-feature quantile split points: (n_f, n_b-1) fp32, +inf padded
+    where a feature has fewer distinct quantiles (degenerate features)."""
+    v = np.asarray(values, np.float64)
+    qs = np.linspace(0, 1, n_bins + 1)[1:-1]
+    thr = np.quantile(v, qs, axis=0).T.astype(np.float32)   # (n_f, n_b-1)
+    # collapse duplicate thresholds to +inf so empty bins stay empty
+    out = np.full_like(thr, np.inf)
+    for f in range(thr.shape[0]):
+        uniq = np.unique(thr[f])
+        out[f, : len(uniq)] = uniq
+    return out
+
+
+def bucketize(values, thresholds, use_pallas: bool = True,
+              interpret: bool | None = None) -> jnp.ndarray:
+    values = jnp.asarray(values, jnp.float32)
+    thresholds = jnp.asarray(thresholds, jnp.float32)
+    if use_pallas:
+        return bucketize_pallas(values, thresholds, interpret=interpret)
+    return bucketize_ref(values, thresholds)

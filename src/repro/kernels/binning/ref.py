@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the quantile-binning (bucketize) kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bucketize_ref(values: jnp.ndarray, thresholds: jnp.ndarray) -> jnp.ndarray:
+    """values (n_i, n_f) fp32, thresholds (n_f, n_b-1) fp32 (+inf padded,
+    ascending per feature) -> bin indices (n_i, n_f) int32 in [0, n_b)."""
+    ge = values[:, :, None] >= thresholds[None, :, :]
+    return ge.sum(axis=-1).astype(jnp.int32)

@@ -1,0 +1,23 @@
+"""Shared helpers for Pallas TPU kernels.
+
+All kernels in this package target TPU (pl.pallas_call + BlockSpec VMEM
+tiling) and are validated on CPU via ``interpret=True``, which executes the
+kernel body in Python.  ``default_interpret()`` picks interpret mode
+automatically when no TPU is present so tests/benches run anywhere.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b

@@ -1,0 +1,2 @@
+from .ops import ciphertext_histogram, count_histogram  # noqa: F401
+from .ref import hist_ref  # noqa: F401

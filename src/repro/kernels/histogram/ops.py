@@ -1,0 +1,29 @@
+"""Jit'd public wrappers around the ciphertext histogram kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .histogram import hist_pallas
+from .ref import hist_ref
+
+
+def ciphertext_histogram(bins, cts, n_bins: int, use_pallas: bool = True,
+                         interpret: bool | None = None) -> jnp.ndarray:
+    """(n_i, n_f) bins x (n_i, L) limb ciphertexts -> (n_f, n_b, L) lazy sums.
+
+    Lazy output: limb values are raw int32 sums; callers must carry-fix /
+    modular-reduce (cipher.reduce) before decrypting.  Masked instances are
+    marked with a negative bin index.
+    """
+    bins = jnp.asarray(bins, jnp.int32)
+    cts = jnp.asarray(cts, jnp.int32)
+    if use_pallas:
+        return hist_pallas(bins, cts, n_bins, interpret=interpret)
+    return hist_ref(bins, cts, n_bins)
+
+
+def count_histogram(bins, n_bins: int) -> jnp.ndarray:
+    """Plaintext per-bin instance counts: (n_f, n_b) int32."""
+    oh = (bins[:, :, None] == jnp.arange(n_bins)[None, None, :])
+    return oh.sum(axis=0).astype(jnp.int32)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the ciphertext histogram kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hist_ref(bins: jnp.ndarray, cts: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """Reference ciphertext histogram.
+
+    bins: (n_i, n_f) int32 bin index per (instance, feature); negative
+          entries (padding / masked-out instances) contribute nothing.
+    cts:  (n_i, L) int32 limb vectors (one packed-GH ciphertext per instance).
+    returns (n_f, n_b, L) int32 lazy (un-carried) limb sums.
+    """
+    oh = (bins[:, :, None] == jnp.arange(n_bins)[None, None, :])
+    out = jnp.einsum("ifb,il->fbl", oh.astype(jnp.float32),
+                     cts.astype(jnp.float32))
+    return out.astype(jnp.int32)

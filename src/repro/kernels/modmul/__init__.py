@@ -1,0 +1,2 @@
+from .ops import decrypt_batch, encrypt_batch, modmul_fixed  # noqa: F401
+from .ref import mul_fixed_ref  # noqa: F401

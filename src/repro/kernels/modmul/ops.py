@@ -1,0 +1,54 @@
+"""Jit'd wrappers: kernelized modular multiply / encrypt / decrypt batches.
+
+Composes the mul_fixed Pallas kernel with jnp glue to realize a full Barrett
+modular multiplication by a fixed constant: all three O(L^2) products (x*b,
+q1*mu, q3*n) run on the MXU; shifts/masks/conditional subtracts are O(L).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.he import limbs
+from .modmul import mul_fixed_pallas
+
+
+def modmul_fixed(x: jnp.ndarray, T_b: jnp.ndarray, bctx: limbs.BarrettCtx,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    # NOTE: not @jit at this level -- BarrettCtx.Ln drives static slicing;
+    # the three mul_fixed_pallas calls below are individually jitted.
+    """(x * b) mod n for a batch x (N, Ln) of canonical limbs, b fixed."""
+    Ln = bctx.Ln
+    prod = mul_fixed_pallas(x, T_b, interpret=interpret)[..., : 2 * Ln]
+    # Barrett with kernelized q1*mu and q3*n
+    q1 = limbs.shift_right_limbs(prod, Ln - 1)[..., : Ln + 2]
+    q2 = mul_fixed_pallas(q1, bctx.T_mu, interpret=interpret)
+    q3 = limbs.shift_right_limbs(q2, Ln + 1)[..., : Ln + 2]
+    r1 = limbs.mask_bits(prod[..., : Ln + 2], (Ln + 1) * limbs.RADIX_BITS)
+    q3n = mul_fixed_pallas(q3, bctx.T_n, interpret=interpret)[..., : Ln + 2]
+    q3n = limbs.mask_bits(q3n, (Ln + 1) * limbs.RADIX_BITS)
+    t = r1 - q3n
+    t = t.at[..., Ln + 1].add(1)
+    t = limbs.borrow_fix(t)
+    r = t.at[..., Ln + 1].set(0)
+    n_wide = jnp.pad(bctx.n, (0, 2))
+    r = limbs.cond_sub(r, n_wide)
+    r = limbs.cond_sub(r, n_wide)
+    return r[..., :Ln]
+
+
+def encrypt_batch(cipher, plaintext_limbs, interpret: bool | None = None):
+    """Kernelized affine encryption of a (N, Lp) plaintext batch."""
+    x = jnp.asarray(plaintext_limbs, jnp.int32)
+    if x.shape[-1] < cipher.Ln:
+        x = jnp.pad(x, ((0, 0), (0, cipher.Ln - x.shape[-1])))
+    return modmul_fixed(x, cipher.T_enc, cipher.bctx, interpret=interpret)
+
+
+def decrypt_batch(cipher, ct, interpret: bool | None = None):
+    """Kernelized affine decryption -> plaintext limbs (N, Ln)."""
+    return modmul_fixed(jnp.asarray(ct, jnp.int32), cipher.T_dec, cipher.bctx,
+                        interpret=interpret)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fixed-multiplier big-int multiply kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.he import limbs
+
+
+def mul_fixed_ref(x: jnp.ndarray, T: jnp.ndarray) -> jnp.ndarray:
+    """x (N, Lx) canonical limbs, T (Lx, Lo) Toeplitz of a fixed big int
+    -> (N, Lo) canonical limbs of x*b mod 2**(8*Lo)."""
+    return limbs.mul_fixed(jnp.asarray(x, jnp.int32), jnp.asarray(T, jnp.int32))

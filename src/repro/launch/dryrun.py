@@ -1,0 +1,315 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count="
+                           + os.environ.get("DRYRUN_DEVICES", "512")).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware: the sharding rules are coherent
+(no partitioning errors), the program fits (memory_analysis), and yields the
+FLOP/byte/collective numbers the roofline (§Roofline) reads.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out experiments/dryrun.json
+    DRYRUN_DEVICES=8 ... --debug-mesh     (CI-sized validation)
+
+Results are written incrementally; finished cells are skipped on re-run.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, get_config
+from ..models import LM
+from ..models.common import set_mesh
+from ..optim import AdamWConfig, adamw_update, init_adamw
+from ..parallel.sharding import (batch_specs, cache_specs, opt_specs,
+                                 param_specs)
+from .mesh import make_debug_mesh, make_production_mesh
+from .roofline import collective_bytes, model_flops, roofline_terms
+from .specs import SHAPES, abstract_params, cell_supported, input_specs
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def scaled_config(cfg, k: int):
+    """Config with k 'layer units' (superblocks for hybrid, enc+dec pairs
+    for enc-dec), python-unrolled so cost_analysis counts every layer."""
+    import dataclasses
+    if cfg.family == "hybrid":
+        tail = cfg.n_layers % 3
+        return dataclasses.replace(cfg, n_layers=3 * k + tail,
+                                   scan_unroll=True)
+    if cfg.enc_dec:
+        return dataclasses.replace(cfg, n_layers=k, n_enc_layers=k,
+                                   scan_unroll=True)
+    return dataclasses.replace(cfg, n_layers=k, scan_unroll=True)
+
+
+def layer_units(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // 3
+    return cfg.n_layers
+
+
+def lower_cell(arch: str, shape: str, mesh, opt_cfg=None, cfg=None):
+    cfg = cfg or get_config(arch)
+    model = LM(cfg)
+    set_mesh(mesh)
+    kind = SHAPES[shape]["kind"]
+    params_abs = abstract_params(cfg)
+    pshard = _named(mesh, param_specs(params_abs, mesh))
+    ins = input_specs(cfg, shape)
+
+    if kind == "train":
+        ocfg = opt_cfg or AdamWConfig()
+        opt_abs = jax.eval_shape(lambda p: init_adamw(p, ocfg), params_abs)
+        oshard = _named(mesh, opt_specs(params_abs, mesh))
+        oshard = jax.tree.map(
+            lambda a, s: s, opt_abs,
+            {"m": oshard, "v": oshard,
+             "step": jax.sharding.NamedSharding(
+                 mesh, jax.sharding.PartitionSpec())})
+        bshard = _named(mesh, batch_specs(ins["batch"], mesh))
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            params, opt_state = adamw_update(params, grads, opt_state, ocfg)
+            return params, opt_state, loss
+
+        jitted = jax.jit(train_step,
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None))
+        with mesh:
+            lowered = jitted.lower(params_abs, opt_abs, ins["batch"])
+    elif kind == "prefill":
+        bshard = _named(mesh, batch_specs(ins["batch"], mesh))
+        jitted = jax.jit(lambda p, b: model.prefill(p, b),
+                         in_shardings=(pshard, bshard))
+        with mesh:
+            lowered = jitted.lower(params_abs, ins["batch"])
+    else:  # decode
+        cshard = _named(mesh, cache_specs(ins["cache"], mesh))
+        small = batch_specs({"tokens": ins["tokens"], "pos": ins["pos"]},
+                            mesh)
+        tshard = jax.sharding.NamedSharding(mesh, small["tokens"])
+        pos_shard = jax.sharding.NamedSharding(mesh, small["pos"])
+        args = [params_abs, ins["tokens"], ins["pos"], ins["cache"]]
+        in_sh = [pshard, tshard, pos_shard, cshard]
+        if "enc_out" in ins:
+            fn = lambda p, t, pos, c, e: model.decode_step(p, t, pos, c,
+                                                           enc_out=e)
+            args.append(ins["enc_out"])
+            espec = batch_specs({"e": ins["enc_out"]}, mesh)["e"]
+            in_sh.append(jax.sharding.NamedSharding(mesh, espec))
+        else:
+            fn = lambda p, t, pos, c: model.decode_step(p, t, pos, c)
+        jitted = jax.jit(fn, in_shardings=tuple(in_sh))
+        with mesh:
+            lowered = jitted.lower(*args)
+    return cfg, lowered
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_name: str,
+             quantized_opt: bool = False) -> dict:
+    t0 = time.time()
+    cfg, lowered = lower_cell(
+        arch, shape, mesh,
+        AdamWConfig(quantize_moments=quantized_opt) if quantized_opt else None)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    chips = mesh.devices.size
+    ca = compiled.cost_analysis() or {}
+    flops_pd = float(ca.get("flops", 0.0))
+    bytes_pd = float(ca.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception:
+        mem_info = {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    kind = SHAPES[shape]["kind"]
+    tokens = (SHAPES[shape]["seq"] * SHAPES[shape]["batch"]
+              if kind in ("train", "prefill") else SHAPES[shape]["batch"])
+    mf_pd = model_flops(cfg, kind, tokens, chips)
+    terms = roofline_terms(flops_pd, bytes_pd, coll["total"])
+    useful = mf_pd / flops_pd if flops_pd else 0.0
+
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "chips": chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_chip": flops_pd, "bytes_per_chip": bytes_pd,
+        "collective_bytes_per_chip": coll["total"],
+        "collective_by_op": coll["by_op"],
+        "memory": mem_info,
+        "model_flops_per_chip": mf_pd,
+        "useful_flop_ratio": round(useful, 4),
+        **{k: (round(v, 6) if isinstance(v, float) else v)
+           for k, v in terms.items()},
+    }
+
+
+def _measure(arch, shape, mesh, cfg):
+    _, lowered = lower_cell(arch, shape, mesh, cfg=cfg)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)),
+            float(coll["total"]))
+
+
+def run_cell_accurate(arch: str, shape: str, mesh, mesh_name: str) -> dict:
+    """Loop-exact roofline terms: measure fully-unrolled k=1 and k=2 layer
+    units, extrapolate linearly to the full depth.  Exact for homogeneous
+    stacks (flops(k) = outside + k*per_layer); avoids XLA cost_analysis's
+    count-while-bodies-once behaviour."""
+    cfg_full = get_config(arch)
+    k_full = layer_units(cfg_full)
+    t0 = time.time()
+    f1, b1, c1 = _measure(arch, shape, mesh, scaled_config(cfg_full, 1))
+    f2, b2, c2 = _measure(arch, shape, mesh, scaled_config(cfg_full, 2))
+    dt = time.time() - t0
+    flops = f1 + (k_full - 1) * (f2 - f1)
+    byts = b1 + (k_full - 1) * (b2 - b1)
+    coll = c1 + (k_full - 1) * (c2 - c1)
+
+    chips = mesh.devices.size
+    kind = SHAPES[shape]["kind"]
+    tokens = (SHAPES[shape]["seq"] * SHAPES[shape]["batch"]
+              if kind in ("train", "prefill") else SHAPES[shape]["batch"])
+    mf_pd = model_flops(cfg_full, kind, tokens, chips)
+    terms = roofline_terms(flops, byts, coll)
+    ideal = mf_pd / 197e12
+    return {
+        "acc_flops_per_chip": flops, "acc_bytes_per_chip": byts,
+        "acc_collective_bytes_per_chip": coll,
+        "acc_compute_s": round(terms["compute_s"], 6),
+        "acc_memory_s": round(terms["memory_s"], 6),
+        "acc_collective_s": round(terms["collective_s"], 6),
+        "acc_bottleneck": terms["bottleneck"],
+        "acc_useful_flop_ratio": round(mf_pd / flops, 4) if flops else 0.0,
+        "acc_roofline_fraction": round(ideal / terms["bound_s"], 4)
+        if terms["bound_s"] else 0.0,
+        "acc_measure_s": round(dt, 1),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--debug-mesh", action="store_true",
+                    help="8-device mesh (set DRYRUN_DEVICES=8)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--quantized-opt", action="store_true")
+    ap.add_argument("--accurate", action="store_true",
+                    help="add loop-exact extrapolated roofline terms")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    # always load: --force re-measures requested cells but never discards
+    # other cells' records
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for multi in meshes:
+        mesh = (make_debug_mesh(multi_pod=multi) if args.debug_mesh
+                else make_production_mesh(multi_pod=multi))
+        mesh_name = "multi" if multi else "single"
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape in shapes:
+                key = f"{arch}|{shape}|{mesh_name}"
+                if args.accurate:
+                    ok, why = cell_supported(cfg, shape)
+                    if not ok or results.get(key, {}).get("status") != "ok":
+                        continue
+                    if "acc_compute_s" in results[key] and not args.force:
+                        print(f"[cached-acc] {key}")
+                        continue
+                    print(f"[acc]    {key} ...", flush=True)
+                    try:
+                        results[key].update(
+                            run_cell_accurate(arch, shape, mesh, mesh_name))
+                        r = results[key]
+                        print(f"  acc: compute {r['acc_compute_s']:.4f}s "
+                              f"memory {r['acc_memory_s']:.4f}s "
+                              f"collective {r['acc_collective_s']:.4f}s "
+                              f"roofline {100 * r['acc_roofline_fraction']:.1f}%"
+                              , flush=True)
+                    except Exception as e:    # noqa: BLE001
+                        print(f"  acc-ERROR {type(e).__name__}: {e}",
+                              flush=True)
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+                    continue
+                if key in results and results[key].get("status") in (
+                        "ok", "skip") and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                ok, why = cell_supported(cfg, shape)
+                if not ok:
+                    results[key] = {"arch": arch, "shape": shape,
+                                    "mesh": mesh_name, "status": "skip",
+                                    "reason": why}
+                    print(f"[skip]   {key}: {why}")
+                else:
+                    print(f"[run]    {key} ...", flush=True)
+                    try:
+                        results[key] = run_cell(
+                            arch, shape, mesh, mesh_name,
+                            quantized_opt=args.quantized_opt)
+                        r = results[key]
+                        print(f"  ok: compile {r['compile_s']}s  "
+                              f"compute {r['compute_s']:.4f}s  "
+                              f"memory {r['memory_s']:.4f}s  "
+                              f"collective {r['collective_s']:.4f}s  "
+                              f"bound={r['bottleneck']}", flush=True)
+                    except Exception as e:  # noqa: BLE001
+                        results[key] = {
+                            "arch": arch, "shape": shape, "mesh": mesh_name,
+                            "status": "error", "error": f"{type(e).__name__}: {e}",
+                            "trace": traceback.format_exc()[-2000:]}
+                        print(f"  ERROR {type(e).__name__}: {e}", flush=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in results.values() if r.get("status") == "skip")
+    n_err = sum(1 for r in results.values() if r.get("status") == "error")
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped-by-design, {n_err} errors")
+
+
+if __name__ == "__main__":
+    main()

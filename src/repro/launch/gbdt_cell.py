@@ -1,0 +1,135 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Paper-technique dry-run cell: SecureBoost+ ciphertext histogram building
+on the production mesh.
+
+Mapping (DESIGN.md §3/§5): instances shard over "data", features (= the
+party boundary) over "model"; the encrypted-GH broadcast and split-info
+gather are the only cross-party collectives.  One tree layer (16 nodes,
+depth 4) over a GOSS-sampled 2^18-instance batch, 2000 features, 32 bins,
+1024-bit affine ciphertexts (W = 132 radix-2^8 limbs incl. lazy headroom).
+
+Three formulations, measured identically to the LM cells:
+
+  dense    one-hot einsum (what a naive XLA port does)
+  scatter  vmapped scatter-add (lazy limb sums; no one-hot materialized)
+  + the Pallas kernel (kernels/histogram) is the TPU execution path whose
+    per-tile cost the scatter variant's terms bound from above.
+
+    PYTHONPATH=src python -m repro.launch.gbdt_cell [--variant scatter]
+"""
+
+import argparse
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+
+from ..launch.mesh import make_production_mesh
+from ..launch.roofline import collective_bytes, roofline_terms
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+N, F, NB_BINS, NODES, W = 2 ** 18, 2000, 32, 16, 132
+F_BLOCK = 100
+NB = NODES * NB_BINS
+
+
+def hist_dense(bins, cts, node_of):
+    """One-hot einsum over feature blocks (naive formulation)."""
+    ids = node_of[:, None] * NB_BINS + bins          # (N, F) flat (node, bin)
+
+    def block(carry, fb):
+        oh = jax.nn.one_hot(fb, NB, dtype=jnp.float32)        # (N, Fb, NB)
+        h = jnp.einsum("ifb,iw->fbw", oh, cts.astype(jnp.float32))
+        return carry, h.astype(jnp.int32)
+
+    blocks = ids.reshape(N, F // F_BLOCK, F_BLOCK).transpose(1, 0, 2)
+    _, out = jax.lax.scan(block, 0, blocks)
+    return out.reshape(F, NB, W)
+
+
+def hist_scatter(bins, cts, node_of):
+    """Scatter-add (lazy limb sums): O(N*F*W) updates, no one-hot."""
+    ids = node_of[:, None] * NB_BINS + bins          # (N, F)
+
+    def one_feature(idv):
+        return jnp.zeros((NB, W), jnp.int32).at[idv].add(cts)
+
+    def block(carry, fb):                            # fb: (N, F_BLOCK)
+        return carry, jax.vmap(one_feature, in_axes=1)(fb)
+
+    blocks = ids.reshape(N, F // F_BLOCK, F_BLOCK).transpose(1, 0, 2)
+    _, out = jax.lax.scan(block, 0, blocks)
+    return out.reshape(F, NB, W)
+
+
+def lower_cell(mesh, variant: str):
+    fn = {"dense": hist_dense, "scatter": hist_scatter,
+          "scatter_rs": hist_scatter}[variant]
+    bins = jax.ShapeDtypeStruct((N, F), jnp.int32)
+    cts = jax.ShapeDtypeStruct((N, W), jnp.int32)
+    node_of = jax.ShapeDtypeStruct((N,), jnp.int32)
+    d = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    in_sh = (NamedSharding(mesh, P(d, "model")),     # bins: party features
+             NamedSharding(mesh, P(d, None)),        # cts: replicated/model
+             NamedSharding(mesh, P(d)))
+    if variant == "scatter_rs":
+        # bins axis of the histogram sharded over data: the cross-instance
+        # reduction becomes a reduce-scatter instead of all-reduce+slice;
+        # downstream cumsum/compress run on (model, data)-sharded slabs.
+        out_sh = NamedSharding(mesh, P("model", d, None))
+    else:
+        out_sh = NamedSharding(mesh, P("model", None, None))
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    with mesh:
+        return jitted.lower(bins, cts, node_of)
+
+
+def run(variant: str, multi_pod: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    lowered = lower_cell(mesh, variant)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    terms = roofline_terms(float(ca.get("flops", 0)),
+                           float(ca.get("bytes accessed", 0)),
+                           coll["total"])
+    # useful work: one lazy limb-add per (instance, feature, limb)
+    useful_adds = N * F * W / mesh.devices.size
+    return {
+        "cell": f"secureboost_hist|{variant}|{'multi' if multi_pod else 'single'}",
+        "flops_per_chip": float(ca.get("flops", 0)),
+        "bytes_per_chip": float(ca.get("bytes accessed", 0)),
+        "collective_bytes_per_chip": coll["total"],
+        "useful_adds_per_chip": useful_adds,
+        **{k: (round(v, 6) if isinstance(v, float) else v)
+           for k, v in terms.items()},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/gbdt_cell.json")
+    args = ap.parse_args()
+    variants = (["dense", "scatter", "scatter_rs"]
+                if args.variant == "all" else [args.variant])
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    for v in variants:
+        r = run(v, args.multi_pod)
+        results[r["cell"]] = r
+        print(f"{r['cell']}: compute {r['compute_s']:.4f}s "
+              f"memory {r['memory_s']:.4f}s collective {r['collective_s']:.4f}s "
+              f"bound={r['bottleneck']}", flush=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun JSON.
+
+    PYTHONPATH=src python -m repro.launch.report experiments/dryrun_opt.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ["B", "KB", "MB", "GB", "TB"]:
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(results: dict) -> str:
+    lines = ["| arch | shape | mesh | status | compile s | HLO GFLOP/chip | "
+             "coll GB/chip | peak mem/chip |",
+             "|---|---|---|---|---|---|---|---|"]
+    for key in sorted(results):
+        r = results[key]
+        if r.get("status") == "ok":
+            mem = r.get("memory", {}) or {}
+            peak = mem.get("peak_bytes") or mem.get("temp_bytes")
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                f"{r.get('compile_s', 0)} | "
+                f"{r.get('flops_per_chip', 0) / 1e9:.1f} | "
+                f"{r.get('collective_bytes_per_chip', 0) / 1e9:.2f} | "
+                f"{fmt_bytes(peak)} |")
+        elif r.get("status") == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"skip (by design) | - | - | - | - |")
+        else:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR | - | - | - | - |")
+    return "\n".join(lines)
+
+
+def roofline_table(results: dict) -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "bottleneck | MODEL/HLO flops | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    rows = [r for r in results.values()
+            if r.get("mesh") == "single" and "acc_compute_s" in r]
+    rows.sort(key=lambda r: -(r["acc_roofline_fraction"]))
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['acc_compute_s']:.4f} | "
+            f"{r['acc_memory_s']:.4f} | {r['acc_collective_s']:.4f} | "
+            f"{r['acc_bottleneck'][:-2]} | {r['acc_useful_flop_ratio']:.3f} | "
+            f"{100 * r['acc_roofline_fraction']:.2f}% |")
+    return "\n".join(lines)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun.json"
+    with open(path) as f:
+        results = json.load(f)
+    which = sys.argv[2] if len(sys.argv) > 2 else "both"
+    if which in ("both", "dryrun"):
+        print("### Dry-run matrix\n")
+        print(dryrun_table(results))
+    if which in ("both", "roofline"):
+        print("\n### Roofline (single-pod, loop-exact terms)\n")
+        print(roofline_table(results))
+
+
+if __name__ == "__main__":
+    main()

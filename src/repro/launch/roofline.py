@@ -1,0 +1,176 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e-class constants
+fixed by the brief):
+
+    compute    = HLO_FLOPs_per_chip / 197e12      (bf16 peak per chip)
+    memory     = HLO_bytes_per_chip / 819e9       (HBM bandwidth)
+    collective = collective_bytes_per_chip / 50e9 (ICI link bandwidth)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the post-SPMD module is
+the per-chip program).  Collective bytes are NOT in cost_analysis: we parse
+the optimized HLO, summing the result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, and weight
+ops inside while-loop bodies (scan-over-layers) by the loop trip count
+(recovered from the largest integer constant in the loop's condition
+computation -- exact for lax.scan).
+"""
+
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[ (-]")
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(sig):
+        b = _DTYPE_BYTES.get(dtype)
+        if b is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def _split_computations(hlo: str) -> dict:
+    comps = {}
+    name = None
+    buf = []
+    assign = re.compile(r"%?[\w.\-]+\s*=")          # op lines: "%x = ..."
+    header = re.compile(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.endswith("{") and not assign.match(s):
+            m = header.match(s)
+            if m:
+                if name is not None:
+                    comps[name] = buf
+                name = m.group(1)
+                buf = []
+                continue
+        if s == "}":
+            if name is not None:
+                comps[name] = buf
+                name = None
+                buf = []
+        elif name is not None:
+            buf.append(s)
+    if name is not None:
+        comps[name] = buf
+    return comps
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Per-chip bytes moved by collectives, weighted by loop trip counts.
+
+    Returns {"total": int, "by_op": {op: bytes}, "n_sites": int}.
+    """
+    comps = _split_computations(hlo)
+
+    # trip counts: while ops name (condition, body) computations
+    trip_of_body: dict = {}
+    called_whiles: dict = {}          # comp -> list[(body, trips)]
+    for cname, lines in comps.items():
+        for ln in lines:
+            m = _WHILE_RE.search(ln)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                consts = [int(x) for x in
+                          _CONST_RE.findall("\n".join(comps.get(cond, [])))]
+                trips = max(consts) if consts else 1
+                trip_of_body[body] = trips
+                called_whiles.setdefault(cname, []).append((body, trips))
+
+    by_op: dict = {c: 0 for c in _COLLECTIVES}
+    n_sites = 0
+
+    def comp_bytes(cname, seen):
+        nonlocal n_sites
+        if cname in seen:
+            return {c: 0 for c in _COLLECTIVES}
+        seen = seen | {cname}
+        acc = {c: 0 for c in _COLLECTIVES}
+        for ln in comps.get(cname, []):
+            m = _OP_RE.search(ln)
+            if m:
+                op = m.group(1)
+                sig = ln.split("=", 1)[0] + "=" + ln.split("=", 1)[1]
+                lhs = ln.split(" = ", 1)
+                size = _shape_bytes(lhs[1] if len(lhs) > 1 else sig)
+                # result signature only: take bytes up to the op name
+                head = (lhs[1] if len(lhs) > 1 else sig).split(m.group(1))[0]
+                size = _shape_bytes(head) or size
+                acc[op] += size
+                n_sites += 1
+        for body, trips in called_whiles.get(cname, []):
+            sub = comp_bytes(body, seen)
+            for k, v in sub.items():
+                acc[k] += v * trips
+        return acc
+
+    # find the entry computation: the one containing the final root or the
+    # first one defined with ENTRY; fall back to summing top-level comps
+    entry = None
+    for ln in hlo.splitlines():
+        m = re.match(r"ENTRY\s+%?([\w.\-]+)", ln.strip())
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # approximate: every computation once, whiles weighted
+        bodies = set(trip_of_body)
+        total = {c: 0 for c in _COLLECTIVES}
+        for cname in comps:
+            if cname in bodies:
+                continue
+            sub = comp_bytes(cname, set())
+            for k, v in sub.items():
+                total[k] += v
+        by_op = total
+    else:
+        by_op = comp_bytes(entry, set())
+    return {"total": sum(by_op.values()), "by_op": by_op, "n_sites": n_sites}
+
+
+def roofline_terms(flops_pd: float, bytes_pd: float, coll_pd: float) -> dict:
+    compute = flops_pd / PEAK_FLOPS
+    memory = bytes_pd / HBM_BW
+    coll = coll_pd / LINK_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": coll}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]
+                              if k.endswith("_s") else -1)
+    terms["bound_s"] = max(compute, memory, coll)
+    return terms
+
+
+def model_flops(cfg, shape_kind: str, tokens: int, chips: int) -> float:
+    """Analytic useful FLOPs per chip: 6ND train, 2ND prefill/decode
+    (N = active params for MoE)."""
+    n = cfg.n_active_params()
+    mult = 6 if shape_kind == "train" else 2
+    return mult * n * tokens / chips

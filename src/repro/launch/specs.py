@@ -1,0 +1,77 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation: everything here is abstract.  Shapes follow the
+assigned table:
+
+    train_4k     seq 4096,    global batch 256   (train_step)
+    prefill_32k  seq 32768,   global batch 32    (prefill forward)
+    decode_32k   KV 32768,    global batch 128   (one-token serve_step)
+    long_500k    KV 524288,   global batch 1     (sub-quadratic archs only)
+
+[audio]/[vlm] frontends are stubs: encoder frame / patch embeddings arrive
+precomputed.  Whisper decode carries a 4096-frame encoder memory alongside
+the 32k self-attn cache (documented deviation: Whisper's real frame cap is
+1500; the cell exercises the mechanical shape).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..models import LM, ModelConfig
+
+SHAPES = {
+    "train_4k": {"seq": 4096, "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768, "batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq": 32768, "batch": 128, "kind": "decode"},
+    "long_500k": {"seq": 524288, "batch": 1, "kind": "decode"},
+}
+
+SUBQUADRATIC = {"hybrid", "ssm"}
+WHISPER_DECODE_ENC_LEN = 4096
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and cfg.family not in SUBQUADRATIC:
+        return False, ("full-attention arch: 524k decode is quadratic by "
+                       "construction -- skipped by design (DESIGN.md §4)")
+    return True, ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """Abstract inputs for the cell; keys depend on the cell kind."""
+    info = SHAPES[shape]
+    S, B = info["seq"], info["batch"]
+    kind = info["kind"]
+    model = LM(cfg)
+    if kind in ("train", "prefill"):
+        batch = {"tokens": sds((B, S), jnp.int32),
+                 "labels": sds((B, S), jnp.int32)}
+        if cfg.enc_dec:
+            batch["enc_embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+        return {"batch": batch}
+    # decode: cache sized to the cell's KV length (ring = window for hybrid)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    out = {"tokens": sds((B, 1), jnp.int32),
+           "pos": sds((B,), jnp.int32),
+           "cache": cache}
+    if cfg.enc_dec:
+        out["enc_out"] = sds((B, WHISPER_DECODE_ENC_LEN, cfg.d_model),
+                             cfg.dtype)
+    return out
+
+
+def abstract_params(cfg: ModelConfig):
+    return LM(cfg).abstract_init()
+
+
+def token_count(shape: str) -> int:
+    info = SHAPES[shape]
+    return info["seq"] * info["batch"]

@@ -1,0 +1,2 @@
+from .common import ModelConfig, set_mesh, shard  # noqa: F401
+from .lm import LM  # noqa: F401

@@ -1,0 +1,140 @@
+"""GQA attention: training (causal / sliding window), prefill, and decode.
+
+Decode uses a flash-decoding-style *split-KV* merge so the sequence axis of
+the KV cache can shard over the "model" mesh axis even when n_kv_heads <
+model-parallel degree (common for GQA: kv=8 on a 16-way TP mesh).  Each
+shard computes a partial (max, sumexp, out) over its KV slice; merging is a
+tiny LSE combine -- GSPMD lowers it to an all-reduce of (B, H, 1)-sized
+stats instead of all-gathering the 32k-long cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, init_dense, rms_norm, rotary, shard
+
+
+def init_attention(key, cfg: ModelConfig, d_model: int | None = None) -> dict:
+    d = d_model or cfg.d_model
+    hd = cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": init_dense(ks[0], d, cfg.n_heads * hd, cfg.dtype),
+        "wk": init_dense(ks[1], d, cfg.n_kv_heads * hd, cfg.dtype),
+        "wv": init_dense(ks[2], d, cfg.n_kv_heads * hd, cfg.dtype),
+        "wo": init_dense(ks[3], cfg.n_heads * hd, d, cfg.dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros(hd, cfg.dtype)
+        p["k_norm"] = jnp.zeros(hd, cfg.dtype)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    sections = cfg.mrope_sections if cfg.mrope else None
+    if positions is not None:
+        q = rotary(q, positions, cfg.rope_theta, sections)
+        k = rotary(k, positions, cfg.rope_theta, sections)
+    q = shard(q, "data", None, "model", None)
+    return q, k, v
+
+
+def attention_train(p, cfg: ModelConfig, x, positions, causal: bool = True,
+                    window: int = 0, kv: tuple | None = None):
+    """Full-sequence attention.  kv overrides the keys/values source
+    (cross-attention); window > 0 restricts to a local band."""
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if kv is not None:
+        k, v = kv
+    rep = cfg.n_heads // cfg.n_kv_heads
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+    scores = scores.astype(jnp.float32)
+    Sk = k.shape[1]
+    if causal and kv is None:
+        qi = jnp.arange(S)[:, None]
+        ki = jnp.arange(Sk)[None, :]
+        mask = qi >= ki
+        if window:
+            mask &= (qi - ki) < window
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B, S, -1)
+    out = out @ p["wo"]
+    return shard(out, "data", None, None)
+
+
+def attention_prefill(p, cfg: ModelConfig, x, positions, window: int = 0):
+    """Causal attention that also returns the KV cache for decode."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = attention_train(p, cfg, x, positions, causal=True, window=window)
+    return out, (k, v)
+
+
+def attention_decode(p, cfg: ModelConfig, x, pos, cache, window: int = 0,
+                     ring: bool = False):
+    """One-token decode.  x: (B, 1, D); cache: (k, v) of (B, S_max, kv, hd);
+    pos: (B,) current *absolute* position.  Returns (out, new_cache).
+
+    ``ring=True`` treats the cache as a circular buffer of the last S_max
+    tokens (windowed attention at 524k context: S_max = window).
+
+    KV sequence axis is sharded over "model" (split-KV); the LSE merge makes
+    the partial-softmax combine exact.
+    """
+    B = x.shape[0]
+    hd = cfg.hd
+    q, k_new, v_new = _project_qkv(p, cfg, x, pos[:, None])
+    k_cache, v_cache = cache
+    Smax = k_cache.shape[1]
+    wpos = pos % jnp.int32(Smax) if ring else pos
+    idx = wpos[:, None, None, None]
+    onehot = (jnp.arange(Smax)[None, :, None, None] == idx)
+    # Split-KV decode: the cache stays sharded over "model" on its SEQUENCE
+    # axis end-to-end.  q and k_new/v_new are tiny -- constrain them
+    # model-replicated so no op ever demands a head-sharded view of the
+    # cache (which would all-gather 100s of GB; observed as SPMD
+    # 'involuntary full rematerialization').  GQA is a grouped einsum, so
+    # the heads/kv repeat is never materialized either.
+    k_new = shard(k_new, "data", None, None, None)
+    v_new = shard(v_new, "data", None, None, None)
+    q = shard(q, "data", None, None, None)
+    k_cache = jnp.where(onehot, k_new, k_cache)
+    v_cache = jnp.where(onehot, v_new, v_cache)
+    k_cache = shard(k_cache, "data", "model", None, None)
+    v_cache = shard(v_cache, "data", "model", None, None)
+
+    rep = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, cfg.n_kv_heads, rep, hd)       # (B, g, r, hd)
+    scores = jnp.einsum("bgrd,bsgd->bgrs", qg, k_cache) / np.sqrt(hd)
+    scores = scores.astype(jnp.float32)              # (B, g, r, Smax)
+    ki = jnp.arange(Smax)[None, None, None, :]
+    if ring:
+        # all slots valid once the ring is full; before that, only <= pos
+        pb = pos[:, None, None, None]
+        valid = (ki <= pb) | (pb >= Smax)
+    else:
+        pb = pos[:, None, None, None]
+        valid = ki <= pb
+        if window:
+            valid &= (pb - ki) < window
+    scores = jnp.where(valid, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bgrs,bsgd->bgrd", att, v_cache).reshape(B, 1, -1)
+    out = out @ p["wo"]
+    return out, (k_cache, v_cache)

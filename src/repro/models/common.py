@@ -1,0 +1,204 @@
+"""Shared model plumbing: config, norms, rotary embeddings, sharding helper.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Homogeneous layer
+stacks are *stacked* along a leading layer axis and executed with
+``jax.lax.scan`` so the lowered HLO stays one-layer-sized regardless of
+depth (80-layer configs compile in seconds).
+
+Sharding is expressed with ``shard(x, *axes)``: a no-op without a mesh (CPU
+smoke tests), a ``with_sharding_constraint`` under the production mesh.
+Axis vocabulary: "data" (batch; the pod axis is folded in for DP),
+"model" (TP/EP), None (replicated).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"        # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab: int = 1024
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    mrope: bool = False          # qwen2-vl M-RoPE (3-section rotary)
+    mrope_sections: tuple = (16, 24, 24)
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 1
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    # hybrid (RG-LRU + local attention, Griffin pattern: 2 recurrent : 1 attn)
+    window: int = 0              # local attention window (0 = full causal)
+    lru_width: int = 0
+    conv_width: int = 4
+    # SSM (Mamba-2 SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 64
+    # encoder-decoder (whisper)
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    frontend: str = "none"       # none | audio_stub | patch_stub
+    # numerics
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    scan_unroll: bool = False    # roofline mode: python-unroll layer stacks
+                                 # so XLA cost_analysis counts every layer
+    seq_shard: bool = False      # sequence-parallel residual stream: shard S
+                                 # over "model" between blocks (TP collectives
+                                 # become reduce-scatter/all-gather pairs)
+    remat_policy: str = "full"   # full | dots (save matmul outputs, recompute
+                                 # only cheap elementwise ops in the backward)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embeddings + blocks), for roofline."""
+        d, f = self.d_model, self.d_ff
+        emb = self.vocab * d
+        if self.family == "ssm":
+            di = self.ssm_expand * d
+            nh = di // self.ssm_head_dim
+            per = d * (2 * di + 2 * self.ssm_state + nh) + di * d \
+                + self.conv_width * (di + 2 * self.ssm_state) + di
+            return emb + self.n_layers * per + emb   # tied-ish head counted once
+        att = d * self.hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * self.hd * d
+        if self.family == "moe":
+            fe = self.d_ff_expert or f
+            ffn = (self.n_experts * 3 * d * fe
+                   + self.n_shared_experts * 3 * d * fe
+                   + d * self.n_experts)
+        else:
+            ffn = 3 * d * f
+        per = att + ffn + 2 * d
+        n_blocks = self.n_layers + (self.n_enc_layers if self.enc_dec else 0)
+        cross = d * self.hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * self.hd * d if self.enc_dec else 0
+        return emb + n_blocks * per + self.n_layers * cross + emb
+
+    def n_active_params(self) -> int:
+        """Active (per-token) params -- MoE counts top_k + shared experts."""
+        if self.family != "moe":
+            return self.n_params()
+        d = self.d_model
+        fe = self.d_ff_expert or self.d_ff
+        att = d * self.hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * self.hd * d
+        ffn = (self.top_k + self.n_shared_experts) * 3 * d * fe \
+            + d * self.n_experts
+        return 2 * self.vocab * d + self.n_layers * (att + ffn + 2 * d)
+
+
+# ---------------------------------------------------------------------------
+# sharding helper
+# ---------------------------------------------------------------------------
+
+_MESH: list = [None]     # active mesh (set by launch code)
+
+
+def set_mesh(mesh) -> None:
+    _MESH[0] = mesh
+
+
+def get_mesh():
+    return _MESH[0]
+
+
+def shard(x, *axes):
+    """Apply a sharding constraint if a mesh is active; else identity.
+
+    ``axes`` name one mesh axis (or None) per array dim; "data" expands to
+    ("pod", "data") when the mesh has a pod axis (DP across pods).
+    """
+    mesh = _MESH[0]
+    if mesh is None:
+        return x
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    spec = []
+    for dim, a in zip(x.shape, axes):
+        if a == "data" and "pod" in names:
+            a = ("pod", "data")
+        if a is not None:
+            req = a if isinstance(a, tuple) else (a,)
+            total = 1
+            for r in req:
+                total *= sizes.get(r, 1)
+            if dim % total != 0:        # non-divisible: replicate this dim
+                a = None
+        spec.append(a)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def rotary(x, positions, theta: float, sections: tuple | None = None):
+    """Apply RoPE.  x: (B, S, H, hd); positions: (B, S) int32.
+
+    With ``sections`` (M-RoPE stub), head_dim/2 frequency slots are split
+    into (t, h, w) groups that would receive separate position streams; the
+    stub feeds the same positions to all three (text-degenerate), which is
+    exactly Qwen2-VL's behaviour on pure text.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freq_exp = jnp.arange(half, dtype=jnp.float32) / half
+    inv_freq = theta ** -freq_exp
+    ang = positions[..., None].astype(jnp.float32) * inv_freq   # (B,S,half)
+    if sections is not None:
+        # M-RoPE: same angles per section in the text-only stub
+        ang = ang
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softmax_cross_entropy(logits, labels):
+    """Token CE with fp32 logits; labels < 0 are masked."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - ll) * mask) / jnp.maximum(mask.sum(), 1.0)

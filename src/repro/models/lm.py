@@ -1,0 +1,360 @@
+"""Unified causal-LM assembly for all assigned architectures.
+
+One class, :class:`LM`, builds dense / MoE / hybrid (RG-LRU) / SSM (SSD) /
+enc-dec (whisper) / VLM-backbone stacks from a :class:`ModelConfig`.
+Homogeneous stacks are scanned (``jax.lax.scan`` over stacked params) so the
+HLO is one-layer-sized; the hybrid arch scans (rec, rec, attn) superblocks.
+Blocks are remat-wrapped for training when ``cfg.remat``.
+
+Entry points (all pure functions of pytrees -- pjit-able as-is):
+  init(key) / abstract_init()             params
+  loss(params, batch)                     train objective (CE, fp32 logits)
+  prefill(params, batch)                  logits + decode cache
+  decode_step(params, tokens, pos, cache) one-token serve step
+  init_cache(batch, s_max)                cache pytree (KV / recurrent state)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention_decode, attention_train, init_attention)
+from .common import (ModelConfig, init_dense, rms_norm, shard,
+                     softmax_cross_entropy)
+from .ffn import ffn, init_ffn, init_moe, moe
+from .rglru import (init_rglru_block, init_rglru_state, rglru_decode,
+                    rglru_train)
+from .ssd import init_ssd_block, init_ssd_state, ssd_decode, ssd_train
+
+
+# ---------------------------------------------------------------------------
+# block bodies
+# ---------------------------------------------------------------------------
+
+def _mixer_train(cfg, p, x, pos, window, kind):
+    if kind == "attn":
+        return attention_train(p["attn"], cfg, rms_norm(x, p["ln1"]), pos,
+                               causal=True, window=window)
+    if kind == "rec":
+        return rglru_train(p["rec"], cfg, rms_norm(x, p["ln1"]))
+    if kind == "ssd":
+        return ssd_train(p["ssd"], cfg, rms_norm(x, p["ln1"]))
+    raise ValueError(kind)
+
+
+def _mixer_decode(cfg, p, x, pos, cache, window, kind, ring=False):
+    if kind == "attn":
+        return attention_decode(p["attn"], cfg, rms_norm(x, p["ln1"]), pos,
+                                cache, window=window, ring=ring)
+    if kind == "rec":
+        return rglru_decode(p["rec"], cfg, rms_norm(x, p["ln1"]), cache)
+    if kind == "ssd":
+        return ssd_decode(p["ssd"], cfg, rms_norm(x, p["ln1"]), cache)
+    raise ValueError(kind)
+
+
+def _ffn_apply(cfg, p, x):
+    if cfg.family == "moe" and "moe" in p:
+        return moe(p["moe"], cfg, rms_norm(x, p["ln2"]))
+    if "ffn" in p:
+        return ffn(p["ffn"], rms_norm(x, p["ln2"]))
+    return 0.0                     # ssd blocks have no separate FFN
+
+
+def _block_train(cfg, p, x, pos, window, kind):
+    x = x + _mixer_train(cfg, p, x, pos, window, kind)
+    upd = _ffn_apply(cfg, p, x)
+    x = x + upd if not isinstance(upd, float) else x
+    if cfg.seq_shard:
+        # sequence-parallel residual: the TP all-reduce decomposes into
+        # reduce-scatter here + all-gather at the next block's matmuls
+        x = shard(x, "data", "model", None)
+    return x
+
+
+def _block_decode(cfg, p, x, pos, cache, window, kind, ring=False):
+    mix, cache = _mixer_decode(cfg, p, x, pos, cache, window, kind, ring)
+    x = x + mix
+    upd = _ffn_apply(cfg, p, x)
+    return (x + upd if not isinstance(upd, float) else x), cache
+
+
+def _init_block(key, cfg, kind, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {"ln1": jnp.zeros(cfg.d_model, cfg.dtype)}
+    if kind == "attn":
+        p["attn"] = init_attention(ks[0], cfg)
+    elif kind == "rec":
+        p["rec"] = init_rglru_block(ks[0], cfg)
+    elif kind == "ssd":
+        p["ssd"] = init_ssd_block(ks[0], cfg)
+    if kind != "ssd":
+        p["ln2"] = jnp.zeros(cfg.d_model, cfg.dtype)
+        if cfg.family == "moe":
+            p["moe"] = init_moe(ks[1], cfg)
+        else:
+            p["ffn"] = init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.dtype)
+    if cross:
+        p["ln_x"] = jnp.zeros(cfg.d_model, cfg.dtype)
+        p["xattn"] = init_attention(ks[2], cfg)
+    return p
+
+
+def _stack(key, n: int, make):
+    """Init n blocks and stack leaves on a leading layer axis."""
+    keys = jax.random.split(key, max(n, 1))
+    blocks = [make(keys[i]) for i in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks) if n else None
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        # hybrid pattern: Griffin's (rec, rec, attn) period
+        if cfg.family == "hybrid":
+            self.n_super = cfg.n_layers // 3
+            self.n_tail = cfg.n_layers - 3 * self.n_super
+        self._kind = {"ssm": "ssd"}.get(cfg.family, "attn")
+
+    # -- init -----------------------------------------------------------
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        p = {
+            "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(cfg.dtype),
+            "norm_f": jnp.zeros(cfg.d_model, cfg.dtype),
+            "lm_head": init_dense(ks[1], cfg.d_model, cfg.vocab, cfg.dtype),
+        }
+        if cfg.family == "hybrid":
+            def make_super(k):
+                k1, k2, k3 = jax.random.split(k, 3)
+                return {"rec1": _init_block(k1, cfg, "rec"),
+                        "rec2": _init_block(k2, cfg, "rec"),
+                        "attn": _init_block(k3, cfg, "attn")}
+            p["super"] = _stack(ks[2], self.n_super, make_super)
+            if self.n_tail:
+                p["tail"] = _stack(ks[3], self.n_tail,
+                                   lambda k: _init_block(k, cfg, "rec"))
+        elif cfg.enc_dec:
+            p["enc"] = _stack(ks[2], cfg.n_enc_layers,
+                              lambda k: _init_block(k, cfg, "attn"))
+            p["dec"] = _stack(ks[3], cfg.n_layers,
+                              lambda k: _init_block(k, cfg, "attn", cross=True))
+            p["enc_norm"] = jnp.zeros(cfg.d_model, cfg.dtype)
+        else:
+            kind = self._kind
+            p["blocks"] = _stack(ks[2], cfg.n_layers,
+                                 lambda k: _init_block(k, cfg, kind))
+        return p
+
+    def abstract_init(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # -- shared forward pieces -------------------------------------------
+    def _scan_train(self, stacked, x, pos, fn):
+        cfg = self.cfg
+        body = fn
+        if cfg.remat:
+            if cfg.remat_policy == "dots":
+                body = jax.checkpoint(
+                    fn, policy=jax.checkpoint_policies.dots_saveable)
+            else:
+                body = jax.checkpoint(fn)
+        if cfg.scan_unroll:
+            n = jax.tree.leaves(stacked)[0].shape[0]
+            for i in range(n):
+                x = body(jax.tree.map(lambda a: a[i], stacked), x)
+            return x
+
+        def step(carry, p):
+            return body(p, carry), None
+
+        x, _ = jax.lax.scan(step, x, stacked)
+        return x
+
+    def _embed(self, params, tokens):
+        x = params["embed"][tokens]
+        return shard(x.astype(self.cfg.dtype), "data", None, None)
+
+    def _logits(self, params, x):
+        out = x @ params["lm_head"]
+        return shard(out, "data", None, "model")
+
+    # -- training forward --------------------------------------------------
+    def forward(self, params, batch):
+        cfg = self.cfg
+        if cfg.enc_dec:
+            return self._forward_encdec(params, batch)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x = self._embed(params, tokens)
+        if "embeds" in batch:          # modality stub: prepend is implicit --
+            x = x + batch["embeds"].astype(cfg.dtype)
+        if cfg.family == "hybrid":
+            def super_fn(p, h):
+                h = _block_train(cfg, p["rec1"], h, pos, 0, "rec")
+                h = _block_train(cfg, p["rec2"], h, pos, 0, "rec")
+                return _block_train(cfg, p["attn"], h, pos, cfg.window, "attn")
+            x = self._scan_train(params["super"], x, pos, super_fn)
+            if self.n_tail:
+                x = self._scan_train(
+                    params["tail"], x, pos,
+                    lambda p, h: _block_train(cfg, p, h, pos, 0, "rec"))
+        else:
+            kind = self._kind
+            window = cfg.window if cfg.family == "hybrid" else 0
+            x = self._scan_train(
+                params["blocks"], x, pos,
+                lambda p, h: _block_train(cfg, p, h, pos, window, kind))
+        x = rms_norm(x, params["norm_f"])
+        return self._logits(params, x)
+
+    def encode(self, params, enc_embeds):
+        """Encoder stack (enc-dec models): frame embeddings -> memory."""
+        cfg = self.cfg
+        enc_x = shard(enc_embeds.astype(cfg.dtype), "data", None, None)
+        B, Se, _ = enc_x.shape
+        enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None],
+                                   (B, Se))
+
+        def enc_fn(p, h):
+            h = h + attention_train(p["attn"], cfg, rms_norm(h, p["ln1"]),
+                                    enc_pos, causal=False)
+            return h + ffn(p["ffn"], rms_norm(h, p["ln2"]))
+        enc_out = self._scan_train(params["enc"], enc_x, enc_pos, enc_fn)
+        return rms_norm(enc_out, params["enc_norm"])
+
+    def _forward_encdec(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["enc_embeds"])
+        B = enc_out.shape[0]
+        tokens = batch["tokens"]
+        S = tokens.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x = self._embed(params, tokens)
+
+        # cross K/V are recomputed per block inside the scan from enc_out
+        def dec_fn(p, h):
+            h = h + attention_train(p["attn"], cfg, rms_norm(h, p["ln1"]),
+                                    pos, causal=True)
+            from .attention import _project_qkv
+            _, k, v = _project_qkv(p["xattn"], cfg, enc_out, None)
+            h = h + attention_train(p["xattn"], cfg, rms_norm(h, p["ln_x"]),
+                                    pos, causal=False, kv=(k, v))
+            return h + ffn(p["ffn"], rms_norm(h, p["ln2"]))
+        x = self._scan_train(params["dec"], x, pos, dec_fn)
+        x = rms_norm(x, params["norm_f"])
+        return self._logits(params, x)
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch)
+        return softmax_cross_entropy(logits, batch["labels"])
+
+    # -- serving ------------------------------------------------------------
+    def init_cache(self, batch: int, s_max: int):
+        cfg = self.cfg
+        hd = cfg.hd if cfg.n_heads else 0
+
+        def kv():
+            shape = (batch, s_max, cfg.n_kv_heads, hd)
+            return (jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype))
+
+        def stack_state(n, make):
+            states = [make() for _ in range(n)]
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+        if cfg.family == "hybrid":
+            win = min(cfg.window or s_max, s_max)
+            cache = {"super": stack_state(self.n_super, lambda: {
+                "rec1": init_rglru_state(cfg, batch),
+                "rec2": init_rglru_state(cfg, batch),
+                "attn": (jnp.zeros((batch, win, cfg.n_kv_heads, hd), cfg.dtype),
+                         jnp.zeros((batch, win, cfg.n_kv_heads, hd), cfg.dtype)),
+            })}
+            if self.n_tail:
+                cache["tail"] = stack_state(
+                    self.n_tail, lambda: init_rglru_state(cfg, batch))
+            return cache
+        if cfg.family == "ssm":
+            return {"blocks": stack_state(cfg.n_layers,
+                                          lambda: init_ssd_state(cfg, batch))}
+        if cfg.enc_dec:
+            return {"dec": stack_state(cfg.n_layers, kv), "cross": None}
+        return {"blocks": stack_state(cfg.n_layers, kv)}
+
+    def decode_step(self, params, tokens, pos, cache, enc_out=None):
+        """tokens: (B, 1) int32, pos: (B,) int32.  Returns (logits, cache)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+
+        def scan_decode(init, stacked_p, stacked_c, fn):
+            if cfg.scan_unroll:
+                n = jax.tree.leaves(stacked_p)[0].shape[0]
+                h = init
+                outs = []
+                for i in range(n):
+                    h, c2 = fn(jax.tree.map(lambda a: a[i], stacked_p), h,
+                               jax.tree.map(lambda a: a[i], stacked_c))
+                    outs.append(c2)
+                return h, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+            def step(carry, pc):
+                p, c = pc
+                h, c2 = fn(p, carry, c)
+                return h, c2
+            return jax.lax.scan(step, init, (stacked_p, stacked_c))
+
+        if cfg.family == "hybrid":
+            def super_fn(p, h, c):
+                h, c1 = _block_decode(cfg, p["rec1"], h, pos, c["rec1"], 0, "rec")
+                h, c2 = _block_decode(cfg, p["rec2"], h, pos, c["rec2"], 0, "rec")
+                h, c3 = _block_decode(cfg, p["attn"], h, pos, c["attn"],
+                                      0, "attn", ring=True)
+                return h, {"rec1": c1, "rec2": c2, "attn": c3}
+            x, new_super = scan_decode(x, params["super"], cache["super"],
+                                       super_fn)
+            new_cache = {"super": new_super}
+            if self.n_tail:
+                x, new_tail = scan_decode(
+                    x, params["tail"], cache["tail"],
+                    lambda p, h, c: _block_decode(cfg, p, h, pos, c, 0, "rec"))
+                new_cache["tail"] = new_tail
+        elif cfg.enc_dec:
+            def dec_fn(p, h, c):
+                # order mirrors training: self-attn -> cross-attn -> FFN
+                mix, c2 = _mixer_decode(cfg, p, h, pos, c, 0, "attn")
+                h = h + mix
+                from .attention import _project_qkv
+                _, k, v = _project_qkv(p["xattn"], cfg, enc_out, None)
+                h = h + attention_train(p["xattn"], cfg,
+                                        rms_norm(h, p["ln_x"]), pos[:, None],
+                                        causal=False, kv=(k, v))
+                h = h + ffn(p["ffn"], rms_norm(h, p["ln2"]))
+                return h, c2
+            x, new_dec = scan_decode(x, params["dec"], cache["dec"], dec_fn)
+            new_cache = {"dec": new_dec, "cross": None}
+        else:
+            kind = self._kind
+            x, new_blocks = scan_decode(
+                x, params["blocks"], cache["blocks"],
+                lambda p, h, c: _block_decode(cfg, p, h, pos, c, 0, kind))
+            new_cache = {"blocks": new_blocks}
+        x = rms_norm(x, params["norm_f"])
+        return self._logits(params, x), new_cache
+
+    def prefill(self, params, batch):
+        """Process a prompt; returns last-position logits.  (The dry-run
+        lowers this as the prefill cell; cache construction for subsequent
+        decode reuses forward's per-layer K/V via decode-step warmup in the
+        serve example.)"""
+        logits = self.forward(params, batch)
+        return logits[:, -1:, :]

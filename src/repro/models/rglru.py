@@ -1,0 +1,93 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    r_t = sigmoid(W_r x_t)            recurrence gate
+    i_t = sigmoid(W_i x_t)            input gate
+    a_t = a ^ (c * r_t)               a = sigmoid(Lambda), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training runs the diagonal recurrence with ``jax.lax.associative_scan``
+(log-depth); decode is the single-step update -- constant state, which is
+what makes the hybrid arch runnable at 524k context.  The full recurrent
+block is Griffin's: conv1d(4) -> RG-LRU, gated by a GeLU branch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, init_dense, shard
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    return {
+        "wx": init_dense(ks[0], d, w, cfg.dtype),        # input branch
+        "wgate": init_dense(ks[1], d, w, cfg.dtype),     # GeLU gate branch
+        "wo": init_dense(ks[2], w, d, cfg.dtype),
+        "wr": init_dense(ks[3], w, w, cfg.dtype),
+        "wi": init_dense(ks[4], w, w, cfg.dtype),
+        "lam": jnp.asarray(
+            jax.random.uniform(ks[5], (w,), jnp.float32, 2.0, 6.0)),
+        "conv": (jax.random.normal(ks[6], (cfg.conv_width, w), jnp.float32)
+                 * 0.02).astype(cfg.dtype),
+    }
+
+
+def _conv1d_causal(x, w):
+    """Depthwise causal conv: x (B, S, W), w (K, W)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + x.shape[1], :] * w[i] for i in range(K))
+    return out
+
+
+def _gates(p, xb):
+    r = jax.nn.sigmoid((xb @ p["wr"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xb @ p["wi"]).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(p["lam"])          # log a_t  (<0)
+    a = jnp.exp(log_a)
+    gated_x = (i * xb.astype(jnp.float32)) * jnp.sqrt(
+        jnp.maximum(1.0 - a * a, 1e-12))
+    return a, gated_x
+
+
+def rglru_train(p, cfg: ModelConfig, x):
+    """x: (B, S, D) -> (B, S, D) via associative scan over S."""
+    xb = _conv1d_causal(x @ p["wx"], p["conv"])
+    a, gx = _gates(p, xb)                                # (B, S, W) fp32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    h = h.astype(x.dtype)
+    out = (h * jax.nn.gelu(x @ p["wgate"])) @ p["wo"]
+    return shard(out, "data", None, None)
+
+
+def rglru_decode(p, cfg: ModelConfig, x, state):
+    """One step.  x: (B, 1, D); state: {"h": (B, W) fp32,
+    "conv": (B, K-1, W)}.  Returns (out, new_state)."""
+    xw = (x @ p["wx"])[:, 0, :]                          # (B, W)
+    K = p["conv"].shape[0]
+    hist = jnp.concatenate([state["conv"], xw[:, None, :]], axis=1)
+    xb = jnp.einsum("bkw,kw->bw", hist, p["conv"])
+    new_conv = hist[:, 1:, :]
+    a, gx = _gates(p, xb[:, None, :])
+    h = a[:, 0] * state["h"] + gx[:, 0]
+    out = ((h.astype(x.dtype) * jax.nn.gelu(x[:, 0] @ p["wgate"]))
+           @ p["wo"])[:, None, :]
+    return out, {"h": h, "conv": new_conv}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w), cfg.dtype)}

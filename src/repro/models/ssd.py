@@ -1,0 +1,147 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Training uses the chunked SSD algorithm: within-chunk attention-like
+matmuls plus an across-chunk state recurrence carried by ``lax.scan`` --
+the matmul-dominant formulation that suits the MXU.  Decode is the exact
+single-step SSM update with constant state (B, H, hd, N), which is why the
+ssm arch runs the 524k-context cell.
+
+Layout follows Mamba-2: d_inner = expand * d_model, heads = d_inner /
+head_dim, scalar A per head, B/C shared across heads (n_groups = 1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, init_dense, shard
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_head_dim
+    return di, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssd_block(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, nh, hd, N = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": init_dense(ks[0], d, 2 * di + 2 * N + nh, cfg.dtype),
+        "out_proj": init_dense(ks[1], di, d, cfg.dtype),
+        "conv": (jax.random.normal(ks[2], (cfg.conv_width, di + 2 * N),
+                                   jnp.float32) * 0.02).astype(cfg.dtype),
+        "A_log": jnp.log(jax.random.uniform(ks[3], (nh,), jnp.float32, 1., 16.)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((di,), cfg.dtype),
+    }
+
+
+def _split_proj(p, cfg, x):
+    di, nh, hd, N = _dims(cfg)
+    z_xbc_dt = x @ p["in_proj"]
+    z = z_xbc_dt[..., :di]
+    xbc = z_xbc_dt[..., di: 2 * di + 2 * N]
+    dt = jax.nn.softplus(
+        z_xbc_dt[..., 2 * di + 2 * N:].astype(jnp.float32) + p["dt_bias"])
+    return z, xbc, dt
+
+
+def _conv(x, w):
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(pad[:, i: i + x.shape[1], :] * w[i] for i in range(K))
+
+
+def ssd_train(p, cfg: ModelConfig, x):
+    """x: (B, S, D) -> (B, S, D); S must be a multiple of ssm_chunk."""
+    Bsz, S, _ = x.shape
+    di, nh, hd, N = _dims(cfg)
+    Q = cfg.ssm_chunk
+    nc = S // Q
+    z, xbc, dt = _split_proj(p, cfg, x)
+    xbc = jax.nn.silu(_conv(xbc, p["conv"]))
+    xs = xbc[..., :di].reshape(Bsz, S, nh, hd)
+    Bv = xbc[..., di: di + N]                                # (B, S, N)
+    Cv = xbc[..., di + N:]                                   # (B, S, N)
+
+    A = -jnp.exp(p["A_log"])                                 # (nh,) < 0
+    dA = dt * A                                              # (B, S, nh)
+    xs_dt = (xs.astype(jnp.float32) * dt[..., None])
+
+    # chunk views
+    dA_c = dA.reshape(Bsz, nc, Q, nh)
+    cums = jnp.cumsum(dA_c, axis=2)                          # within-chunk
+    x_c = xs_dt.reshape(Bsz, nc, Q, nh, hd)
+    B_c = Bv.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    C_c = Cv.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+
+    # (1) within-chunk (diagonal block): causal decay kernel.
+    # Mask BEFORE exp: future positions have positive exponents that
+    # overflow, and where(mask, exp(x), 0) still propagates NaN grads.
+    seg = cums[:, :, :, None, :] - cums[:, :, None, :, :]    # (B,c,Q,Q,nh)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    L = jnp.exp(jnp.where(causal, seg, -1e30))
+    CB = jnp.einsum("bcqn,bckn->bcqk", C_c, B_c)
+    y_diag = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", CB, L, x_c)
+
+    # (2) chunk states + across-chunk recurrence
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)        # (B,c,Q,nh)
+    states = jnp.einsum("bckn,bckh,bckhp->bchnp",
+                        B_c, decay_to_end, x_c)              # (B,c,nh,N,hd)
+    chunk_decay = jnp.exp(cums[:, :, -1, :])                 # (B,c,nh)
+
+    def scan_fn(h, inp):
+        st, dec = inp
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+    init = jnp.zeros((Bsz, nh, N, hd), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                 # (B,c,nh,N,hd)
+
+    # (3) contribution of carried state to each position
+    decay_from_start = jnp.exp(cums)                         # (B,c,Q,nh)
+    y_off = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                       C_c, decay_from_start, h_prev)
+
+    y = (y_diag + y_off).reshape(Bsz, S, nh, hd)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)                                   # gated norm-ish
+    from .common import rms_norm
+    y = rms_norm(y, p["norm"])
+    return shard(y @ p["out_proj"], "data", None, None)
+
+
+def ssd_decode(p, cfg: ModelConfig, x, state):
+    """One step.  state: {"h": (B, nh, N, hd) fp32, "conv": (B, K-1, di+2N)}."""
+    di, nh, hd, N = _dims(cfg)
+    z, xbc, dt = _split_proj(p, cfg, x)                      # (B,1,...)
+    hist = jnp.concatenate([state["conv"], xbc], axis=1)
+    xbc1 = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, p["conv"]))
+    new_conv = hist[:, 1:, :]
+    xs = xbc1[:, :di].reshape(-1, nh, hd).astype(jnp.float32)
+    Bv = xbc1[:, di: di + N].astype(jnp.float32)
+    Cv = xbc1[:, di + N:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[:, 0] * A)                               # (B, nh)
+    h = state["h"] * dA[..., None, None] + jnp.einsum(
+        "bn,bhp,bh->bhnp", Bv, xs, dt[:, 0])
+    y = jnp.einsum("bn,bhnp->bhp", Cv, h)
+    y = y + xs * p["D"][None, :, None]
+    y = y.reshape(-1, 1, di).astype(x.dtype) * jax.nn.silu(z)
+    from .common import rms_norm
+    y = rms_norm(y, p["norm"])
+    return y @ p["out_proj"], {"h": h, "conv": new_conv}
+
+
+def init_ssd_state(cfg: ModelConfig, batch: int) -> dict:
+    di, nh, hd, N = _dims(cfg)
+    return {"h": jnp.zeros((batch, nh, N, hd), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * N),
+                              cfg.dtype)}

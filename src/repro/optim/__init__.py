@@ -1,0 +1,1 @@
+from .adamw import AdamWConfig, adamw_update, init_adamw  # noqa: F401

@@ -1,0 +1,86 @@
+"""AdamW over parameter pytrees, with optional int8-quantized moments.
+
+The int8 moment store is the paper's GH-packing idea transplanted to the
+optimizer: quantize small values and pack them into narrow integers to cut
+memory/bandwidth of a hot data structure.  Each moment tensor is stored as
+(int8 q, fp32 per-tensor scale); dequantize-update-requantize per step.
+At 400B params this saves ~2.4TB of optimizer HBM across a 512-chip job.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    quantize_moments: bool = False
+
+
+def _q(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-20) / 127.0
+    return (jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8),
+            scale.astype(jnp.float32))
+
+
+def _dq(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def init_adamw(params, cfg: AdamWConfig):
+    def zero_like(p):
+        if cfg.quantize_moments:
+            return {"q": jnp.zeros(p.shape, jnp.int8),
+                    "scale": jnp.zeros((), jnp.float32)}
+        return jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zero_like, params),
+        "v": jax.tree.map(zero_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        if cfg.quantize_moments:
+            m_f = _dq(m["q"], m["scale"])
+            v_f = _dq(v["q"], v["scale"])
+        else:
+            m_f, v_f = m, v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        update = (m_f / c1) / (jnp.sqrt(v_f / c2) + cfg.eps)
+        new_p = (p.astype(jnp.float32)
+                 - cfg.lr * (update + cfg.weight_decay * p.astype(jnp.float32)))
+        if cfg.quantize_moments:
+            mq, ms = _q(m_f)
+            vq, vs = _q(v_f)
+            return new_p.astype(p.dtype), {"q": mq, "scale": ms}, \
+                {"q": vq, "scale": vs}
+        return new_p.astype(p.dtype), m_f, v_f
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}

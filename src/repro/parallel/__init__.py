@@ -1,0 +1,2 @@
+from .sharding import (batch_specs, cache_specs, opt_specs, param_shardings,  # noqa: F401
+                       param_specs)

@@ -1,0 +1,2 @@
+from .fault import (Heartbeat, ResilientLoop, StragglerError,  # noqa: F401
+                    StragglerPolicy)

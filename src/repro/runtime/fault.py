@@ -1,0 +1,130 @@
+"""Fault tolerance + straggler mitigation for the training loop.
+
+Designed for the 1000+ node regime where *something* is always failing:
+
+* :class:`ResilientLoop` -- wraps the step function; on device/runtime
+  errors it restores the latest checkpoint and replays.  Retries use
+  exponential backoff; a persistent failure (same step failing
+  ``max_retries`` times) raises to the launcher, which reschedules the job
+  on a healed slice (elastic restore makes any mesh shape valid).
+
+* :class:`Heartbeat` -- thread that stamps a file every ``interval``; an
+  external supervisor (or the provided ``watch`` classmethod) detects a
+  wedged process by mtime and kills/restarts.  This is the standard
+  TPU-pod babysitter pattern.
+
+* :class:`StragglerPolicy` -- per-step wall-time tracker.  Steps are SPMD
+  (no per-device skew visible from inside), so mitigation acts at the step
+  level: a step exceeding ``factor`` x the trailing median marks the slice
+  degraded; after ``tolerance`` marks the loop checkpoints and exits with a
+  distinct code so the launcher can migrate off the slow slice.  At the
+  data layer, the loader's bounded prefetch queue stops a slow input host
+  from stalling the collective (skip-slow-shard).
+"""
+
+from __future__ import annotations
+
+import collections
+import os
+import statistics
+import threading
+import time
+
+
+class StragglerError(RuntimeError):
+    pass
+
+
+class Heartbeat:
+    def __init__(self, path: str, interval: float = 10.0):
+        self.path = path
+        self.interval = interval
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        while not self._stop.wait(self.interval):
+            self.beat()
+
+    def beat(self):
+        with open(self.path, "w") as f:
+            f.write(str(time.time()))
+
+    def start(self):
+        self.beat()
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+
+    @staticmethod
+    def is_alive(path: str, timeout: float) -> bool:
+        try:
+            return time.time() - os.path.getmtime(path) < timeout
+        except OSError:
+            return False
+
+
+class StragglerPolicy:
+    def __init__(self, factor: float = 2.5, tolerance: int = 5,
+                 window: int = 50):
+        self.factor = factor
+        self.tolerance = tolerance
+        self.times = collections.deque(maxlen=window)
+        self.strikes = 0
+
+    def observe(self, step_seconds: float) -> None:
+        if len(self.times) >= 10:
+            med = statistics.median(self.times)
+            if step_seconds > self.factor * med:
+                self.strikes += 1
+                if self.strikes >= self.tolerance:
+                    raise StragglerError(
+                        f"step {step_seconds:.2f}s > {self.factor}x median "
+                        f"{med:.2f}s for {self.strikes} steps: slice degraded")
+            else:
+                self.strikes = max(0, self.strikes - 1)
+        self.times.append(step_seconds)
+
+
+class ResilientLoop:
+    """step_fn(state, batch) -> state; save_fn(step, state); restore_fn()
+    -> (step, state).  Runs to n_steps surviving transient failures."""
+
+    def __init__(self, step_fn, save_fn, restore_fn, next_batch,
+                 save_every: int = 100, max_retries: int = 3,
+                 backoff: float = 1.0, straggler: StragglerPolicy | None = None):
+        self.step_fn = step_fn
+        self.save_fn = save_fn
+        self.restore_fn = restore_fn
+        self.next_batch = next_batch
+        self.save_every = save_every
+        self.max_retries = max_retries
+        self.backoff = backoff
+        self.straggler = straggler or StragglerPolicy()
+        self.failures = 0
+
+    def run(self, state, start_step: int, n_steps: int):
+        step = start_step
+        retries = 0
+        while step < n_steps:
+            try:
+                t0 = time.time()
+                state = self.step_fn(state, self.next_batch(step))
+                self.straggler.observe(time.time() - t0)
+                step += 1
+                retries = 0
+                if step % self.save_every == 0:
+                    self.save_fn(step, state)
+            except StragglerError:
+                self.save_fn(step, state)
+                raise
+            except Exception:                      # noqa: BLE001
+                self.failures += 1
+                retries += 1
+                if retries > self.max_retries:
+                    raise
+                time.sleep(self.backoff * (2 ** (retries - 1)))
+                step, state = self.restore_fn()
+        return step, state

@@ -1,0 +1,16 @@
+"""Shared test config.
+
+The suite jit-compiles hundreds of distinct programs (10 archs x variants x
+cipher widths); on a small host the accumulated XLA executables can exhaust
+memory late in the run.  Clearing JAX caches between modules bounds the
+footprint without touching test semantics.
+"""
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    yield
+    jax.clear_caches()

@@ -1,0 +1,55 @@
+"""Dry-run plumbing validation on an 8-device debug mesh (subprocess, so
+the 512-device XLA flag never leaks into other tests)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, out):
+    env = dict(os.environ, DRYRUN_DEVICES="8",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--debug-mesh",
+           "--out", out, "--force"] + args
+    res = subprocess.run(cmd, capture_output=True, text=True, cwd=ROOT,
+                         timeout=1200, env=env)
+    assert res.returncode == 0, res.stderr[-3000:]
+    with open(out) as f:
+        return json.load(f)
+
+
+@pytest.mark.slow
+def test_debug_mesh_train_and_decode(tmp_path):
+    out = str(tmp_path / "dry.json")
+    results = _run(["--arch", "qwen3_1_7b", "--shape", "train_4k",
+                    "--mesh", "both"], out)
+    for mesh in ["single", "multi"]:
+        r = results[f"qwen3_1_7b|train_4k|{mesh}"]
+        assert r["status"] == "ok"
+        assert r["flops_per_chip"] > 0
+        assert r["collective_bytes_per_chip"] > 0
+        assert r["bottleneck"].endswith("_s")
+
+
+@pytest.mark.slow
+def test_debug_mesh_ssm_long_context(tmp_path):
+    out = str(tmp_path / "dry2.json")
+    results = _run(["--arch", "mamba2_130m", "--shape", "long_500k",
+                    "--mesh", "single"], out)
+    r = results["mamba2_130m|long_500k|single"]
+    assert r["status"] == "ok"          # constant-state decode at 524k
+
+
+@pytest.mark.slow
+def test_debug_mesh_skips_quadratic_long_context(tmp_path):
+    out = str(tmp_path / "dry3.json")
+    results = _run(["--arch", "command_r_35b", "--shape", "long_500k",
+                    "--mesh", "single"], out)
+    r = results["command_r_35b|long_500k|single"]
+    assert r["status"] == "skip"

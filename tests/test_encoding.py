@@ -1,0 +1,80 @@
+"""GH packing (Alg 3/6), multi-class packing (Alg 7/8), compress (Alg 4)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import compress, encoding, mo_encoding
+from repro.core.he import get_cipher, limbs
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31), st.integers(8, 53))
+def test_pack_unpack_bit_exact(seed, r):
+    rng = np.random.default_rng(seed)
+    n = 64
+    g = rng.uniform(-1, 1, n)
+    h = rng.uniform(0, 1, n)
+    plan = encoding.plan_packing(g, h, n, plaintext_bits=1023, r=r)
+    packed = encoding.pack_gh(g, h, plan)
+    ints = limbs.to_pyints(packed)
+    g_int = encoding.encode_int64(g + plan.g_off, plan.r)
+    h_int = encoding.encode_int64(h, plan.r)
+    for i in range(n):
+        assert ints[i] == (int(g_int[i]) << plan.b_h) | int(h_int[i])
+    # unpack a random subset sum
+    idx = rng.choice(n, 20, replace=False)
+    tot = sum(ints[i] for i in idx)
+    gs, hs = encoding.unpack_gh_int(tot, plan, len(idx))
+    tol = 2.0 ** -(plan.r - 8)
+    assert abs(gs - g[idx].sum()) < tol and abs(hs - h[idx].sum()) < tol
+
+
+def test_plan_shrinks_precision_when_iota_small():
+    g = np.array([-0.9, 0.4]); h = np.array([0.2, 0.9])
+    plan = encoding.plan_packing(g, h, 10 ** 6, plaintext_bits=80, r=53)
+    assert plan.b_gh <= 80 and plan.r < 53
+
+
+@pytest.mark.parametrize("cipher_name", ["plain", "affine", "paillier"])
+def test_compress_roundtrip(cipher_name):
+    cipher = get_cipher(cipher_name, **(
+        {"bits": 512} if cipher_name == "plain"
+        else {"key_bits": 256, "seed": 5}))
+    rng = np.random.default_rng(0)
+    g = rng.uniform(-1, 1, 30); h = rng.uniform(0, 1, 30)
+    plan = encoding.plan_packing(g, h, 30, cipher.plaintext_bits, r=24)
+    eta = plan.compress_capacity
+    assert eta >= 2
+    packed = encoding.pack_gh(g, h, plan)
+    ints = limbs.to_pyints(packed)
+    if cipher.backend == "limb":
+        cts = cipher.encrypt_limbs(jnp.asarray(packed))
+    else:
+        cts = cipher.encrypt_ints(ints)
+    pkgs, sizes = compress.compress_batch(cipher, cts, eta, plan.b_gh)
+    dec = cipher.decrypt_to_ints(pkgs)
+    rec = compress.decompress_ints(dec, sizes, eta, plan.b_gh,
+                                   padded=(cipher.backend == "limb"))
+    assert rec == ints
+    assert len(dec) == -(-30 // eta)      # eta-fold fewer decryptions
+
+
+@pytest.mark.parametrize("n_classes", [2, 3, 7, 11])
+def test_mo_packing(n_classes):
+    rng = np.random.default_rng(n_classes)
+    G = rng.uniform(-1, 1, (40, n_classes))
+    H = rng.uniform(0, 1, (40, n_classes))
+    plan = mo_encoding.plan_mo_packing(G, H, 40, plaintext_bits=511, r=24)
+    assert plan.n_k == -(-n_classes // plan.eta_c)
+    pk = mo_encoding.pack_gh_mo(G, H, plan)
+    sel = list(range(25))
+    tots = []
+    for k in range(plan.n_k):
+        ints_k = limbs.to_pyints(pk[:, k, :])
+        tots.append(sum(int(ints_k[i]) for i in sel))
+    gs, hs = mo_encoding.unpack_gh_mo_ints(tots, plan, len(sel))
+    np.testing.assert_allclose(gs, G[sel].sum(0), atol=1e-4)
+    np.testing.assert_allclose(hs, H[sel].sum(0), atol=1e-4)

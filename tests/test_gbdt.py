@@ -1,0 +1,160 @@
+"""End-to-end SecureBoost+ behaviour: losslessness, optimizations, modes."""
+
+import numpy as np
+import pytest
+
+from repro.core import LocalGBDT, SBTParams, VerticalBoosting
+
+
+def _data(n=400, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(0, 1, (n, d)).astype(np.float32)
+    w = rng.normal(0, 1, d)
+    y = (X @ w + 0.3 * rng.normal(0, 1, n) > 0).astype(np.float64)
+    return X, y
+
+
+def _auc(p, y):
+    pos, neg = p[y == 1], p[y == 0]
+    return float((pos[:, None] > neg[None, :]).mean()
+                 + 0.5 * (pos[:, None] == neg[None, :]).mean())
+
+
+def test_federated_plain_bit_identical_to_local():
+    """Paper Table 3 'lossless' claim, strengthened to bit-exactness."""
+    X, y = _data()
+    loc = LocalGBDT(SBTParams(n_trees=4, max_depth=3, n_bins=16)).fit(X, y)
+    fed = VerticalBoosting(SBTParams(n_trees=4, max_depth=3, n_bins=16,
+                                     cipher="plain")).fit(X[:, :3], y, [X[:, 3:]])
+    np.testing.assert_array_equal(fed.predict_proba(X[:, :3], [X[:, 3:]]),
+                                  loc.predict_proba(X))
+
+
+def test_affine_cipher_matches_local():
+    X, y = _data(n=300)
+    loc = LocalGBDT(SBTParams(n_trees=3, max_depth=3, n_bins=16)).fit(X, y)
+    fed = VerticalBoosting(SBTParams(n_trees=3, max_depth=3, n_bins=16,
+                                     cipher="affine", key_bits=256,
+                                     precision=20)).fit(X[:, :3], y, [X[:, 3:]])
+    p1 = fed.predict_proba(X[:, :3], [X[:, 3:]])
+    p2 = loc.predict_proba(X)
+    assert np.abs(p1 - p2).max() < 1e-6
+
+
+def test_paillier_oracle_one_tree():
+    X, y = _data(n=120)
+    fed = VerticalBoosting(SBTParams(n_trees=1, max_depth=2, n_bins=8,
+                                     cipher="paillier", key_bits=256,
+                                     precision=16)).fit(X[:, :3], y, [X[:, 3:]])
+    assert _auc(fed.predict_proba(X[:, :3], [X[:, 3:]]), y) > 0.6
+
+
+def test_multihost():
+    X, y = _data()
+    fed = VerticalBoosting(SBTParams(n_trees=3, max_depth=3, n_bins=16)).fit(
+        X[:, :2], y, [X[:, 2:4], X[:, 4:]])
+    loc = LocalGBDT(SBTParams(n_trees=3, max_depth=3, n_bins=16)).fit(X, y)
+    np.testing.assert_array_equal(
+        fed.predict_proba(X[:, :2], [X[:, 2:4], X[:, 4:]]),
+        loc.predict_proba(X))
+
+
+def test_optimizations_cut_cipher_costs():
+    """Packing halves encryptions; compression divides decryptions (eq 14-16)."""
+    X, y = _data()
+    base = SBTParams(n_trees=2, max_depth=3, n_bins=16, cipher="plain")
+    leg = VerticalBoosting(
+        SBTParams(**{**base.__dict__, "packing": False,
+                     "histogram_subtraction": False, "compression": False})
+    ).fit(X[:, :3], y, [X[:, 3:]])
+    opt = VerticalBoosting(base).fit(X[:, :3], y, [X[:, 3:]])
+    assert opt.stats.n_encrypt * 2 == leg.stats.n_encrypt
+    assert opt.stats.n_decrypt * 4 < leg.stats.n_decrypt
+    assert opt.stats.n_hom_add < leg.stats.n_hom_add
+    # and identical predictions (optimizations are lossless)
+    np.testing.assert_array_equal(
+        leg.predict_proba(X[:, :3], [X[:, 3:]]),
+        opt.predict_proba(X[:, :3], [X[:, 3:]]))
+
+
+def test_goss_federated_bit_identical_to_local():
+    """Regression: host histograms must use the GOSS-selected rows (host
+    bins were once indexed by selection position instead of row id).
+
+    min_leaf/min_gain exclude degenerate tiny nodes where two features give
+    EXACTLY equal gain: ties tie-break differently between local (global
+    fid order) and federated (host sids are shuffled for privacy), which is
+    inherent to the protocol, not a bug."""
+    X, y = _data(n=500)
+    base = SBTParams(n_trees=4, max_depth=3, n_bins=16, goss=True, seed=1,
+                     min_leaf=10, min_gain=1e-3)
+    loc = LocalGBDT(base).fit(X, y)
+    fed = VerticalBoosting(base).fit(X[:, :3], y, [X[:, 3:]])
+    np.testing.assert_array_equal(fed.predict_proba(X[:, :3], [X[:, 3:]]),
+                                  loc.predict_proba(X))
+
+
+def test_goss_close_to_full():
+    X, y = _data(n=800)
+    full = VerticalBoosting(SBTParams(n_trees=8, max_depth=3)).fit(
+        X[:, :3], y, [X[:, 3:]])
+    goss = VerticalBoosting(SBTParams(n_trees=8, max_depth=3, goss=True,
+                                      top_rate=0.3, other_rate=0.2)).fit(
+        X[:, :3], y, [X[:, 3:]])
+    a_full = _auc(full.predict_proba(X[:, :3], [X[:, 3:]]), y)
+    a_goss = _auc(goss.predict_proba(X[:, :3], [X[:, 3:]]), y)
+    assert a_goss > a_full - 0.05
+
+
+def test_sparse_parity():
+    X, y = _data()
+    rng = np.random.default_rng(1)
+    Xs = X.copy(); Xs[rng.random(X.shape) < 0.6] = 0.0
+    cfg = dict(n_trees=3, max_depth=3, n_bins=16)
+    sp = VerticalBoosting(SBTParams(**cfg, sparse=True)).fit(
+        Xs[:, :3], y, [Xs[:, 3:]])
+    ns = VerticalBoosting(SBTParams(**cfg, sparse=False)).fit(
+        Xs[:, :3], y, [Xs[:, 3:]])
+    np.testing.assert_array_equal(
+        sp.predict_proba(Xs[:, :3], [Xs[:, 3:]]),
+        ns.predict_proba(Xs[:, :3], [Xs[:, 3:]]))
+
+
+@pytest.mark.parametrize("mode,kw", [("mix", {}),
+                                     ("layered", {"host_depth": 2})])
+def test_modes_train_and_skip_federation(mode, kw):
+    X, y = _data()
+    m = VerticalBoosting(SBTParams(n_trees=6, max_depth=3, tree_mode=mode,
+                                   **kw)).fit(X[:, :3], y, [X[:, 3:]])
+    assert _auc(m.predict_proba(X[:, :3], [X[:, 3:]]), y) > 0.8
+    if mode == "mix":
+        # guest-local trees skip encryption entirely: fewer encrypts than
+        # one-per-instance-per-tree
+        assert m.stats.n_encrypt < 6 * len(y)
+
+
+def test_multiclass_and_mo():
+    rng = np.random.default_rng(0)
+    X, _ = _data(n=500)
+    w = rng.normal(0, 1, X.shape[1])
+    s = X @ w
+    y = ((s > np.quantile(s, 0.33)).astype(float)
+         + (s > np.quantile(s, 0.66)).astype(float))
+    mc = VerticalBoosting(SBTParams(n_trees=3, max_depth=3,
+                                    objective="multiclass", n_classes=3)).fit(
+        X[:, :3], y, [X[:, 3:]])
+    mo = VerticalBoosting(SBTParams(n_trees=3, max_depth=3, objective="mo",
+                                    n_classes=3)).fit(X[:, :3], y, [X[:, 3:]])
+    acc_mc = (mc.predict_proba(X[:, :3], [X[:, 3:]]).argmax(1) == y).mean()
+    acc_mo = (mo.predict_proba(X[:, :3], [X[:, 3:]]).argmax(1) == y).mean()
+    assert acc_mc > 0.6 and acc_mo > 0.6
+    assert len(mo.trees) == 3 and len(mc.trees) == 9   # MO: 1 tree per round
+
+
+def test_channel_accounting_nonzero_and_structured():
+    X, y = _data(n=200)
+    fed = VerticalBoosting(SBTParams(n_trees=2, max_depth=2)).fit(
+        X[:, :3], y, [X[:, 3:]])
+    s = fed.channel.summary()
+    assert {"enc_gh", "split_infos"} <= set(s)
+    assert s["enc_gh"]["bytes"] > 0 and s["split_infos"]["bytes"] > 0

@@ -1,0 +1,83 @@
+"""Property tests for the radix-2**8 biguint limb substrate (vs python ints)."""
+
+import random
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.he import limbs
+
+BIG = st.integers(min_value=0, max_value=(1 << 200) - 1)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(BIG, min_size=1, max_size=8))
+def test_roundtrip(xs):
+    assert limbs.to_pyints(limbs.from_pyints(xs, 32)) == xs
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(BIG, BIG), min_size=1, max_size=6))
+def test_add_sub_compare(pairs):
+    xs = [a for a, _ in pairs]
+    ys = [b for _, b in pairs]
+    a = jnp.asarray(limbs.from_pyints(xs, 32))
+    b = jnp.asarray(limbs.from_pyints(ys, 32))
+    assert limbs.to_pyints(limbs.add(a, b)) == [x + y for x, y in zip(xs, ys)]
+    hi = [max(x, y) for x, y in zip(xs, ys)]
+    lo = [min(x, y) for x, y in zip(xs, ys)]
+    d = limbs.sub(jnp.asarray(limbs.from_pyints(hi, 32)),
+                  jnp.asarray(limbs.from_pyints(lo, 32)))
+    assert limbs.to_pyints(d) == [x - y for x, y in zip(hi, lo)]
+    cmp = np.asarray(limbs.compare(a, b))
+    assert list(cmp) == [(x > y) - (x < y) for x, y in zip(xs, ys)]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(BIG, min_size=1, max_size=5),
+       st.integers(min_value=0, max_value=64))
+def test_shifts_and_mask(xs, k):
+    a = jnp.asarray(limbs.from_pyints(xs, 32))
+    sl = limbs.shift_left_bits(a, k, 41)
+    assert limbs.to_pyints(sl) == [(x << k) % (1 << 328) for x in xs]
+    sr = limbs.shift_right_bits(a, k)
+    assert limbs.to_pyints(sr) == [x >> k for x in xs]
+    mk = limbs.mask_bits(a, k)
+    assert limbs.to_pyints(mk) == [x & ((1 << k) - 1) for x in xs]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(BIG, BIG), min_size=1, max_size=4))
+def test_mul(pairs):
+    xs = [a for a, _ in pairs]
+    ys = [b for _, b in pairs]
+    m = limbs.mul(jnp.asarray(limbs.from_pyints(xs, 26)),
+                  jnp.asarray(limbs.from_pyints(ys, 26)))
+    assert limbs.to_pyints(m) == [x * y for x, y in zip(xs, ys)]
+
+
+@pytest.mark.parametrize("bits", [64, 128, 256])
+def test_barrett_reduce(bits):
+    rnd = random.Random(bits)
+    n_int = rnd.getrandbits(bits) | (1 << (bits - 1)) | 1
+    ctx = limbs.barrett_precompute(n_int)
+    Ln = ctx.Ln
+    vals = [rnd.getrandbits(2 * bits - 1) for _ in range(40)]
+    vals += [0, 1, n_int - 1, n_int, n_int + 1, 2 * n_int, n_int * n_int - 1]
+    v = jnp.asarray(limbs.from_pyints(vals, 2 * Ln))
+    r = limbs.barrett_reduce(v, ctx)
+    assert limbs.to_pyints(r) == [x % n_int for x in vals]
+
+
+def test_mod_mul_fixed():
+    rnd = random.Random(7)
+    n_int = rnd.getrandbits(256) | (1 << 255) | 1
+    ctx = limbs.barrett_precompute(n_int)
+    b_int = rnd.getrandbits(255)
+    T = jnp.asarray(limbs.toeplitz(limbs.from_pyints([b_int], ctx.Ln)[0], ctx.Ln))
+    vals = [rnd.getrandbits(255) % n_int for _ in range(25)]
+    out = limbs.mod_mul_fixed(jnp.asarray(limbs.from_pyints(vals, ctx.Ln)), T, ctx)
+    assert limbs.to_pyints(out) == [(v * b_int) % n_int for v in vals]
