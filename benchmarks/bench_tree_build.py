@@ -2,9 +2,11 @@
 
 Legacy = no packing, no histogram subtraction, no compression, no GOSS
 (FATE-1.5 SecureBoost).  Plus = all cipher optimizations + GOSS + sparse.
-Reported per dataset and cipher: per-tree seconds, HE-op counts, and the
+Reported per dataset and cipher: per-tree seconds, HE-op counts, the
 headline derived metric -- % tree-time reduction (paper: 37.5-82.4%
-IterativeAffine, 84.9-95.5% Paillier).
+IterativeAffine, 84.9-95.5% Paillier) -- and the layer-batching counters:
+histogram kernel launches and guest<->host split_infos round-trips per
+tree (O(depth) under the layer-batched grower, vs O(#nodes) per-node).
 """
 
 from __future__ import annotations
@@ -14,6 +16,10 @@ import dataclasses
 from .common import DATASETS, auc, emit, load, timed
 
 from repro.core import SBTParams, VerticalBoosting
+
+
+def _per_tree(stats, field: str, n_trees: int) -> float:
+    return getattr(stats, field) / max(n_trees, 1)
 
 
 def run_pair(name: str, cipher: str, key_bits: int, n_trees: int = 4,
@@ -41,6 +47,14 @@ def run_pair(name: str, cipher: str, key_bits: int, n_trees: int = 4,
         "reduction_pct": red,
         "legacy_ops": legacy.stats.as_dict(),
         "plus_ops": plus.stats.as_dict(),
+        "legacy_launches_per_tree": _per_tree(legacy.stats,
+                                              "n_hist_launches", n_trees),
+        "plus_launches_per_tree": _per_tree(plus.stats,
+                                            "n_hist_launches", n_trees),
+        "legacy_roundtrips_per_tree": _per_tree(legacy.stats,
+                                                "n_split_roundtrips", n_trees),
+        "plus_roundtrips_per_tree": _per_tree(plus.stats,
+                                              "n_split_roundtrips", n_trees),
         "auc_legacy": auc(legacy.predict_proba(Xg, [Xh]), y),
         "auc_plus": auc(plus.predict_proba(Xg, [Xh]), y),
     }
@@ -54,14 +68,25 @@ def main(quick: bool = False):
             r = run_pair(name, cipher, bits)
             rows.append((f"fig7/{name}/{cipher}/legacy",
                          r["legacy_s_per_tree"] * 1e6,
-                         f"auc={r['auc_legacy']:.3f}"))
+                         f"auc={r['auc_legacy']:.3f}"
+                         f";launches/tree={r['legacy_launches_per_tree']:.1f}"
+                         f";roundtrips/tree="
+                         f"{r['legacy_roundtrips_per_tree']:.1f}"))
             rows.append((f"fig7/{name}/{cipher}/plus",
                          r["plus_s_per_tree"] * 1e6,
                          f"reduction={r['reduction_pct']:.1f}%"
-                         f";auc={r['auc_plus']:.3f}"))
+                         f";auc={r['auc_plus']:.3f}"
+                         f";launches/tree={r['plus_launches_per_tree']:.1f}"
+                         f";roundtrips/tree="
+                         f"{r['plus_roundtrips_per_tree']:.1f}"))
     emit(rows)
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced dataset list (CI smoke test)")
+    main(quick=ap.parse_args().quick)

@@ -151,7 +151,7 @@ class VerticalBoosting:
 
         codec = self._make_codec(cipher, g[sel], h[sel])
         engines = [CipherHistogram(cipher, p.n_bins, sparse=p.sparse,
-                                   use_pallas=p.use_pallas)
+                                   use_pallas=p.use_pallas, stats=self.stats)
                    for _ in self.host_data]
         hosts = [HostRuntime(hid=i, data=d, engine=e)
                  for i, (d, e) in enumerate(zip(self.host_data, engines))]

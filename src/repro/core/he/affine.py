@@ -109,8 +109,22 @@ class AffineCipher:
         return self.Ln + self.hist_headroom_limbs
 
     def reduce(self, acc):
-        """Reduce a lazy accumulator (sum of < 2**(8*headroom) ciphertexts)."""
+        """Reduce a lazy accumulator (sum of < 2**(8*headroom) ciphertexts).
+        Limbs may be mixed-sign (lazy subtraction) as long as values >= 0."""
         return limbs.barrett_reduce(limbs.carry_fix(acc), self.bctx)
+
+    def lazy_sub(self, parent, child_lazy, count_bound: int):
+        """Histogram subtraction in the lazy limb domain: canonical parent
+        (mod n) minus an un-carried child accumulator.  The child's lazy
+        value can reach ``count_bound * n``, so ``count_bound * n`` is added
+        to keep the represented value non-negative; the next :meth:`reduce`
+        Barrett-reduces it away (sibling = parent - child mod n).  Requires
+        ``(count_bound + 1) * n < RADIX**width``, i.e. count_bound below
+        2**(8 * headroom) -- the same bound as direct lazy accumulation."""
+        w = child_lazy.shape[-1]
+        off = jnp.asarray(
+            limbs.from_pyints([max(int(count_bound), 0) * self.n_int], w)[0])
+        return limbs.pad_limbs(parent, w)[..., :w] + off - child_lazy
 
     def zero(self, shape) -> jnp.ndarray:
         return jnp.zeros(tuple(shape) + (self.Ln,), dtype=jnp.int32)

@@ -84,14 +84,19 @@ def _shift_up(x):
 
 @jax.jit
 def carry_fix(x):
-    """Propagate carries until canonical.  Input limbs must be >= 0.
+    """Propagate carries until canonical.  Limbs may be mixed-sign as long
+    as the represented value is >= 0 (lazy histogram subtraction produces
+    ``parent - child`` limb vectors before canonicalization): for int32
+    two's complement, ``v == RADIX * (v >> RADIX_BITS) + (v & LIMB_MASK)``
+    holds for negative limbs too (arithmetic shift + non-negative masked
+    digit), so the same signed-digit normalization converges.
 
     Overflow past the last limb is dropped (arithmetic mod RADIX**L); size
     limb counts so this never happens in practice.  Jitted at module level
     so eager protocol code pays tracing once per shape, not per call.
     """
     def cond(v):
-        return jnp.any(v > LIMB_MASK)
+        return jnp.any((v > LIMB_MASK) | (v < 0))
 
     def body(v):
         return (v & LIMB_MASK) + _shift_up(v >> RADIX_BITS)
@@ -115,6 +120,14 @@ def borrow_fix(x):
 # ---------------------------------------------------------------------------
 # basic arithmetic (canonical inputs unless noted)
 # ---------------------------------------------------------------------------
+
+def pad_limbs(x, width: int):
+    """Zero-pad the trailing limb axis up to ``width`` (no-op if wider)."""
+    L = x.shape[-1]
+    if L >= width:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, width - L)])
+
 
 def add(a, b):
     return carry_fix(a + b)

@@ -106,6 +106,26 @@ class PaillierCipher:
             out[idx] = (int(fa[idx]) * int(fb[idx])) % self.n2
         return out
 
+    def add_at(self, acc, idx, vals, chunk: int = 16):
+        """Scatter homomorphic add: ``acc[idx[i]] += vals[i]`` row-wise, the
+        ``np.add.at`` of the Paillier domain.  Hom-add is modmul in Z_{n^2},
+        so each chunk accumulates raw integer products via ``np.multiply.at``
+        (numpy's C-level loop over object ints) and reduces the touched rows
+        mod n^2 once per chunk instead of once per instance.
+
+        acc: (m, n_slots) object array, mutated in place and returned.
+        idx: (k,) row indices; vals: (k, n_slots) object ciphertexts.
+        """
+        acc = np.asarray(acc, dtype=object)
+        idx = np.asarray(idx, dtype=np.int64)
+        vals = np.asarray(vals, dtype=object)
+        for lo in range(0, len(idx), chunk):
+            sl = idx[lo:lo + chunk]
+            np.multiply.at(acc, sl, vals[lo:lo + chunk])
+            touched = np.unique(sl)
+            acc[touched] = acc[touched] % self.n2
+        return acc
+
     def mul_pow2(self, ct, k: int):
         e = pow(2, k)
         ct = np.asarray(ct, dtype=object)

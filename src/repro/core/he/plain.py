@@ -68,8 +68,18 @@ class PlainCipher:
         return self.Ln + self.hist_headroom_limbs
 
     def reduce(self, acc):
-        """Canonicalize a lazy accumulator (values stay below 2**(8*width))."""
+        """Canonicalize a lazy accumulator (values stay below 2**(8*width)).
+        Limbs may be mixed-sign (lazy subtraction) as long as values >= 0."""
         return limbs.carry_fix(acc)
+
+    def lazy_sub(self, parent, child_lazy, count_bound: int):
+        """Histogram subtraction in the lazy limb domain: canonical parent
+        minus an un-carried child accumulator, still lazy (mixed-sign limbs,
+        resolved by the next :meth:`reduce`).  Values are true sums here, so
+        ``parent >= child`` holds and no modular offset is needed;
+        ``count_bound`` is unused (kept for interface parity with affine)."""
+        w = child_lazy.shape[-1]
+        return limbs.pad_limbs(parent, w)[..., :w] - child_lazy
 
     def zero(self, shape) -> jnp.ndarray:
         return jnp.zeros(tuple(shape) + (self.Ln,), dtype=jnp.int32)

@@ -1,4 +1,4 @@
-"""Node-level histogram engines (paper Algorithms 1 & 5).
+"""Histogram engines (paper Algorithms 1 & 5), node-level and layer-batched.
 
 Two engines share one split-finding path:
 
@@ -14,13 +14,23 @@ Two engines share one split-finding path:
 
 * :class:`PlainHistogram` -- guest side (and the local-XGBoost baseline).
   Same shapes in plaintext float64 via ``np.add.at``.
+
+Both engines additionally expose :meth:`layer_histograms`, the layer-batched
+hot path (see DESIGN.md §6): every direct-mode frontier node of one tree
+layer is accumulated by a SINGLE kernel launch over the composite one-hot
+``node_slot * n_bins + bin``, histogram subtraction for the remaining nodes
+is applied in the still-lazy limb domain (``cipher.lazy_sub``), and ONE
+``cipher.reduce`` canonicalizes the whole layer.  This collapses
+O(2**depth) kernel launches and Barrett passes per layer to O(1).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from ..kernels.histogram import ciphertext_histogram, count_histogram
+from ..kernels.histogram import (ciphertext_histogram, count_histogram,
+                                 layer_ciphertext_histogram,
+                                 layer_count_histogram)
 from .binning import BinnedData
 
 
@@ -58,6 +68,63 @@ class PlainHistogram:
                 np.add.at(C[f], bins[:, f], 1)
         return (G, H, C)
 
+    def layer_histograms(self, data: BinnedData, g: np.ndarray, h: np.ndarray,
+                         node_rows: dict, direct: list, subtract: list,
+                         cache: dict) -> dict:
+        """Batched node_histogram for one tree layer.
+
+        node_rows: {nid: row ids}; direct: nids accumulated directly (one
+        composite ``np.add.at`` pass per feature); subtract: (nid, parent,
+        sibling) triples resolved as parent - sibling from ``cache`` /this
+        layer's direct results.  Returns {nid: (G, H, C)}.
+        """
+        out = {}
+        if direct:
+            n_d, n_b = len(direct), self.n_bins
+            rows_cat = np.concatenate([node_rows[nid] for nid in direct])
+            slot_cat = np.concatenate(
+                [np.full(len(node_rows[nid]), k, np.int64)
+                 for k, nid in enumerate(direct)])
+            bins = data.bins[rows_cat]                # (R, n_f)
+            n_f = bins.shape[1]
+            gr, hr = g[rows_cat], h[rows_cat]
+            out_dim = np.asarray(g).shape[1:]
+            G = np.zeros((n_f, n_d * n_b) + out_dim)
+            H = np.zeros((n_f, n_d * n_b) + out_dim)
+            C = np.zeros((n_f, n_d * n_b), np.int64)
+            comp = slot_cat[:, None] * n_b + bins     # composite (node, bin)
+            sparse = self.sparse and data.zero_mask is not None
+            zmask = data.zero_mask[rows_cat] if sparse else None
+            for f in range(n_f):
+                if sparse:
+                    keep = ~zmask[:, f]
+                    np.add.at(G[f], comp[keep, f], gr[keep])
+                    np.add.at(H[f], comp[keep, f], hr[keep])
+                    np.add.at(C[f], comp[keep, f], 1)
+                else:
+                    np.add.at(G[f], comp[:, f], gr)
+                    np.add.at(H[f], comp[:, f], hr)
+                    np.add.at(C[f], comp[:, f], 1)
+            Gn = np.moveaxis(G.reshape((n_f, n_d, n_b) + out_dim), 1, 0)
+            Hn = np.moveaxis(H.reshape((n_f, n_d, n_b) + out_dim), 1, 0)
+            Cn = np.moveaxis(C.reshape(n_f, n_d, n_b), 1, 0)
+            if sparse:
+                gt = np.zeros((n_d,) + out_dim)
+                ht = np.zeros((n_d,) + out_dim)
+                np.add.at(gt, slot_cat, gr)
+                np.add.at(ht, slot_cat, hr)
+                ct = np.bincount(slot_cat, minlength=n_d)
+                for f in range(n_f):
+                    zb = int(data.zero_bins[f])
+                    Gn[:, f, zb] += gt - Gn[:, f].sum(axis=1)
+                    Hn[:, f, zb] += ht - Hn[:, f].sum(axis=1)
+                    Cn[:, f, zb] += ct - Cn[:, f].sum(axis=1)
+            for k, nid in enumerate(direct):
+                out[nid] = (Gn[k], Hn[k], Cn[k])
+        for nid, par, sib in subtract:
+            out[nid] = self.subtract(cache[par], out[sib])
+        return out
+
     @staticmethod
     def subtract(parent, child):
         return tuple(p - c for p, c in zip(parent, child))
@@ -71,11 +138,16 @@ class CipherHistogram:
     """Ciphertext histograms over limb arrays (or Paillier object arrays)."""
 
     def __init__(self, cipher, n_bins: int, sparse: bool = False,
-                 use_pallas: bool = True):
+                 use_pallas: bool = True, stats=None):
         self.cipher = cipher
         self.n_bins = n_bins
         self.sparse = sparse
         self.use_pallas = use_pallas
+        self.stats = stats          # optional party.Stats for launch counts
+
+    def _count_launch(self):
+        if self.stats is not None:
+            self.stats.n_hist_launches += 1
 
     # -- core accumulation ------------------------------------------------
     def node_histogram(self, data: BinnedData, cts, rows: np.ndarray):
@@ -106,6 +178,7 @@ class CipherHistogram:
         padded = jnp.pad(sel, ((0, 0), (0, 0), (0, width - per)))
         lazy = ciphertext_histogram(bins, padded.reshape(n, n_slots * width),
                                     self.n_bins, use_pallas=self.use_pallas)
+        self._count_launch()
         lazy = lazy.reshape(lazy.shape[0], self.n_bins, n_slots, width)
         return self.cipher.reduce(lazy)
 
@@ -114,25 +187,153 @@ class CipherHistogram:
         n_f = bins.shape[1]
         n_slots = cts.shape[1]
         hist = self.cipher.zero((n_f, self.n_bins, n_slots))
-        for i in range(bins.shape[0]):
-            for f in range(n_f):
-                b = bins[i, f]
-                if b < 0:
-                    continue
-                hist[f, b] = self.cipher.add(hist[f, b], cts[i])
+        add_at = getattr(self.cipher, "add_at", None)
+        if add_at is None:          # generic oracle fallback
+            for i in range(bins.shape[0]):
+                for f in range(n_f):
+                    b = bins[i, f]
+                    if b < 0:
+                        continue
+                    hist[f, b] = self.cipher.add(hist[f, b], cts[i])
+            return hist
+        for f in range(n_f):
+            keep = bins[:, f] >= 0
+            if keep.any():
+                add_at(hist[f], bins[keep, f], cts[keep])
         return hist
 
+    # -- layer-batched accumulation (DESIGN.md §6) ------------------------
+    def layer_histograms(self, data: BinnedData, cts, node_rows: dict,
+                         direct: list, subtract: list, cache: dict) -> dict:
+        """All frontier histograms of one tree layer in one batch.
+
+        data/cts:  the host's selected-row view, aligned row-for-row.
+        node_rows: {nid: row positions into data/cts}.
+        direct:    nids accumulated directly -- ONE kernel launch for all.
+        subtract:  (nid, parent, sibling) triples; the parent's canonical
+                   histogram is read from ``cache``, the sibling must be in
+                   ``direct``.  Subtraction happens in the lazy limb domain
+                   (``cipher.lazy_sub``) so a SINGLE ``cipher.reduce``
+                   canonicalizes direct and subtracted nodes together.
+        Returns {nid: (hist, counts)}; ``cache`` is not written.
+        """
+        if self.cipher.backend != "limb":
+            return self._pyobj_layer(data, cts, node_rows, direct, subtract,
+                                     cache)
+        import jax.numpy as jnp
+        n_f, n_b = data.n_features, self.n_bins
+        bins = data.bins.astype(np.int32)
+        sparse = self.sparse and data.zero_mask is not None
+        if sparse:
+            bins = np.where(data.zero_mask, -1, bins)
+        slot_of = {nid: k for k, nid in enumerate(direct)}
+        node_slot = np.full(data.n_instances, -1, np.int32)
+        for nid in direct:
+            node_slot[node_rows[nid]] = slot_of[nid]
+
+        out = {}
+        n_d = len(direct)
+        counts = np.zeros((n_d, n_f, n_b), np.int64)
+        canon_direct = None
+        lazy = None
+        width = self.cipher.hist_width
+        if n_d:
+            counts = np.asarray(layer_count_histogram(
+                bins, node_slot, n_d, n_b)).astype(np.int64)
+            cts_j = jnp.asarray(cts)
+            n, n_slots, per = cts_j.shape
+            padded = jnp.pad(cts_j, ((0, 0), (0, 0), (0, width - per)))
+            lazy = layer_ciphertext_histogram(
+                bins, node_slot, padded.reshape(n, n_slots * width),
+                n_d, n_b, use_pallas=self.use_pallas)
+            self._count_launch()
+            lazy = lazy.reshape(n_d, n_f, n_b, n_slots, width)
+
+        if sparse:
+            # zero-bin recovery needs canonical per-node totals, so fix the
+            # direct batch first, then subtract canonically -- still O(1)
+            # vectorized cipher calls per layer.
+            if n_d:
+                canon_direct = self.cipher.reduce(lazy)
+                canon_direct = self._layer_sparse_fix(
+                    data, canon_direct, padded, node_slot)
+                zb = np.asarray(data.zero_bins, np.int64)
+                for k, nid in enumerate(direct):
+                    for f in range(n_f):
+                        counts[k, f, zb[f]] += (len(node_rows[nid])
+                                                - counts[k, f].sum())
+                    out[nid] = (canon_direct[k], counts[k])
+            if subtract:
+                parents = jnp.stack([jnp.asarray(cache[par][0])
+                                     for _, par, _ in subtract])
+                children = jnp.stack([jnp.asarray(out[sib][0])
+                                      for _, _, sib in subtract])
+                subs = self.cipher.sub(parents, children)
+                for j, (nid, par, sib) in enumerate(subtract):
+                    out[nid] = (subs[j], cache[par][1] - out[sib][1])
+            return out
+
+        # dense path: lazy subtraction, one reduce for the whole layer
+        sub_lazy = [self.cipher.lazy_sub(jnp.asarray(cache[par][0]),
+                                         lazy[slot_of[sib]],
+                                         len(node_rows[sib]))
+                    for _, par, sib in subtract]
+        parts = ([lazy] if n_d else []) + \
+            ([jnp.stack(sub_lazy)] if sub_lazy else [])
+        if not parts:
+            return out
+        canon = self.cipher.reduce(jnp.concatenate(parts, axis=0))
+        for k, nid in enumerate(direct):
+            out[nid] = (canon[k], counts[k])
+        for j, (nid, par, sib) in enumerate(subtract):
+            out[nid] = (canon[n_d + j],
+                        cache[par][1] - counts[slot_of[sib]])
+        return out
+
+    def _pyobj_layer(self, data, cts, node_rows, direct, subtract, cache):
+        """Paillier-oracle layer path: per-node accumulation (clarity over
+        speed -- the protocol round-trip is still batched by the caller)."""
+        out = {}
+        for nid in direct:
+            out[nid] = self.node_histogram(data, cts, node_rows[nid])
+        for nid, par, sib in subtract:
+            out[nid] = self.subtract(cache[par], out[sib])
+        return out
+
     # -- paper tricks -------------------------------------------------------
+    def _layer_sparse_fix(self, data, hist, cts_wide, node_slot):
+        """Batched §6.2 recovery: per node, zero-bin += total - sum(bins).
+
+        hist: (n_d, n_f, n_b, n_slots, L) canonical; cts_wide: (n, n_slots,
+        width) padded limbs aligned with node_slot."""
+        import jax.numpy as jnp
+        from .he import limbs
+        n_d = hist.shape[0]
+        width = self.cipher.hist_width
+        # per-node ciphertext totals: one scatter-add + one reduce
+        slot = np.where(node_slot < 0, n_d, node_slot)
+        tot_lazy = jnp.zeros((n_d + 1,) + tuple(cts_wide.shape[1:]),
+                             jnp.int32).at[jnp.asarray(slot)].add(cts_wide)
+        node_total = self.cipher.reduce(tot_lazy[:n_d])   # (n_d, slots, L)
+        nz = self.cipher.reduce(
+            limbs.pad_limbs(hist, width).sum(axis=2))     # (n_d, n_f, s, L)
+        rec = self.cipher.sub(
+            jnp.broadcast_to(node_total[:, None], nz.shape), nz)
+        zb = np.asarray(data.zero_bins, np.int64)
+        for f in range(hist.shape[1]):
+            hist = hist.at[:, f, zb[f]].set(
+                self.cipher.add(hist[:, f, zb[f]], rec[:, f]))
+        return hist
+
     def _sparse_fix(self, data: BinnedData, hist, cts, rows):
         """zero-bin += node_total - sum(all accumulated bins)  (§6.2)."""
         node_total = self.node_total(cts, rows)            # (n_slots, ...)
         zb = np.asarray(data.zero_bins, np.int64)
         if self.cipher.backend == "limb":
             import jax.numpy as jnp
+            from .he import limbs
             hist = jnp.asarray(hist)
-            width = self.cipher.hist_width
-            wide = jnp.pad(hist, ((0, 0), (0, 0), (0, 0),
-                                  (0, width - hist.shape[-1])))
+            wide = limbs.pad_limbs(hist, self.cipher.hist_width)
             nz = self.cipher.reduce(wide.sum(axis=1))      # (n_f, n_slots, L)
             rec = self.cipher.sub(
                 jnp.broadcast_to(node_total[None], nz.shape), nz)
@@ -153,9 +354,9 @@ class CipherHistogram:
         """Sum of all instance ciphertexts in the node: (n_slots, ...)."""
         if self.cipher.backend == "limb":
             import jax.numpy as jnp
+            from .he import limbs
             sel = jnp.asarray(cts)[jnp.asarray(np.asarray(rows, np.int64))]
-            wide = jnp.pad(sel, ((0, 0), (0, 0),
-                                 (0, self.cipher.hist_width - sel.shape[-1])))
+            wide = limbs.pad_limbs(sel, self.cipher.hist_width)
             return self.cipher.reduce(wide.sum(axis=0))
         sel = np.asarray(cts, dtype=object)[np.asarray(rows, np.int64)]
         tot = self.cipher.zero((sel.shape[1],))
@@ -170,18 +371,21 @@ class CipherHistogram:
         return self.cipher.sub(ph, ch), pc - cc
 
     def cumsum(self, hist):
-        """Prefix-sum over the bin axis in the ciphertext domain."""
+        """Prefix-sum over the bin axis in the ciphertext domain.  Accepts a
+        single histogram (n_f, n_b, slots[, L]) or a layer-batched stack with
+        any leading axes (..., n_f, n_b, slots[, L])."""
         if self.cipher.backend == "limb":
             import jax.numpy as jnp
-            width = self.cipher.hist_width
-            wide = jnp.pad(jnp.asarray(hist),
-                           ((0, 0), (0, 0), (0, 0),
-                            (0, width - hist.shape[-1])))
-            return self.cipher.reduce(jnp.cumsum(wide, axis=1))
-        out = np.empty(hist.shape, dtype=object)
-        for f in range(hist.shape[0]):
+            from .he import limbs
+            hist = jnp.asarray(hist)
+            wide = limbs.pad_limbs(hist, self.cipher.hist_width)
+            return self.cipher.reduce(jnp.cumsum(wide, axis=hist.ndim - 3))
+        flat = hist.reshape((-1,) + hist.shape[-2:])   # (G, n_b, slots)
+        out = np.empty(flat.shape, dtype=object)
+        for i in range(flat.shape[0]):
             acc = None
-            for b in range(hist.shape[1]):
-                acc = hist[f, b] if acc is None else self.cipher.add(acc, hist[f, b])
-                out[f, b] = acc
-        return out
+            for b in range(flat.shape[1]):
+                acc = flat[i, b] if acc is None \
+                    else self.cipher.add(acc, flat[i, b])
+                out[i, b] = acc
+        return out.reshape(hist.shape)

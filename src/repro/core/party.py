@@ -33,6 +33,8 @@ class Stats:
     n_hom_scalar: int = 0       # scalar/shift multiplications (compress)
     n_split_infos: int = 0      # split-info stats produced (pre-compress)
     n_packages: int = 0         # ciphertexts actually decrypted/transferred
+    n_hist_launches: int = 0    # histogram accumulation kernel launches
+    n_split_roundtrips: int = 0  # guest<->host split_infos exchanges
     tree_seconds: list = dataclasses.field(default_factory=list)
 
     def as_dict(self):

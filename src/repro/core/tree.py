@@ -12,6 +12,15 @@ code):
   * MO trees                 (vector g/h, multi-class packing)
   * mix / layered modes      (via the ``feature_parties`` schedule callback)
 
+The hot path is *layer-batched* (DESIGN.md §6): per (layer, host) pair the
+protocol performs ONE histogram kernel launch covering every direct-mode
+frontier node, ONE ``cipher.reduce``, ONE ciphertext cumsum, and ONE
+``split_infos`` message answered by ONE batched guest decrypt -- all nodes'
+shuffled candidates travel concatenated, with per-node offsets implied by
+the fixed per-node candidate count.  Kernel launches and round-trips per
+tree are therefore O(depth), not O(2**depth); ``Stats.n_hist_launches`` /
+``Stats.n_split_roundtrips`` make the collapse measurable.
+
 Party boundaries are explicit: everything that crosses guest<->host goes
 through ``ctx.channel.send`` with wire-fidelity byte counts, and HE work is
 tallied in ``ctx.stats``.
@@ -170,10 +179,11 @@ class TreeContext:
         default_factory=lambda: np.random.default_rng(0))
 
 
-def _encrypt_all(ctx: TreeContext) -> None:
+def _encrypt_all(ctx: TreeContext, g_sel: np.ndarray,
+                 h_sel: np.ndarray) -> None:
     """Guest packs + encrypts g/h of selected rows, broadcasts to hosts."""
     p = ctx.params
-    plain = ctx.codec.encode_plain(ctx.g[ctx.sel_rows], ctx.h[ctx.sel_rows])
+    plain = ctx.codec.encode_plain(g_sel, h_sel)
     n, s, Lp = plain.shape
     if ctx.cipher.backend == "limb":
         import jax.numpy as jnp
@@ -181,7 +191,6 @@ def _encrypt_all(ctx: TreeContext) -> None:
         if ctx.cipher.name == "affine" and p.use_pallas:
             flat = encrypt_batch(ctx.cipher, plain.reshape(n * s, Lp))
         else:
-            import jax.numpy as jnp
             flat = ctx.cipher.encrypt_limbs(jnp.asarray(plain.reshape(n * s, Lp)))
         cts = flat.reshape(n, s, -1)
     else:
@@ -200,100 +209,139 @@ def _encrypt_all(ctx: TreeContext) -> None:
                        if host.data.zero_mask is not None else None))
 
 
-def _host_candidates(ctx: TreeContext, host: HostRuntime, nid: int,
-                     rows_sel: np.ndarray, mode: str, parent_nid: int = -1,
-                     sibling_nid: int = -1) -> SplitCandidates:
-    """Host-side Algorithm 5: histogram (direct or by subtraction), cumsum,
-    shuffle, compress, send; guest-side decrypt + decode into candidates."""
+def _resolve_modes(splittable: list, hist_mode: dict, cache: dict,
+                   subtraction_on: bool) -> tuple[list, list]:
+    """Partition a layer's splittable nodes into direct / subtract batches.
+
+    A node keeps its scheduled "subtract" mode only when its parent's
+    histogram is cached AND its (direct-mode) sibling is being computed this
+    layer -- otherwise it falls back to direct, exactly like the per-node
+    path did when a sibling exited early as a leaf.  ``splittable`` must be
+    ordered direct-first so siblings are classified before their subtract
+    partners."""
+    direct: list = []
+    subtract: list = []
+    direct_set: set = set()
+    for nid in splittable:
+        mode, par, sib = hist_mode[nid] if subtraction_on \
+            else ("direct", -1, -1)
+        if mode == "subtract" and par in cache and sib in direct_set:
+            subtract.append((nid, par, sib))
+        else:
+            direct.append(nid)
+            direct_set.add(nid)
+    return direct, subtract
+
+
+def _host_layer_candidates(ctx: TreeContext, host: HostRuntime,
+                           splittable: list, rows_sel: dict,
+                           hist_mode: dict) -> dict:
+    """Host-side Algorithm 5, layer-batched: for ALL frontier nodes of one
+    layer, one histogram accumulation (single kernel launch), one
+    ``cipher.reduce``, one ciphertext-domain cumsum, one shuffle/compress
+    pass, and ONE ``split_infos`` message; guest side answers with ONE
+    batched decrypt + decode.  Per-node candidate blocks travel concatenated
+    (every node contributes exactly ``n_f * (n_b - 1)`` candidates, so
+    offsets are implicit).  Returns {nid: SplitCandidates}."""
     p = ctx.params
     engine = host.engine
     n_f, n_b = host.data.n_features, p.n_bins
     n_slots = ctx.codec.n_slots
 
-    if mode == "subtract" and (parent_nid not in host.hist_cache
-                               or sibling_nid not in host.hist_cache):
-        mode = "direct"          # sibling exited early as a leaf
-    if mode == "subtract":
-        parent = host.hist_cache[parent_nid]
-        child = host.hist_cache[sibling_nid]
-        hist, counts = engine.subtract(parent, child)
-        ctx.stats.n_hom_add += n_f * n_b * n_slots
-    else:
-        hist, counts = engine.node_histogram(host.view, host.cts, rows_sel)
-        ctx.stats.n_hom_add += int(counts.sum()) * n_slots
-    host.hist_cache[nid] = (hist, counts)
-
-    cum = engine.cumsum(hist)
-    ctx.stats.n_hom_add += n_f * (n_b - 1) * n_slots
-    cum_counts = counts.cumsum(axis=1)
-
-    # flatten to split infos, drop last bin (empty right side)
-    if ctx.cipher.backend == "limb":
+    limb = ctx.cipher.backend == "limb"
+    if limb:
         import jax.numpy as jnp
-        flat = jnp.asarray(cum)[:, : n_b - 1].reshape(n_f * (n_b - 1), n_slots, -1)
-    else:
-        flat = cum[:, : n_b - 1].reshape(n_f * (n_b - 1), n_slots)
-    flat_counts = cum_counts[:, : n_b - 1].reshape(-1)
-    m = flat.shape[0]
-    ctx.stats.n_split_infos += m
 
-    # real sids use the same fid*n_b+bid encoding as decode_sid
+    direct, subtract = _resolve_modes(splittable, hist_mode, host.hist_cache,
+                                      p.histogram_subtraction)
+    node_rows = {nid: rows_sel[nid] for nid in splittable}
+    hists = engine.layer_histograms(host.view, host.cts, node_rows,
+                                    direct, subtract, host.hist_cache)
+    host.hist_cache.update(hists)
+    for nid in direct:
+        ctx.stats.n_hom_add += int(hists[nid][1].sum()) * n_slots
+    ctx.stats.n_hom_add += len(subtract) * n_f * n_b * n_slots
+
+    # batched cumsum over the node axis, then per-node shuffle + concat
+    if limb:
+        stack = jnp.stack([jnp.asarray(hists[nid][0]) for nid in splittable])
+    else:
+        stack = np.stack([hists[nid][0] for nid in splittable])
+    cum = engine.cumsum(stack)
+    ctx.stats.n_hom_add += len(splittable) * n_f * (n_b - 1) * n_slots
+
+    m = n_f * (n_b - 1)          # candidates per node (fixed)
     fid_grid, bid_grid = np.meshgrid(np.arange(n_f), np.arange(n_b - 1),
                                      indexing="ij")
     real_sids = (fid_grid * n_b + bid_grid).reshape(-1)
-    perm = ctx.rng.permutation(m)
-    host.perms[nid] = real_sids[perm]      # shuffled position -> real sid
-    if ctx.cipher.backend == "limb":
-        import jax.numpy as jnp
-        flat = flat[jnp.asarray(perm)]
-    else:
-        flat = flat[perm]
-    flat_counts = flat_counts[perm]
+    flats, counts_l = [], []
+    for k, nid in enumerate(splittable):
+        # flatten to split infos, drop last bin (empty right side)
+        if limb:
+            flat = cum[k][:, : n_b - 1].reshape(m, n_slots, -1)
+        else:
+            flat = cum[k][:, : n_b - 1].reshape(m, n_slots)
+        fc = hists[nid][1].cumsum(axis=1)[:, : n_b - 1].reshape(-1)
+        # real sids use the same fid*n_b+bid encoding as decode_sid
+        perm = ctx.rng.permutation(m)
+        host.perms[nid] = real_sids[perm]  # shuffled position -> real sid
+        if limb:
+            flat = flat[jnp.asarray(perm)]
+        else:
+            flat = flat[perm]
+        flats.append(flat)
+        counts_l.append(fc[perm])
+    ctx.stats.n_split_infos += m * len(splittable)
+    flat_all = (jnp.concatenate(flats, axis=0) if limb
+                else np.concatenate(flats, axis=0))
+    counts_all = np.concatenate(counts_l)
+    M = m * len(splittable)
 
     wire = ct_wire_bytes(ctx.cipher)
     use_compress = (p.compression and ctx.codec.compressible
                     and ctx.codec.eta_s > 1)
     if use_compress:
         eta = ctx.codec.eta_s
-        if ctx.cipher.backend == "limb":
-            src = flat[:, 0, :]
-        else:
-            src = flat[:, 0]
+        src = flat_all[:, 0, :] if limb else flat_all[:, 0]
         pkgs, sizes = compress_mod.compress_batch(
             ctx.cipher, src, eta, ctx.codec.b_slot)
         n_pkgs = len(sizes)
         ctx.stats.n_hom_scalar += int(np.sum(sizes - 1))
         ctx.stats.n_hom_add += int(np.sum(sizes - 1))
-        payload = (pkgs, sizes, flat_counts)
-        nbytes = n_pkgs * wire + m * 8
+        payload = (pkgs, sizes, counts_all)
+        nbytes = n_pkgs * wire + M * 8
         ctx.stats.n_packages += n_pkgs
     else:
-        payload = (flat, None, flat_counts)
-        nbytes = m * n_slots * wire + m * 8
-        ctx.stats.n_packages += m * n_slots
+        payload = (flat_all, None, counts_all)
+        nbytes = M * n_slots * wire + M * 8
+        ctx.stats.n_packages += M * n_slots
     payload = ctx.channel.send(f"host{host.hid}", "guest", "split_infos",
                                payload, nbytes)
+    ctx.stats.n_split_roundtrips += 1
 
-    # ---- guest side: decrypt + decode (Algorithm 6) ----
-    data, sizes, counts_l = payload
+    # ---- guest side: ONE batched decrypt + decode (Algorithm 6) ----
+    data, sizes, cl = payload
     if use_compress:
         plain = _decrypt_ints(ctx, data)
         ctx.stats.n_decrypt += len(plain)
         vals = compress_mod.decompress_ints(
-            plain, sizes, ctx.codec.eta_s, ctx.codec.b_slot,
-            padded=(ctx.cipher.backend == "limb"))
-        rows = np.asarray(vals, dtype=object).reshape(m, 1)
+            plain, sizes, ctx.codec.eta_s, ctx.codec.b_slot, padded=limb)
+        rows = np.asarray(vals, dtype=object).reshape(M, 1)
     else:
-        if ctx.cipher.backend == "limb":
-            flat2 = np.asarray(data).reshape(m * n_slots, -1)
+        if limb:
+            flat2 = np.asarray(data).reshape(M * n_slots, -1)
         else:
-            flat2 = data.reshape(m * n_slots)
+            flat2 = data.reshape(M * n_slots)
         plain = _decrypt_ints(ctx, flat2)
-        ctx.stats.n_decrypt += m * n_slots
-        rows = np.asarray(plain, dtype=object).reshape(m, n_slots)
-    g_l, h_l = ctx.codec.decode(rows, counts_l)
-    return SplitCandidates(party=host.hid, sid=np.arange(m), g_l=g_l, h_l=h_l,
-                           cnt_l=counts_l)
+        ctx.stats.n_decrypt += M * n_slots
+        rows = np.asarray(plain, dtype=object).reshape(M, n_slots)
+    g_l, h_l = ctx.codec.decode(rows, cl)
+    out = {}
+    for k, nid in enumerate(splittable):
+        sl = slice(k * m, (k + 1) * m)
+        out[nid] = SplitCandidates(party=host.hid, sid=np.arange(m),
+                                   g_l=g_l[sl], h_l=h_l[sl], cnt_l=cl[sl])
+    return out
 
 
 def _decrypt_ints(ctx: TreeContext, cts) -> list:
@@ -307,20 +355,22 @@ def _decrypt_ints(ctx: TreeContext, cts) -> list:
     return ctx.cipher.decrypt_to_ints(cts)
 
 
-def _guest_candidates(ctx: TreeContext, plain_engine: PlainHistogram,
-                      cache: dict, nid: int, rows_sel: np.ndarray, mode: str,
-                      parent_nid: int = -1, sibling_nid: int = -1):
-    if mode == "subtract" and (parent_nid not in cache
-                               or sibling_nid not in cache):
-        mode = "direct"
-    if mode == "subtract":
-        hist = plain_engine.subtract(cache[parent_nid], cache[sibling_nid])
-    else:
-        hist = plain_engine.node_histogram(ctx.guest_data, ctx.g, ctx.h,
-                                           rows_sel)
-    cache[nid] = hist
-    Gc, Hc, Cc = plain_engine.cumsum(hist)
-    return candidates_from_cumsum(Gc, Hc, Cc, party=GUEST)
+def _guest_layer_candidates(ctx: TreeContext, plain_engine: PlainHistogram,
+                            cache: dict, splittable: list, rows_sel: dict,
+                            hist_mode: dict) -> dict:
+    """Guest-side plaintext mirror of the layer batch: one composite
+    ``np.add.at`` pass for all direct nodes, subtraction for the rest."""
+    direct, subtract = _resolve_modes(splittable, hist_mode, cache,
+                                      ctx.params.histogram_subtraction)
+    node_rows = {nid: ctx.sel_rows[rows_sel[nid]] for nid in splittable}
+    hists = plain_engine.layer_histograms(ctx.guest_data, ctx.g, ctx.h,
+                                          node_rows, direct, subtract, cache)
+    cache.update(hists)
+    out = {}
+    for nid in splittable:
+        Gc, Hc, Cc = plain_engine.cumsum(hists[nid])
+        out[nid] = candidates_from_cumsum(Gc, Hc, Cc, party=GUEST)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -337,9 +387,13 @@ def grow_tree(ctx: TreeContext,
     if feature_parties is None:
         feature_parties = lambda d: (True, [h.hid for h in ctx.hosts])
 
+    # hoisted once per tree: g/h restricted to the GOSS selection
+    g_sel = ctx.g[ctx.sel_rows]
+    h_sel = ctx.h[ctx.sel_rows]
+
     any_host = any(feature_parties(d)[1] for d in range(p.max_depth))
     if any_host:
-        _encrypt_all(ctx)
+        _encrypt_all(ctx, g_sel, h_sel)
 
     plain_engine = PlainHistogram(p.n_bins, sparse=p.sparse)
     guest_cache: dict = {}
@@ -367,29 +421,41 @@ def grow_tree(ctx: TreeContext,
                 ctx.channel.send("guest", f"host{h.hid}", "assign_sync",
                                  node_of, node_of.size * 4)
 
+        # triage: nodes too small to split become leaves immediately; the
+        # rest form this layer's batch
+        splittable = []
         for nid in ordered:
+            rs = rows_sel[nid]
+            if len(rs) < 2 * p.min_leaf or len(rs) == 0:
+                nodes[nid].weight = leaf_weight(
+                    g_sel[rs].sum(axis=0), h_sel[rs].sum(axis=0),
+                    p.lam, p.learning_rate)
+            else:
+                splittable.append(nid)
+
+        # one candidate batch per party for the whole layer
+        guest_cands: dict = {}
+        if splittable and use_guest and ctx.guest_data.n_features > 0:
+            guest_cands = _guest_layer_candidates(
+                ctx, plain_engine, guest_cache, splittable, rows_sel,
+                hist_mode)
+        host_cands: dict = {}
+        if splittable:
+            for h in active_hosts:
+                host_cands[h.hid] = _host_layer_candidates(
+                    ctx, h, splittable, rows_sel, hist_mode)
+
+        for nid in splittable:
             node = nodes[nid]
             rs = rows_sel[nid]
-            mode, par, sib = hist_mode[nid]
-            if not p.histogram_subtraction:
-                mode, par, sib = "direct", -1, -1
-
-            gsel = ctx.g[ctx.sel_rows][rs]
-            hsel = ctx.h[ctx.sel_rows][rs]
-            G_tot = gsel.sum(axis=0)
-            H_tot = hsel.sum(axis=0)
-
-            if len(rs) < 2 * p.min_leaf or len(rs) == 0:
-                node.weight = leaf_weight(G_tot, H_tot, p.lam, p.learning_rate)
-                continue
+            G_tot = g_sel[rs].sum(axis=0)
+            H_tot = h_sel[rs].sum(axis=0)
 
             cands = []
-            if use_guest and ctx.guest_data.n_features > 0:
-                cands.append(_guest_candidates(
-                    ctx, plain_engine, guest_cache, nid, ctx.sel_rows[rs],
-                    mode, par, sib))
+            if nid in guest_cands:
+                cands.append(guest_cands[nid])
             for h in active_hosts:
-                cands.append(_host_candidates(ctx, h, nid, rs, mode, par, sib))
+                cands.append(host_cands[h.hid][nid])
 
             best = find_best_split(cands, G_tot, H_tot, len(rs), p.lam,
                                    p.min_leaf, p.min_gain)
@@ -444,9 +510,8 @@ def grow_tree(ctx: TreeContext,
     for node in nodes:
         if node.left == -1 and node.weight is None:
             rs = rows_sel[node.nid]
-            gsel = ctx.g[ctx.sel_rows][rs]
-            hsel = ctx.h[ctx.sel_rows][rs]
-            node.weight = leaf_weight(gsel.sum(axis=0), hsel.sum(axis=0),
+            node.weight = leaf_weight(g_sel[rs].sum(axis=0),
+                                      h_sel[rs].sum(axis=0),
                                       p.lam, p.learning_rate)
 
     # leaf row assignment for the score update

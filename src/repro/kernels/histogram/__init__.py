@@ -1,2 +1,3 @@
-from .ops import ciphertext_histogram, count_histogram  # noqa: F401
-from .ref import hist_ref  # noqa: F401
+from .ops import (ciphertext_histogram, count_histogram,  # noqa: F401
+                  layer_ciphertext_histogram, layer_count_histogram)
+from .ref import hist_ref, layer_hist_ref  # noqa: F401

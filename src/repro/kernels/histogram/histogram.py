@@ -30,6 +30,9 @@ from ..common import cdiv, default_interpret, round_up
 # out 8x32xLx4 -- comfortably < 16MB for L <= 512.
 BLOCK_I = 256
 BLOCK_F = 8
+# layer-batched variant: onehot grows to 256x(BF*BN*n_b); at the defaults
+# (BF=8, BN=8, n_b=32) that is 2MB fp32, out block 8x8x32xLx4.
+BLOCK_N = 8
 
 
 def _hist_kernel(bins_ref, cts_ref, out_ref, *, n_bins: int):
@@ -80,3 +83,73 @@ def hist_pallas(bins: jnp.ndarray, cts: jnp.ndarray, n_bins: int,
         interpret=interpret,
     )(bins_p, cts_p)
     return out[:n_f]
+
+
+def _layer_hist_kernel(bins_ref, node_ref, cts_ref, out_ref, *, n_bins: int,
+                       block_n: int):
+    n_blk = pl.program_id(0)
+    i_blk = pl.program_id(2)
+
+    @pl.when(i_blk == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bins = bins_ref[...]                       # (BI, BF) int32
+    local = node_ref[...][:, 0] - n_blk * block_n   # (BI,) slot within block
+    in_blk = (local >= 0) & (local < block_n)
+    comp = jnp.where(in_blk[:, None] & (bins >= 0),
+                     local[:, None] * n_bins + bins, -1)
+    oh = (comp[:, :, None] == jnp.arange(block_n * n_bins)[None, None, :])
+    oh = oh.astype(jnp.float32).reshape(bins.shape[0], -1)  # (BI, BF*BN*n_b)
+    cts = cts_ref[...].astype(jnp.float32)     # (BI, L)
+    # (BF*BN*n_b, L) = oh^T @ cts  -- contract the instance axis on the MXU
+    part = jax.lax.dot_general(oh, cts, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    out_ref[...] += part.astype(jnp.int32).reshape(out_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "interpret",
+                                             "block_i", "block_f", "block_n"))
+def layer_hist_pallas(bins: jnp.ndarray, node_slot: jnp.ndarray,
+                      cts: jnp.ndarray, n_nodes: int, n_bins: int,
+                      interpret: bool | None = None,
+                      block_i: int = BLOCK_I, block_f: int = BLOCK_F,
+                      block_n: int = BLOCK_N) -> jnp.ndarray:
+    """Layer-batched ciphertext histogram: see ref.layer_hist_ref.
+
+    One launch accumulates every direct-mode frontier node of a tree layer:
+    the one-hot axis is the composite ``node_slot[i] * n_bins + bins[i, f]``,
+    tiled over (node_block, feature_block, instance_block) with the instance
+    axis innermost (revisiting the same output block).
+
+    bins: (n_i, n_f) int32 (negative = masked), node_slot: (n_i,) int32
+    (negative = row not in any direct node), cts: (n_i, L) int32.
+    Returns (n_nodes, n_f, n_bins, L) int32 lazy limb sums.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n_i, n_f = bins.shape
+    L = cts.shape[-1]
+    block_n = min(block_n, round_up(max(n_nodes, 1), 2))
+    pi = round_up(max(n_i, 1), block_i)
+    pf = round_up(max(n_f, 1), block_f)
+    pn = round_up(max(n_nodes, 1), block_n)
+    bins_p = jnp.full((pi, pf), -1, jnp.int32).at[:n_i, :n_f].set(bins)
+    node_p = jnp.full((pi, 1), -1, jnp.int32).at[:n_i, 0].set(node_slot)
+    cts_p = jnp.zeros((pi, L), jnp.int32).at[:n_i].set(cts)
+
+    grid = (pn // block_n, pf // block_f, pi // block_i)
+    out = pl.pallas_call(
+        functools.partial(_layer_hist_kernel, n_bins=n_bins, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_i, block_f), lambda n, f, i: (i, f)),
+            pl.BlockSpec((block_i, 1), lambda n, f, i: (i, 0)),
+            pl.BlockSpec((block_i, L), lambda n, f, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_f, block_n, n_bins, L),
+                               lambda n, f, i: (f, n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((pf, pn, n_bins, L), jnp.int32),
+        interpret=interpret,
+    )(bins_p, node_p, cts_p)
+    return out[:n_f, :n_nodes].transpose(1, 0, 2, 3)

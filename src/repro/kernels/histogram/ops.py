@@ -4,8 +4,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .histogram import hist_pallas
-from .ref import hist_ref
+from .histogram import hist_pallas, layer_hist_pallas
+from .ref import hist_ref, layer_hist_ref
 
 
 def ciphertext_histogram(bins, cts, n_bins: int, use_pallas: bool = True,
@@ -27,3 +27,38 @@ def count_histogram(bins, n_bins: int) -> jnp.ndarray:
     """Plaintext per-bin instance counts: (n_f, n_b) int32."""
     oh = (bins[:, :, None] == jnp.arange(n_bins)[None, None, :])
     return oh.sum(axis=0).astype(jnp.int32)
+
+
+def layer_ciphertext_histogram(bins, node_slot, cts, n_nodes: int,
+                               n_bins: int, use_pallas: bool = True,
+                               interpret: bool | None = None) -> jnp.ndarray:
+    """Node-batched histogram for one tree layer: (n_i, n_f) bins x (n_i,)
+    node slots x (n_i, L) limb ciphertexts -> (n_nodes, n_f, n_b, L) lazy
+    sums.  One launch covers every direct-mode frontier node; masking rules
+    match :func:`ciphertext_histogram` (negative bin or slot = skipped).
+    """
+    bins = jnp.asarray(bins, jnp.int32)
+    node_slot = jnp.asarray(node_slot, jnp.int32)
+    cts = jnp.asarray(cts, jnp.int32)
+    if use_pallas:
+        return layer_hist_pallas(bins, node_slot, cts, n_nodes, n_bins,
+                                 interpret=interpret)
+    return layer_hist_ref(bins, node_slot, cts, n_nodes, n_bins)
+
+
+def layer_count_histogram(bins, node_slot, n_nodes: int, n_bins: int):
+    """Plaintext per-(node, feature, bin) instance counts:
+    (n_nodes, n_f, n_b) int32.  Counts never touch the cipher domain, so
+    this is a flat numpy bincount over the (feature, node, bin) composite
+    index -- O(n_i * n_f) memory, no one-hot materialized."""
+    import numpy as np
+    bins = np.asarray(bins, np.int64)
+    node_slot = np.asarray(node_slot, np.int64)
+    n_f = bins.shape[1]
+    comp = node_slot[:, None] * n_bins + bins       # (n_i, n_f)
+    valid = (node_slot[:, None] >= 0) & (bins >= 0)
+    f_idx = np.broadcast_to(np.arange(n_f)[None, :], comp.shape)
+    flat = (f_idx * (n_nodes * n_bins) + comp)[valid]
+    out = np.bincount(flat, minlength=n_f * n_nodes * n_bins)
+    return out.astype(np.int32).reshape(n_f, n_nodes,
+                                        n_bins).transpose(1, 0, 2)

@@ -17,3 +17,25 @@ def hist_ref(bins: jnp.ndarray, cts: jnp.ndarray, n_bins: int) -> jnp.ndarray:
     out = jnp.einsum("ifb,il->fbl", oh.astype(jnp.float32),
                      cts.astype(jnp.float32))
     return out.astype(jnp.int32)
+
+
+def layer_hist_ref(bins: jnp.ndarray, node_slot: jnp.ndarray,
+                   cts: jnp.ndarray, n_nodes: int,
+                   n_bins: int) -> jnp.ndarray:
+    """Reference node-batched ciphertext histogram (one tree layer).
+
+    bins:      (n_i, n_f) int32 bin per (instance, feature); negative = masked.
+    node_slot: (n_i,) int32 frontier-node slot of each instance in
+               [0, n_nodes); negative = instance not in any direct node.
+    cts:       (n_i, L) int32 limb vectors.
+    returns (n_nodes, n_f, n_b, L) int32 lazy (un-carried) limb sums: the
+    composite one-hot ``node_slot[i] * n_bins + bins[i, f]`` folds the whole
+    frontier into a single contraction.
+    """
+    comp = jnp.where((node_slot[:, None] >= 0) & (bins >= 0),
+                     node_slot[:, None] * n_bins + bins, -1)
+    oh = (comp[:, :, None] == jnp.arange(n_nodes * n_bins)[None, None, :])
+    out = jnp.einsum("ifc,il->fcl", oh.astype(jnp.float32),
+                     cts.astype(jnp.float32))
+    out = out.reshape(bins.shape[1], n_nodes, n_bins, cts.shape[-1])
+    return out.transpose(1, 0, 2, 3).astype(jnp.int32)

@@ -32,7 +32,8 @@ from ..optim import AdamWConfig, adamw_update, init_adamw
 from ..parallel.sharding import (batch_specs, cache_specs, opt_specs,
                                  param_specs)
 from .mesh import make_debug_mesh, make_production_mesh
-from .roofline import collective_bytes, model_flops, roofline_terms
+from .roofline import (collective_bytes, cost_analysis_dict, model_flops,
+                       roofline_terms)
 from .specs import SHAPES, abstract_params, cell_supported, input_specs
 
 
@@ -132,7 +133,7 @@ def run_cell(arch: str, shape: str, mesh, mesh_name: str,
     t_compile = time.time() - t0
 
     chips = mesh.devices.size
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     flops_pd = float(ca.get("flops", 0.0))
     bytes_pd = float(ca.get("bytes accessed", 0.0))
     try:
@@ -173,7 +174,7 @@ def run_cell(arch: str, shape: str, mesh, mesh_name: str,
 def _measure(arch, shape, mesh, cfg):
     _, lowered = lower_cell(arch, shape, mesh, cfg=cfg)
     compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     return (float(ca.get("flops", 0.0)),
             float(ca.get("bytes accessed", 0.0)),

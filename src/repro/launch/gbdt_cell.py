@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from ..launch.mesh import make_production_mesh
-from ..launch.roofline import collective_bytes, roofline_terms
+from ..launch.roofline import (collective_bytes, cost_analysis_dict,
+                                roofline_terms)
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 N, F, NB_BINS, NODES, W = 2 ** 18, 2000, 32, 16, 132
@@ -91,7 +92,7 @@ def run(variant: str, multi_pod: bool = False) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     lowered = lower_cell(mesh, variant)
     compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     terms = roofline_terms(float(ca.get("flops", 0)),
                            float(ca.get("bytes accessed", 0)),
