@@ -7,15 +7,31 @@ headline derived metric -- % tree-time reduction (paper: 37.5-82.4%
 IterativeAffine, 84.9-95.5% Paillier) -- and the layer-batching counters:
 histogram kernel launches and guest<->host split_infos round-trips per
 tree (O(depth) under the layer-batched grower, vs O(#nodes) per-node).
+
+The ``scale`` section measures the mesh-sharded frontier engine
+(DESIGN.md §7): the same federated training on the largest quick-bench
+shape, single device vs an (data, model) mesh over every visible device.
+Run with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to get the
+multi-device rows on CPU; they report per-tree speedup, bit-identity of
+predictions, and intra-party collective bytes (psum + node all-gather) from
+the ``Stats``/``Channel`` ledgers.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from .common import DATASETS, auc, emit, load, timed
 
 from repro.core import SBTParams, VerticalBoosting
+from repro.data import synthetic_tabular
+
+# largest quick-bench shape: instance-heavy so histogram accumulation (the
+# sharded stage) dominates the per-tree wall time; 3 trees amortize the
+# per-frontier-shape jit compilations into the steady state
+SCALE = dict(n=65536, d=16, n_trees=3, max_depth=4, n_bins=32)
 
 
 def _per_tree(stats, field: str, n_trees: int) -> float:
@@ -60,6 +76,53 @@ def run_pair(name: str, cipher: str, key_bits: int, n_trees: int = 4,
     }
 
 
+def run_scale():
+    """Mesh-sharded frontier engine vs single device on the scale shape."""
+    import jax
+
+    from repro.launch.mesh import make_gbdt_mesh
+
+    s = SCALE
+    X, y = synthetic_tabular(s["n"], s["d"], seed=0, task="binary")
+    # host-heavy vertical split (paper's setting: the passive party holds
+    # most features) -- the ciphertext histogram path is what shards
+    n_guest = max(2, s["d"] // 8)
+    Xg, Xh = X[:, :n_guest], X[:, n_guest:]
+    base = SBTParams(n_trees=s["n_trees"], max_depth=s["max_depth"],
+                     n_bins=s["n_bins"], cipher="plain", seed=1)
+
+    single = VerticalBoosting(base)
+    _, t1 = timed(lambda: single.fit(Xg, y, [Xh]))
+    rows = [(f"scale/{s['n']}x{s['d']}/plain/1dev",
+             t1 / s["n_trees"] * 1e6,
+             f"launches/tree={single.stats.n_hist_launches / s['n_trees']:.1f}"
+             f";devices=1")]
+
+    mesh = make_gbdt_mesh()
+    if mesh is None:
+        rows.append((f"scale/{s['n']}x{s['d']}/plain/sharded", 0.0,
+                     "SKIP:single-device (set XLA_FLAGS="
+                     "--xla_force_host_platform_device_count=8)"))
+        return rows
+
+    sharded = VerticalBoosting(dataclasses.replace(base, mesh=mesh))
+    _, t2 = timed(lambda: sharded.fit(Xg, y, [Xh]))
+    ident = bool(np.array_equal(sharded.predict_proba(Xg, [Xh]),
+                                single.predict_proba(Xg, [Xh])))
+    coll = sharded.channel.collective_summary()
+    rows.append((
+        f"scale/{s['n']}x{s['d']}/plain/{mesh.devices.size}dev",
+        t2 / s["n_trees"] * 1e6,
+        f"speedup={t1 / t2:.2f}x;bit_identical={ident}"
+        f";coll_mb={sharded.stats.coll_bytes / 1e6:.1f}"
+        f";psum_mb={coll.get('hist_psum', {}).get('bytes', 0) / 1e6:.1f}"
+        f";allgather_mb="
+        f"{coll.get('hist_allgather', {}).get('bytes', 0) / 1e6:.1f}"
+        f";n_collectives={sharded.stats.n_collectives}"
+        f";mesh={'x'.join(map(str, mesh.devices.shape))}"))
+    return rows
+
+
 def main(quick: bool = False):
     rows = []
     datasets = ["give_credit", "epsilon"] if quick else list(DATASETS)
@@ -79,6 +142,7 @@ def main(quick: bool = False):
                          f";launches/tree={r['plus_launches_per_tree']:.1f}"
                          f";roundtrips/tree="
                          f"{r['plus_roundtrips_per_tree']:.1f}"))
+    rows += run_scale()
     emit(rows)
     return rows
 

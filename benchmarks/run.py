@@ -1,18 +1,26 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` runs reduced dataset
-lists (CI); default runs the full set (minutes on CPU).
+lists (CI); default runs the full set (minutes on CPU).  ``--json out.json``
+additionally writes machine-readable results (name, us_per_call, the parsed
+derived counters, and environment info) so per-PR perf trajectories can be
+recorded and CI can upload the file as an artifact.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7,...]
+                                            [--json out.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import re
 import sys
 import traceback
 
 sys.path.insert(0, "src")
+
+_KEY_RE = re.compile(r"^[A-Za-z_][\w./-]*$")
 
 BENCHES = {
     "fig7_tree_build": "benchmarks.bench_tree_build",
@@ -24,26 +32,69 @@ BENCHES = {
 }
 
 
+def _parse_derived(derived: str) -> dict:
+    """'a=1;b=2.5x;c=foo' -> {'a': 1.0, 'b': '2.5x', 'c': 'foo'} (floats
+    where they parse, raw strings otherwise).  Fragments without an
+    identifier-like key (e.g. 'SKIP:...' markers) land under 'notes'."""
+    out = {}
+    for part in str(derived).split(";"):
+        k, _, v = part.partition("=")
+        if _KEY_RE.match(k) and _ == "=":
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+        elif part:
+            out.setdefault("notes", []).append(part)
+    return out
+
+
+def _env_info() -> dict:
+    info = {"python": sys.version.split()[0]}
+    try:
+        import jax
+        info["jax"] = jax.__version__
+        info["backend"] = jax.default_backend()
+        info["n_devices"] = len(jax.devices())
+    except Exception:                # noqa: BLE001
+        pass
+    return info
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None,
+                    help="write machine-readable results to this path")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")
     failures = 0
+    results = []
     for key, mod_name in BENCHES.items():
         if only and key not in only:
             continue
         print(f"# --- {key} ---", flush=True)
         try:
             mod = __import__(mod_name, fromlist=["main"])
-            mod.main(quick=args.quick)
+            rows = mod.main(quick=args.quick) or []
+            results += [{"bench": key, "name": name,
+                         "us_per_call": float(us),
+                         "stats": _parse_derived(derived)}
+                        for name, us, derived in rows]
         except Exception as e:        # noqa: BLE001
             failures += 1
             print(f"{key},0.0,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc()
+            results.append({"bench": key, "name": key, "us_per_call": 0.0,
+                            "stats": {"error": f"{type(e).__name__}: {e}"}})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"env": _env_info(), "quick": args.quick,
+                       "results": results}, f, indent=1)
+        print(f"# wrote {len(results)} results to {args.json}", flush=True)
     if failures:
         sys.exit(1)
 

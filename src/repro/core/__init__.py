@@ -1,3 +1,4 @@
 """SecureBoost+ core: vertical federated GBDT over homomorphic encryption."""
 
 from .boosting import LocalGBDT, SBTParams, VerticalBoosting  # noqa: F401
+from .frontier import CipherFrontier, FrontierState, GuestFrontier  # noqa: F401

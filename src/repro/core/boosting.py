@@ -59,6 +59,10 @@ class SBTParams:
     trees_per_party: int = 1           # mix mode
     use_pallas: bool = True
     seed: int = 0
+    mesh: object = None                # optional (data, model) jax Mesh: the
+                                       # frontier engine shards instances
+                                       # over "data" and the layer histogram
+                                       # node axis over "model" (DESIGN §5/§7)
 
 
 class VerticalBoosting:
@@ -151,7 +155,8 @@ class VerticalBoosting:
 
         codec = self._make_codec(cipher, g[sel], h[sel])
         engines = [CipherHistogram(cipher, p.n_bins, sparse=p.sparse,
-                                   use_pallas=p.use_pallas, stats=self.stats)
+                                   use_pallas=p.use_pallas, stats=self.stats,
+                                   mesh=p.mesh)
                    for _ in self.host_data]
         hosts = [HostRuntime(hid=i, data=d, engine=e)
                  for i, (d, e) in enumerate(zip(self.host_data, engines))]

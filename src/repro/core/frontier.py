@@ -1,0 +1,219 @@
+"""Device-resident, mesh-shardable frontier engine (DESIGN.md §7).
+
+PR 1 collapsed per-node kernel launches into one layer-batched launch but
+kept the layer state host-side: bins were re-masked and ciphertexts
+re-padded every layer, parent histograms travelled through plain dicts with
+``np.asarray``/``jnp.asarray`` conversions at each use, and the whole
+pipeline was pinned to one device.  This module makes the layer state
+device-resident for the lifetime of a tree:
+
+* :class:`FrontierState` — a registered pytree holding the host's
+  sparse-masked bin matrix (masked once), the width-padded ciphertext limb
+  batch (padded once), and the cache of canonical parent histograms — all
+  device arrays that persist across layers.
+* :class:`CipherFrontier` — the per-(tree, host) manager: builds the state,
+  assembles the per-layer ``node_slot`` vector, invokes the engine's layer
+  accumulation (single-device or ``shard_map``-sharded over a
+  (data, model) mesh — see ``kernels/histogram/ops.py``), and owns
+  histogram-cache insertion and eviction.  It also tallies intra-party
+  collective bytes into ``Stats``/``Channel``, kept separate from
+  cross-party wire bytes.
+* :class:`GuestFrontier` — the plaintext guest mirror (numpy float64; the
+  guest never enters the cipher domain for its own features).
+
+The Paillier oracle backend (python-int object arrays) flows through
+:class:`CipherFrontier` too, with object-array state instead of device
+arrays — the protocol shape is identical, only the arithmetic substrate
+differs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .binning import BinnedData
+
+
+@dataclasses.dataclass
+class FrontierState:
+    """Device-resident per-(tree, host) layer state (a registered pytree).
+
+    ``bins``: (n, n_f) int32, sparse cells already masked to -1.
+    ``cts``:  (n, n_slots, width) int32 limbs, padded to the cipher's
+              histogram width once per tree.
+    ``hists``: {nid: canonical (n_f, n_b, n_slots, L) histogram} — parent
+              histograms cached for subtraction, as device arrays.
+    """
+    bins: object
+    cts: object
+    hists: dict
+
+    def tree_flatten(self):
+        keys = tuple(sorted(self.hists))
+        return ((self.bins, self.cts,
+                 tuple(self.hists[k] for k in keys)), keys)
+
+    @classmethod
+    def tree_unflatten(cls, keys, leaves):
+        bins, cts, hs = leaves
+        return cls(bins=bins, cts=cts, hists=dict(zip(keys, hs)))
+
+
+def _register():
+    import jax
+    jax.tree_util.register_pytree_node(
+        FrontierState,
+        lambda s: s.tree_flatten(),
+        FrontierState.tree_unflatten)
+
+
+_register()
+
+
+class CipherFrontier:
+    """Frontier manager for one (tree, host) pair on the cipher engine.
+
+    Construction happens once per tree, right after the encrypted-GH
+    broadcast: the selected-row view and the ciphertext batch move to the
+    device (sharded per the GBDT rule table when the engine has a
+    multi-device mesh) and stay there; per layer only the small
+    ``node_slot`` vector crosses the host boundary.
+    """
+
+    def __init__(self, engine, data: BinnedData, cts, channel=None,
+                 party: str = ""):
+        self.engine = engine
+        cipher = engine.cipher
+        self.limb = cipher.backend == "limb"
+        self.sparse = engine.sparse and data.zero_mask is not None
+        self.data = data
+        self.channel = channel
+        self.party = party
+        self.counts: dict = {}          # nid -> (n_f, n_b) int64, plaintext
+
+        bins_np = data.bins.astype(np.int32)
+        if self.sparse:
+            bins_np = np.where(data.zero_mask, -1, bins_np)
+        self.bins_np = bins_np          # host mirror for plaintext counts
+
+        self._n_rows_dev = bins_np.shape[0]
+        if self.limb:
+            import jax
+            import jax.numpy as jnp
+            cts_j = jnp.asarray(cts)
+            width = cipher.hist_width
+            per = cts_j.shape[-1]
+            cts_wide = jnp.pad(cts_j, ((0, 0), (0, 0), (0, width - per)))
+            bins_dev = jnp.asarray(bins_np)
+            mesh = getattr(engine, "mesh", None)
+            if mesh is not None and mesh.devices.size > 1:
+                from ..parallel.sharding import gbdt_sharding
+                # pad the instance axis so it divides the data-axis extent
+                # (device_put of a sharded layout requires divisibility; pad
+                # rows carry bins = -1 / cts = 0 and never receive a slot)
+                dd = dict(mesh.shape).get("data", 1)
+                n = bins_dev.shape[0]
+                pad = -n % dd
+                if pad:
+                    bins_dev = jnp.pad(bins_dev, ((0, pad), (0, 0)),
+                                       constant_values=-1)
+                    cts_wide = jnp.pad(cts_wide,
+                                       ((0, pad), (0, 0), (0, 0)))
+                self._n_rows_dev = n + pad
+                # features replicate over "model" inside one party's
+                # dispatch: every node shard needs every local feature
+                bins_dev = jax.device_put(
+                    bins_dev, gbdt_sharding(mesh, "bins",
+                                            replicate=("model",)))
+                cts_wide = jax.device_put(
+                    cts_wide, gbdt_sharding(mesh, "gh_cts"))
+            self.state = FrontierState(bins=bins_dev, cts=cts_wide, hists={})
+            # flattened (n, slots*width) view for the kernel dispatch,
+            # materialized once per tree (sharding preserved: axis 0 = data)
+            self.cts_flat = cts_wide.reshape(cts_wide.shape[0], -1)
+            self.cts_obj = None
+        else:
+            self.state = FrontierState(bins=None, cts=None, hists={})
+            self.cts_flat = None
+            self.cts_obj = np.asarray(cts, dtype=object)
+
+    # -- cache ----------------------------------------------------------
+    def __contains__(self, nid) -> bool:
+        return nid in self.state.hists
+
+    def hist(self, nid):
+        return self.state.hists[nid]
+
+    def count(self, nid):
+        return self.counts[nid]
+
+    def store(self, nid, hist, cnt) -> None:
+        self.state.hists[nid] = hist
+        self.counts[nid] = cnt
+
+    def evict(self, nids) -> None:
+        for nid in nids:
+            self.state.hists.pop(nid, None)
+            self.counts.pop(nid, None)
+
+    # -- per-layer ------------------------------------------------------
+    def layer_slots(self, node_rows: dict, direct: list) -> np.ndarray:
+        """(n,) int32 direct-slot assignment aligned with the device bins
+        (including mesh padding rows): row -> index into ``direct`` (-1 =
+        row not in any direct-mode frontier node this layer)."""
+        node_slot = np.full(self._n_rows_dev, -1, np.int32)
+        for k, nid in enumerate(direct):
+            node_slot[node_rows[nid]] = k
+        return node_slot
+
+    def layer_histograms(self, node_rows: dict, direct: list,
+                         subtract: list) -> dict:
+        """All frontier histograms of one layer; caches the results for the
+        next layer's subtraction.  Returns {nid: (hist, counts)}."""
+        out = self.engine.layer_histograms(self, node_rows, direct, subtract)
+        for nid, (h, c) in out.items():
+            self.store(nid, h, c)
+        return out
+
+    # -- accounting -----------------------------------------------------
+    def collective(self, kind: str, nbytes: int) -> None:
+        """Tally an intra-party device collective (psum of lazy limb sums):
+        separate ledger from cross-party wire bytes."""
+        stats = getattr(self.engine, "stats", None)
+        if stats is not None:
+            stats.coll_bytes += int(nbytes)
+            stats.n_collectives += 1
+        if self.channel is not None:
+            self.channel.collective(self.party, kind, nbytes)
+
+
+class GuestFrontier:
+    """Plaintext guest-side frontier state: per-tree histogram cache for
+    the guest's own features (numpy; no cipher domain)."""
+
+    def __init__(self, engine, data: BinnedData, g, h):
+        self.engine = engine
+        self.data = data
+        self.g = g
+        self.h = h
+        self.cache: dict = {}
+
+    def __contains__(self, nid) -> bool:
+        return nid in self.cache
+
+    def evict(self, nids) -> None:
+        for nid in nids:
+            self.cache.pop(nid, None)
+
+    def layer_histograms(self, node_rows: dict, direct: list,
+                         subtract: list) -> dict:
+        hists = self.engine.layer_histograms(self.data, self.g, self.h,
+                                             node_rows, direct, subtract,
+                                             self.cache)
+        self.cache.update(hists)
+        return hists
+
+    def cumsum(self, hist):
+        return self.engine.cumsum(hist)

@@ -22,15 +22,24 @@ layer is accumulated by a SINGLE kernel launch over the composite one-hot
 is applied in the still-lazy limb domain (``cipher.lazy_sub``), and ONE
 ``cipher.reduce`` canonicalizes the whole layer.  This collapses
 O(2**depth) kernel launches and Barrett passes per layer to O(1).
+
+The cipher layer path operates on a ``core.frontier.CipherFrontier`` — the
+device-resident layer state (DESIGN.md §7): bins masked and ciphertexts
+width-padded once per tree, parent histograms cached as device arrays.
+When the engine is built with a (data, model) mesh the single dispatch is
+``shard_map``-sharded (per-shard kernel + lazy int32 psum over "data",
+node blocks over "model") and remains bit-identical to one device.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from ..kernels.histogram import (ciphertext_histogram, count_histogram,
+from ..kernels.histogram import (allgather_wire_bytes, ciphertext_histogram,
+                                 count_histogram,
                                  layer_ciphertext_histogram,
-                                 layer_count_histogram)
+                                 layer_count_histogram, psum_wire_bytes,
+                                 sharded_layer_ciphertext_histogram)
 from .binning import BinnedData
 
 
@@ -138,12 +147,16 @@ class CipherHistogram:
     """Ciphertext histograms over limb arrays (or Paillier object arrays)."""
 
     def __init__(self, cipher, n_bins: int, sparse: bool = False,
-                 use_pallas: bool = True, stats=None):
+                 use_pallas: bool = True, stats=None, mesh=None):
         self.cipher = cipher
         self.n_bins = n_bins
         self.sparse = sparse
         self.use_pallas = use_pallas
         self.stats = stats          # optional party.Stats for launch counts
+        self.mesh = mesh            # optional (data, model) mesh (DESIGN §5)
+
+    def _mesh_devices(self) -> int:
+        return self.mesh.devices.size if self.mesh is not None else 1
 
     def _count_launch(self):
         if self.stats is not None:
@@ -202,51 +215,48 @@ class CipherHistogram:
                 add_at(hist[f], bins[keep, f], cts[keep])
         return hist
 
-    # -- layer-batched accumulation (DESIGN.md §6) ------------------------
-    def layer_histograms(self, data: BinnedData, cts, node_rows: dict,
-                         direct: list, subtract: list, cache: dict) -> dict:
+    # -- layer-batched accumulation (DESIGN.md §6/§7) ---------------------
+    def layer_histograms(self, frontier, node_rows: dict, direct: list,
+                         subtract: list) -> dict:
         """All frontier histograms of one tree layer in one batch.
 
-        data/cts:  the host's selected-row view, aligned row-for-row.
-        node_rows: {nid: row positions into data/cts}.
-        direct:    nids accumulated directly -- ONE kernel launch for all.
+        frontier:  a ``core.frontier.CipherFrontier`` — the device-resident
+                   layer state: sparse-masked bins and width-padded
+                   ciphertext limbs (placed once per tree), plus the cache
+                   of canonical parent histograms as device arrays.
+        node_rows: {nid: row positions into the frontier's view}.
+        direct:    nids accumulated directly -- ONE kernel dispatch for all
+                   (``shard_map``-sharded over the engine's mesh when one is
+                   set: per-shard kernel + lazy int32 psum over "data",
+                   node blocks over "model").
         subtract:  (nid, parent, sibling) triples; the parent's canonical
-                   histogram is read from ``cache``, the sibling must be in
-                   ``direct``.  Subtraction happens in the lazy limb domain
-                   (``cipher.lazy_sub``) so a SINGLE ``cipher.reduce``
-                   canonicalizes direct and subtracted nodes together.
-        Returns {nid: (hist, counts)}; ``cache`` is not written.
+                   histogram is read from the frontier cache, the sibling
+                   must be in ``direct``.  Subtraction happens in the lazy
+                   limb domain (``cipher.lazy_sub``) so a SINGLE
+                   ``cipher.reduce`` canonicalizes direct and subtracted
+                   nodes together.
+        Returns {nid: (hist, counts)}; the frontier owns cache writes.
         """
         if self.cipher.backend != "limb":
-            return self._pyobj_layer(data, cts, node_rows, direct, subtract,
-                                     cache)
+            return self._pyobj_layer(frontier, node_rows, direct, subtract)
         import jax.numpy as jnp
-        n_f, n_b = data.n_features, self.n_bins
-        bins = data.bins.astype(np.int32)
-        sparse = self.sparse and data.zero_mask is not None
-        if sparse:
-            bins = np.where(data.zero_mask, -1, bins)
+        n_f, n_b = frontier.data.n_features, self.n_bins
+        sparse = frontier.sparse
         slot_of = {nid: k for k, nid in enumerate(direct)}
-        node_slot = np.full(data.n_instances, -1, np.int32)
-        for nid in direct:
-            node_slot[node_rows[nid]] = slot_of[nid]
+        node_slot = frontier.layer_slots(node_rows, direct)
 
         out = {}
         n_d = len(direct)
         counts = np.zeros((n_d, n_f, n_b), np.int64)
-        canon_direct = None
         lazy = None
-        width = self.cipher.hist_width
         if n_d:
+            # node_slot is aligned with the (possibly mesh-padded) device
+            # bins; the plaintext counts run on the unpadded host mirror
             counts = np.asarray(layer_count_histogram(
-                bins, node_slot, n_d, n_b)).astype(np.int64)
-            cts_j = jnp.asarray(cts)
-            n, n_slots, per = cts_j.shape
-            padded = jnp.pad(cts_j, ((0, 0), (0, 0), (0, width - per)))
-            lazy = layer_ciphertext_histogram(
-                bins, node_slot, padded.reshape(n, n_slots * width),
-                n_d, n_b, use_pallas=self.use_pallas)
-            self._count_launch()
+                frontier.bins_np, node_slot[: frontier.bins_np.shape[0]],
+                n_d, n_b)).astype(np.int64)
+            lazy = self._layer_dispatch(frontier, node_slot, n_d)
+            n, n_slots, width = frontier.state.cts.shape
             lazy = lazy.reshape(n_d, n_f, n_b, n_slots, width)
 
         if sparse:
@@ -256,25 +266,27 @@ class CipherHistogram:
             if n_d:
                 canon_direct = self.cipher.reduce(lazy)
                 canon_direct = self._layer_sparse_fix(
-                    data, canon_direct, padded, node_slot)
-                zb = np.asarray(data.zero_bins, np.int64)
+                    frontier.data, canon_direct, frontier.state.cts,
+                    node_slot)
+                zb = np.asarray(frontier.data.zero_bins, np.int64)
                 for k, nid in enumerate(direct):
                     for f in range(n_f):
                         counts[k, f, zb[f]] += (len(node_rows[nid])
                                                 - counts[k, f].sum())
                     out[nid] = (canon_direct[k], counts[k])
             if subtract:
-                parents = jnp.stack([jnp.asarray(cache[par][0])
+                # parents are device arrays in the frontier cache: one stack,
+                # no per-node host->device copies
+                parents = jnp.stack([frontier.hist(par)
                                      for _, par, _ in subtract])
-                children = jnp.stack([jnp.asarray(out[sib][0])
-                                      for _, _, sib in subtract])
+                children = jnp.stack([out[sib][0] for _, _, sib in subtract])
                 subs = self.cipher.sub(parents, children)
                 for j, (nid, par, sib) in enumerate(subtract):
-                    out[nid] = (subs[j], cache[par][1] - out[sib][1])
+                    out[nid] = (subs[j], frontier.count(par) - out[sib][1])
             return out
 
         # dense path: lazy subtraction, one reduce for the whole layer
-        sub_lazy = [self.cipher.lazy_sub(jnp.asarray(cache[par][0]),
+        sub_lazy = [self.cipher.lazy_sub(frontier.hist(par),
                                          lazy[slot_of[sib]],
                                          len(node_rows[sib]))
                     for _, par, sib in subtract]
@@ -287,17 +299,55 @@ class CipherHistogram:
             out[nid] = (canon[k], counts[k])
         for j, (nid, par, sib) in enumerate(subtract):
             out[nid] = (canon[n_d + j],
-                        cache[par][1] - counts[slot_of[sib]])
+                        frontier.count(par) - counts[slot_of[sib]])
         return out
 
-    def _pyobj_layer(self, data, cts, node_rows, direct, subtract, cache):
+    def _layer_dispatch(self, frontier, node_slot: np.ndarray, n_d: int):
+        """One accumulation dispatch for the layer's direct nodes: the
+        single-device kernel, or the shard_map dispatch (+ lazy-limb psum
+        over "data") when the engine carries a multi-device mesh."""
+        state = frontier.state
+        n_slots, width = state.cts.shape[1:]
+        flat = frontier.cts_flat          # flattened once per tree
+        # pad the node axis to the next power of two: the node count is a
+        # static kernel arg, so this caps distinct jit compilations at
+        # O(log max_nodes) per tree shape instead of one per frontier size
+        n_pad = 1 << max(n_d - 1, 0).bit_length()
+        if self._mesh_devices() > 1:
+            lazy = sharded_layer_ciphertext_histogram(
+                state.bins, node_slot, flat, n_pad, self.n_bins, self.mesh,
+                use_pallas=self.use_pallas)[:n_d]
+            sizes = dict(self.mesh.shape)
+            # bytes reflect the padded node count the dispatch actually
+            # moves; axes of extent 1 run no collective and tally nothing
+            mm = sizes.get("model", 1)
+            npm = -(-n_pad // mm)
+            shard_bytes = (npm * frontier.data.n_features * self.n_bins
+                           * n_slots * width * 4)
+            if sizes.get("data", 1) > 1:
+                frontier.collective("hist_psum",
+                                    psum_wire_bytes(self.mesh, shard_bytes))
+            if mm > 1:
+                frontier.collective(
+                    "hist_allgather",
+                    allgather_wire_bytes(self.mesh, shard_bytes * mm))
+        else:
+            lazy = layer_ciphertext_histogram(
+                state.bins, node_slot, flat, n_pad, self.n_bins,
+                use_pallas=self.use_pallas)[:n_d]
+        self._count_launch()
+        return lazy
+
+    def _pyobj_layer(self, frontier, node_rows, direct, subtract):
         """Paillier-oracle layer path: per-node accumulation (clarity over
         speed -- the protocol round-trip is still batched by the caller)."""
         out = {}
         for nid in direct:
-            out[nid] = self.node_histogram(data, cts, node_rows[nid])
+            out[nid] = self.node_histogram(frontier.data, frontier.cts_obj,
+                                           node_rows[nid])
         for nid, par, sib in subtract:
-            out[nid] = self.subtract(cache[par], out[sib])
+            out[nid] = self.subtract((frontier.hist(par),
+                                      frontier.count(par)), out[sib])
         return out
 
     # -- paper tricks -------------------------------------------------------
@@ -306,6 +356,7 @@ class CipherHistogram:
 
         hist: (n_d, n_f, n_b, n_slots, L) canonical; cts_wide: (n, n_slots,
         width) padded limbs aligned with node_slot."""
+        import jax
         import jax.numpy as jnp
         from .he import limbs
         n_d = hist.shape[0]
@@ -314,6 +365,10 @@ class CipherHistogram:
         slot = np.where(node_slot < 0, n_d, node_slot)
         tot_lazy = jnp.zeros((n_d + 1,) + tuple(cts_wide.shape[1:]),
                              jnp.int32).at[jnp.asarray(slot)].add(cts_wide)
+        if self._mesh_devices() > 1:
+            # cts live mesh-sharded; land the small per-node totals next to
+            # the (single-device) gathered histograms before mixing
+            tot_lazy = jax.device_put(tot_lazy, jax.devices()[0])
         node_total = self.cipher.reduce(tot_lazy[:n_d])   # (n_d, slots, L)
         nz = self.cipher.reduce(
             limbs.pad_limbs(hist, width).sum(axis=2))     # (n_d, n_f, s, L)

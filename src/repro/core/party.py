@@ -35,6 +35,8 @@ class Stats:
     n_packages: int = 0         # ciphertexts actually decrypted/transferred
     n_hist_launches: int = 0    # histogram accumulation kernel launches
     n_split_roundtrips: int = 0  # guest<->host split_infos exchanges
+    n_collectives: int = 0      # intra-party device collectives (psum)
+    coll_bytes: int = 0         # analytic bytes moved by those collectives
     tree_seconds: list = dataclasses.field(default_factory=list)
 
     def as_dict(self):
@@ -44,10 +46,19 @@ class Stats:
 
 
 class Channel:
+    """Cross-party wire ledger plus a *separate* intra-party collective
+    ledger: device collectives (the frontier engine's lazy-limb psum over
+    the "data" mesh axis, DESIGN.md §7) never cross a party boundary, so
+    they must not inflate the protocol's wire-byte accounting — but they
+    are real interconnect traffic worth reporting for the scaling story."""
+
     def __init__(self):
         self.ledger = []
         self.totals = collections.Counter()
         self.msgs = collections.Counter()
+        self.coll_ledger = []
+        self.coll_totals = collections.Counter()
+        self.coll_msgs = collections.Counter()
 
     def send(self, src: str, dst: str, tag: str, payload, nbytes: int):
         self.ledger.append((src, dst, tag, int(nbytes)))
@@ -55,10 +66,25 @@ class Channel:
         self.msgs[tag] += 1
         return payload
 
+    def collective(self, party: str, kind: str, nbytes: int) -> None:
+        """Record an intra-party device collective (analytic byte count)."""
+        self.coll_ledger.append((party, kind, int(nbytes)))
+        self.coll_totals[kind] += int(nbytes)
+        self.coll_msgs[kind] += 1
+
     @property
     def total_bytes(self) -> int:
         return sum(self.totals.values())
 
+    @property
+    def total_collective_bytes(self) -> int:
+        return sum(self.coll_totals.values())
+
     def summary(self) -> dict:
         return {tag: {"bytes": self.totals[tag], "msgs": self.msgs[tag]}
                 for tag in sorted(self.totals)}
+
+    def collective_summary(self) -> dict:
+        return {kind: {"bytes": self.coll_totals[kind],
+                       "msgs": self.coll_msgs[kind]}
+                for kind in sorted(self.coll_totals)}

@@ -21,6 +21,12 @@ the fixed per-node candidate count.  Kernel launches and round-trips per
 tree are therefore O(depth), not O(2**depth); ``Stats.n_hist_launches`` /
 ``Stats.n_split_roundtrips`` make the collapse measurable.
 
+Layer state is *device-resident* (DESIGN.md §7): each host builds a
+``CipherFrontier`` per tree (bins masked + ciphertexts width-padded once,
+parent histograms cached as device arrays) and, when the engine carries a
+(data, model) mesh, the single layer dispatch is ``shard_map``-sharded with
+a lazy-limb psum over instance shards -- bit-identical to one device.
+
 Party boundaries are explicit: everything that crosses guest<->host goes
 through ``ctx.channel.send`` with wire-fidelity byte counts, and HE work is
 tallied in ``ctx.stats``.
@@ -36,6 +42,7 @@ import numpy as np
 from . import compress as compress_mod
 from . import encoding, mo_encoding
 from .binning import BinnedData
+from .frontier import CipherFrontier, GuestFrontier
 from .he import limbs
 from .histogram import CipherHistogram, PlainHistogram
 from .party import Channel, Stats, ct_wire_bytes
@@ -155,10 +162,9 @@ class HostRuntime:
     data: BinnedData
     engine: CipherHistogram
     cts: object = None           # (n_sel, n_slots, L) limbs / (n_sel, n_slots) obj
-    view: BinnedData | None = None   # rows restricted to the GOSS selection,
-                                     # aligned with cts (host derives it from
-                                     # the synced selected-id list)
-    hist_cache: dict = dataclasses.field(default_factory=dict)
+    frontier: CipherFrontier | None = None   # device-resident layer state:
+                                     # the GOSS-selected view + padded cts +
+                                     # parent-histogram cache (DESIGN.md §7)
     perms: dict = dataclasses.field(default_factory=dict)
     table: dict = dataclasses.field(default_factory=dict)
 
@@ -202,23 +208,29 @@ def _encrypt_all(ctx: TreeContext, g_sel: np.ndarray,
         host.cts = ctx.channel.send("guest", f"host{host.hid}", "enc_gh",
                                     cts, nbytes)
         # host restricts its binned matrix to the synced selected ids so row
-        # positions align with the ciphertext batch
-        host.view = dataclasses.replace(
+        # positions align with the ciphertext batch, then builds the
+        # device-resident frontier state for this tree (bins masked and
+        # ciphertexts width-padded once; sharded over the engine's mesh)
+        view = dataclasses.replace(
             host.data, bins=host.data.bins[ctx.sel_rows],
             zero_mask=(host.data.zero_mask[ctx.sel_rows]
                        if host.data.zero_mask is not None else None))
+        host.frontier = CipherFrontier(host.engine, view, host.cts,
+                                       channel=ctx.channel,
+                                       party=f"host{host.hid}")
 
 
-def _resolve_modes(splittable: list, hist_mode: dict, cache: dict,
+def _resolve_modes(splittable: list, hist_mode: dict, cache,
                    subtraction_on: bool) -> tuple[list, list]:
     """Partition a layer's splittable nodes into direct / subtract batches.
 
-    A node keeps its scheduled "subtract" mode only when its parent's
-    histogram is cached AND its (direct-mode) sibling is being computed this
-    layer -- otherwise it falls back to direct, exactly like the per-node
-    path did when a sibling exited early as a leaf.  ``splittable`` must be
-    ordered direct-first so siblings are classified before their subtract
-    partners."""
+    ``cache`` is any container answering ``nid in cache`` for cached parent
+    histograms (a ``CipherFrontier`` / ``GuestFrontier``).  A node keeps its
+    scheduled "subtract" mode only when its parent's histogram is cached AND
+    its (direct-mode) sibling is being computed this layer -- otherwise it
+    falls back to direct, exactly like the per-node path did when a sibling
+    exited early as a leaf.  ``splittable`` must be ordered direct-first so
+    siblings are classified before their subtract partners."""
     direct: list = []
     subtract: list = []
     direct_set: set = set()
@@ -252,19 +264,18 @@ def _host_layer_candidates(ctx: TreeContext, host: HostRuntime,
     if limb:
         import jax.numpy as jnp
 
-    direct, subtract = _resolve_modes(splittable, hist_mode, host.hist_cache,
+    direct, subtract = _resolve_modes(splittable, hist_mode, host.frontier,
                                       p.histogram_subtraction)
     node_rows = {nid: rows_sel[nid] for nid in splittable}
-    hists = engine.layer_histograms(host.view, host.cts, node_rows,
-                                    direct, subtract, host.hist_cache)
-    host.hist_cache.update(hists)
+    hists = host.frontier.layer_histograms(node_rows, direct, subtract)
     for nid in direct:
         ctx.stats.n_hom_add += int(hists[nid][1].sum()) * n_slots
     ctx.stats.n_hom_add += len(subtract) * n_f * n_b * n_slots
 
     # batched cumsum over the node axis, then per-node shuffle + concat
+    # (histograms are already device arrays -- no host round-trip)
     if limb:
-        stack = jnp.stack([jnp.asarray(hists[nid][0]) for nid in splittable])
+        stack = jnp.stack([hists[nid][0] for nid in splittable])
     else:
         stack = np.stack([hists[nid][0] for nid in splittable])
     cum = engine.cumsum(stack)
@@ -355,20 +366,18 @@ def _decrypt_ints(ctx: TreeContext, cts) -> list:
     return ctx.cipher.decrypt_to_ints(cts)
 
 
-def _guest_layer_candidates(ctx: TreeContext, plain_engine: PlainHistogram,
-                            cache: dict, splittable: list, rows_sel: dict,
+def _guest_layer_candidates(ctx: TreeContext, guest_frontier: GuestFrontier,
+                            splittable: list, rows_sel: dict,
                             hist_mode: dict) -> dict:
     """Guest-side plaintext mirror of the layer batch: one composite
     ``np.add.at`` pass for all direct nodes, subtraction for the rest."""
-    direct, subtract = _resolve_modes(splittable, hist_mode, cache,
+    direct, subtract = _resolve_modes(splittable, hist_mode, guest_frontier,
                                       ctx.params.histogram_subtraction)
     node_rows = {nid: ctx.sel_rows[rows_sel[nid]] for nid in splittable}
-    hists = plain_engine.layer_histograms(ctx.guest_data, ctx.g, ctx.h,
-                                          node_rows, direct, subtract, cache)
-    cache.update(hists)
+    hists = guest_frontier.layer_histograms(node_rows, direct, subtract)
     out = {}
     for nid in splittable:
-        Gc, Hc, Cc = plain_engine.cumsum(hists[nid])
+        Gc, Hc, Cc = guest_frontier.cumsum(hists[nid])
         out[nid] = candidates_from_cumsum(Gc, Hc, Cc, party=GUEST)
     return out
 
@@ -396,7 +405,7 @@ def grow_tree(ctx: TreeContext,
         _encrypt_all(ctx, g_sel, h_sel)
 
     plain_engine = PlainHistogram(p.n_bins, sparse=p.sparse)
-    guest_cache: dict = {}
+    guest_frontier = GuestFrontier(plain_engine, ctx.guest_data, ctx.g, ctx.h)
 
     n_all = ctx.guest_data.n_instances
     nodes = [Node(nid=0, depth=0, n_rows=n_all)]
@@ -437,8 +446,7 @@ def grow_tree(ctx: TreeContext,
         guest_cands: dict = {}
         if splittable and use_guest and ctx.guest_data.n_features > 0:
             guest_cands = _guest_layer_candidates(
-                ctx, plain_engine, guest_cache, splittable, rows_sel,
-                hist_mode)
+                ctx, guest_frontier, splittable, rows_sel, hist_mode)
         host_cands: dict = {}
         if splittable:
             for h in active_hosts:
@@ -500,10 +508,11 @@ def grow_tree(ctx: TreeContext,
                 hist_mode[lid] = ("subtract", nid, rid)
             next_frontier += [lid, rid]
         # free parent histograms no longer needed
-        for nid in frontier:
-            guest_cache.pop(hist_mode[nid][1], None)
-            for h in ctx.hosts:
-                h.hist_cache.pop(hist_mode[nid][1], None)
+        parents_done = [hist_mode[nid][1] for nid in frontier]
+        guest_frontier.evict(parents_done)
+        for h in ctx.hosts:
+            if h.frontier is not None:
+                h.frontier.evict(parents_done)
         frontier = next_frontier
 
     # finalize leaves at max depth

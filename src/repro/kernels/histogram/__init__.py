@@ -1,3 +1,5 @@
-from .ops import (ciphertext_histogram, count_histogram,  # noqa: F401
-                  layer_ciphertext_histogram, layer_count_histogram)
+from .ops import (allgather_wire_bytes, ciphertext_histogram,  # noqa: F401
+                  count_histogram, layer_ciphertext_histogram,
+                  layer_count_histogram, psum_wire_bytes,
+                  sharded_layer_ciphertext_histogram)
 from .ref import hist_ref, layer_hist_ref  # noqa: F401

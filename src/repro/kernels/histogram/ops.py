@@ -1,9 +1,26 @@
-"""Jit'd public wrappers around the ciphertext histogram kernel."""
+"""Jit'd public wrappers around the ciphertext histogram kernel.
+
+Single-device dispatchers plus the mesh-sharded layer dispatch
+(:func:`sharded_layer_ciphertext_histogram`, DESIGN.md §5/§7): instance
+tiles shard over the "data" mesh axis, node blocks over "model", and the
+cross-shard reduction is a *lazy-limb* int32 psum — carries stay deferred
+across the collective, so one ``cipher.reduce`` after the psum yields a
+result bit-identical to the single-device path (int32 addition is exact and
+order-free; the in-tile fp32 dots are exact per §3 regardless of how
+instances are tiled across shards).
+"""
 
 from __future__ import annotations
 
-import jax.numpy as jnp
+import functools
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..common import cdiv, default_interpret, round_up
 from .histogram import hist_pallas, layer_hist_pallas
 from .ref import hist_ref, layer_hist_ref
 
@@ -46,12 +63,99 @@ def layer_ciphertext_histogram(bins, node_slot, cts, n_nodes: int,
     return layer_hist_ref(bins, node_slot, cts, n_nodes, n_bins)
 
 
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "mesh",
+                                             "use_pallas", "interpret"))
+def _sharded_layer_hist(bins, node_slot, cts, n_nodes: int, n_bins: int,
+                        mesh, use_pallas: bool, interpret: bool):
+    sizes = dict(mesh.shape)
+    dd, mm = sizes.get("data", 1), sizes.get("model", 1)
+    n_i, n_f = bins.shape
+    L = cts.shape[-1]
+    npm = cdiv(n_nodes, mm)              # node block per model shard
+    pi = round_up(max(n_i, 1), dd)
+    # pad rows land on the last data shard with node_slot = -1 (ignored)
+    bins_p = jnp.full((pi, n_f), -1, jnp.int32).at[:n_i].set(bins)
+    slot_p = jnp.full((pi,), -1, jnp.int32).at[:n_i].set(node_slot)
+    cts_p = jnp.zeros((pi, L), jnp.int32).at[:n_i].set(cts)
+
+    def local(b, s, c):
+        m_idx = jax.lax.axis_index("model")
+        ls = s - m_idx * npm             # slot within this model shard's block
+        ls = jnp.where((ls >= 0) & (ls < npm), ls, -1)
+        if use_pallas:
+            h = layer_hist_pallas(b, ls, c, npm, n_bins, interpret=interpret)
+        else:
+            h = layer_hist_ref(b, ls, c, npm, n_bins)
+        # lazy-limb all-reduce: int32 sums, carries still deferred (§3);
+        # then gather the node blocks over "model" -- the split-finding path
+        # consumes every node (layer cumsum + shuffled split_infos concat),
+        # so this collective is inherent to the protocol.
+        h = jax.lax.psum(h, "data")
+        return jax.lax.all_gather(h, "model", axis=0, tiled=True)
+
+    out = shard_map(local, mesh=mesh,
+                    in_specs=(P("data", None), P("data"), P("data", None)),
+                    out_specs=P(None, None, None, None),
+                    check_rep=False)(bins_p, slot_p, cts_p)
+    return out[:n_nodes]
+
+
+def sharded_layer_ciphertext_histogram(bins, node_slot, cts, n_nodes: int,
+                                       n_bins: int, mesh,
+                                       use_pallas: bool = True,
+                                       interpret: bool | None = None
+                                       ) -> jnp.ndarray:
+    """Mesh-sharded :func:`layer_ciphertext_histogram`.
+
+    Each (data, model) shard runs the layer kernel on its local instance
+    tile for its node block only, then the lazy int32 limb sums psum over
+    "data" and the node blocks all-gather over "model".  Bit-identical to
+    the single-device dispatch for any mesh factorization.  Returns the
+    (n_nodes, n_f, n_bins, L) global array.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    bins = jnp.asarray(bins, jnp.int32)
+    node_slot = jnp.asarray(node_slot, jnp.int32)
+    cts = jnp.asarray(cts, jnp.int32)
+    out = _sharded_layer_hist(bins, node_slot, cts, n_nodes, n_bins, mesh,
+                              use_pallas, interpret)
+    # Land the gathered result on one device.  Downstream protocol steps
+    # (reduce / cumsum / shuffle) are small relative to accumulation and
+    # would otherwise execute redundantly on every replica; single-device
+    # placement also sidesteps a jax 0.4.37 CPU miscompile where eager ops
+    # mixing a partially-replicated shard_map output with unsharded operands
+    # sum the replicas (observed with jnp.concatenate: values silently
+    # multiply by the data-axis extent).
+    return jax.device_put(out, jax.devices()[0])
+
+
+def psum_wire_bytes(mesh, shard_bytes: int) -> int:
+    """Analytic intra-party collective cost of the layer psum: a ring
+    all-reduce over the ``data`` axis moves 2·(d-1)/d · S bytes per device
+    for a per-shard payload of S bytes; there is one independent ring per
+    ``model`` coordinate, so the mesh-wide total is m · 2·(d-1)·S."""
+    sizes = dict(mesh.shape)
+    d = sizes.get("data", 1)
+    m = sizes.get("model", 1)
+    return m * 2 * (d - 1) * int(shard_bytes)
+
+
+def allgather_wire_bytes(mesh, global_bytes: int) -> int:
+    """Analytic cost of replicating the node-sharded layer histogram over
+    "model": each device receives (m-1)/m of the global array, summed over
+    all devices in the mesh."""
+    sizes = dict(mesh.shape)
+    m = sizes.get("model", 1)
+    n_dev = int(np.prod(list(sizes.values())))
+    return (m - 1) * n_dev * (int(global_bytes) // max(m, 1))
+
+
 def layer_count_histogram(bins, node_slot, n_nodes: int, n_bins: int):
     """Plaintext per-(node, feature, bin) instance counts:
     (n_nodes, n_f, n_b) int32.  Counts never touch the cipher domain, so
     this is a flat numpy bincount over the (feature, node, bin) composite
     index -- O(n_i * n_f) memory, no one-hot materialized."""
-    import numpy as np
     bins = np.asarray(bins, np.int64)
     node_slot = np.asarray(node_slot, np.int64)
     n_f = bins.shape[1]

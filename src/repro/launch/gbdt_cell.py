@@ -67,15 +67,18 @@ def hist_scatter(bins, cts, node_of):
 
 
 def lower_cell(mesh, variant: str):
+    from ..parallel.sharding import gbdt_sharding
+
     fn = {"dense": hist_dense, "scatter": hist_scatter,
           "scatter_rs": hist_scatter}[variant]
     bins = jax.ShapeDtypeStruct((N, F), jnp.int32)
     cts = jax.ShapeDtypeStruct((N, W), jnp.int32)
     node_of = jax.ShapeDtypeStruct((N,), jnp.int32)
     d = ("pod", "data") if "pod" in mesh.axis_names else "data"
-    in_sh = (NamedSharding(mesh, P(d, "model")),     # bins: party features
-             NamedSharding(mesh, P(d, None)),        # cts: replicated/model
-             NamedSharding(mesh, P(d)))
+    # input layouts come from the GBDT rule table (DESIGN.md §5)
+    in_sh = (gbdt_sharding(mesh, "bins"),            # (instance, feature)
+             gbdt_sharding(mesh, "gh_cts", ndim=2),  # flattened limb batch
+             gbdt_sharding(mesh, "node_slot"))
     if variant == "scatter_rs":
         # bins axis of the histogram sharded over data: the cross-instance
         # reduction becomes a reduce-scatter instead of all-reduce+slice;

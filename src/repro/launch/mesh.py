@@ -18,6 +18,24 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_gbdt_mesh(model: int | None = None):
+    """(data, model) mesh over all local devices for the GBDT frontier
+    engine (DESIGN.md §5/§7): instances shard over "data", the layer
+    histogram's node axis over "model".  ``model`` caps the node-shard
+    count (default 2 when the device count allows, so both collectives are
+    exercised); instances take the remaining factor.  Returns None on a
+    single device — the engine then uses the unsharded dispatch."""
+    n = len(jax.devices())
+    if n < 2:
+        return None
+    if model is None:
+        model = 2 if n % 2 == 0 else 1
+    model = max(1, min(model, n))
+    while n % model:
+        model -= 1
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
 def make_debug_mesh(*, multi_pod: bool = False):
     """Tiny mesh for CI-sized validation of the same code paths (8 devices)."""
     shape = (2, 2, 2) if multi_pod else (2, 4)

@@ -1,10 +1,14 @@
 """Sharding rule tables: parameter/batch/cache PartitionSpecs per mesh.
 
-Rules are keyed on the trailing path of each parameter leaf; stacked layer
-axes (from scan-over-layers) get a leading None.  "data" expands to
+LM rules are keyed on the trailing path of each parameter leaf; stacked
+layer axes (from scan-over-layers) get a leading None.  "data" expands to
 ("pod", "data") on the multi-pod mesh (DP across pods); "model" carries
 TP/EP.  ZeRO-1: optimizer moments additionally shard their first replicated
 axis over "data" when divisible.
+
+GBDT rules (``GBDT_RULES`` / :func:`gbdt_specs`) are keyed by array name:
+the SecureBoost+ frontier engine shards instances over "data" and the layer
+histogram's node axis over "model" (DESIGN.md §5/§7).
 """
 
 from __future__ import annotations
@@ -143,6 +147,57 @@ def batch_specs(batch_shapes: dict, mesh) -> dict:
         return _fit(P(*([d] + [None] * (len(leaf.shape) - 1))), leaf.shape,
                     mesh)
     return jax.tree.map(spec, batch_shapes)
+
+
+# ---------------------------------------------------------------------------
+# GBDT (SecureBoost+) rule table — DESIGN.md §5
+# ---------------------------------------------------------------------------
+# At-rest layouts for the frontier engine (core/frontier.py) and the launch
+# cell (launch/gbdt_cell.py).  Instances shard over "data"; the *feature*
+# axis of at-rest binned matrices carries the party boundary on "model"
+# (cross-party cell), while the per-layer histogram batch shards its *node*
+# axis over "model" — the node axis is the one that doubles with depth, so
+# it is what the intra-party frontier dispatch block-shards.
+
+GBDT_RULES = {
+    "bins": ("data", "model"),        # (instance, feature) binned matrix
+    "zero_mask": ("data", "model"),   # (instance, feature) sparse mask
+    "gh_cts": ("data", None, None),   # (instance, slot, limb) GH ciphertexts
+    "node_slot": ("data",),           # (instance,) frontier slot assignment
+    "layer_hist": ("model", None, None, None, None),
+    #                                  (node, feature, bin, slot, limb)
+    "layer_counts": ("model", None, None),   # (node, feature, bin) plaintext
+}
+
+
+def gbdt_specs(mesh) -> dict:
+    """PartitionSpec per GBDT frontier-engine array (name -> P).
+
+    "data" expands to ("pod", "data") on a multi-pod mesh, mirroring the LM
+    rule table above."""
+    dax = _data_axes(mesh)
+    d = dax if len(dax) > 1 else dax[0]
+    return {k: P(*[d if a == "data" else a for a in v])
+            for k, v in GBDT_RULES.items()}
+
+
+def gbdt_sharding(mesh, name: str, ndim: int | None = None,
+                  replicate: tuple = ()):
+    """NamedSharding for one GBDT array.
+
+    ``ndim`` trims/pads the rule to the actual rank (e.g. a 2-D flattened
+    ciphertext batch).  ``replicate`` drops named axes — the intra-party
+    frontier dispatch replicates features over "model" (every node shard
+    needs every local feature) while the at-rest cross-party layout keeps
+    them sharded."""
+    rule = list(GBDT_RULES[name])
+    if ndim is not None:
+        rule = (rule + [None] * ndim)[:ndim]
+    dax = _data_axes(mesh)
+    d = dax if len(dax) > 1 else dax[0]
+    parts = [None if (a in replicate or a is None)
+             else (d if a == "data" else a) for a in rule]
+    return NamedSharding(mesh, P(*parts))
 
 
 def cache_specs(cache, mesh):

@@ -69,7 +69,9 @@ def test_layer_count_histogram_matches_bincount():
 ])
 def test_layer_histograms_match_per_node_engine(cipher_name, kw):
     """Batched direct + lazy-subtract accumulation vs node_histogram /
-    subtract, for both limb ciphers."""
+    subtract, for both limb ciphers, through the frontier state."""
+    from repro.core.frontier import CipherFrontier
+
     rng = np.random.default_rng(11)
     n, n_f, n_b = 160, 4, 8
     cipher = get_cipher(cipher_name, **kw)
@@ -80,15 +82,16 @@ def test_layer_histograms_match_per_node_engine(cipher_name, kw):
     cts = cts.reshape(n, 1, -1)
 
     engine = CipherHistogram(cipher, n_b, stats=Stats())
+    frontier = CipherFrontier(engine, data, cts)
     # one parent node split into two children; right child by subtraction
     parent_rows = np.arange(n)
     left_rows = np.arange(n // 3)
     right_rows = np.arange(n // 3, n)
     cache = {0: engine.node_histogram(data, cts, parent_rows)}
+    frontier.store(0, *cache[0])
 
-    batched = engine.layer_histograms(
-        data, cts, {1: left_rows, 2: right_rows},
-        direct=[1], subtract=[(2, 0, 1)], cache=cache)
+    batched = frontier.layer_histograms(
+        {1: left_rows, 2: right_rows}, direct=[1], subtract=[(2, 0, 1)])
     h1, c1 = engine.node_histogram(data, cts, left_rows)
     h2, c2 = engine.subtract(cache[0], (h1, c1))
     np.testing.assert_array_equal(np.asarray(batched[1][0]), np.asarray(h1))

@@ -14,8 +14,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.models import LM
-from repro.parallel.sharding import (batch_specs, cache_specs, opt_specs,
-                                     param_specs)
+from repro.parallel.sharding import (batch_specs, cache_specs, gbdt_specs,
+                                     opt_specs, param_specs)
 
 
 class FakeMesh:
@@ -96,6 +96,32 @@ def test_variant_configs_still_train(kw):
     assert bool(jnp.isfinite(loss))
     g = jax.tree.reduce(lambda a, x: a + float(jnp.abs(x).sum()), grads, 0.0)
     assert np.isfinite(g) and g > 0
+
+
+def test_gbdt_rule_table():
+    """GBDT frontier specs (DESIGN.md §5): instances over data, at-rest
+    features over model, layer-histogram node axis over model."""
+    specs = gbdt_specs(MESH)
+    assert specs["bins"] == P("data", "model")
+    assert specs["gh_cts"] == P("data", None, None)
+    assert specs["node_slot"] == P("data")
+    assert specs["layer_hist"] == P("model", None, None, None, None)
+    assert specs["layer_counts"] == P("model", None, None)
+    # multi-pod: "data" expands to ("pod", "data")
+    pod = gbdt_specs(POD_MESH)
+    assert pod["bins"] == P(("pod", "data"), "model")
+    assert pod["layer_hist"][0] == "model"
+
+
+def test_gbdt_sharding_trims_and_replicates():
+    from repro.parallel.sharding import gbdt_sharding
+
+    # gbdt_sharding builds a NamedSharding, which needs a real mesh
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    flat2d = gbdt_sharding(mesh, "gh_cts", ndim=2)
+    assert flat2d.spec == P("data", None)
+    repl = gbdt_sharding(mesh, "bins", replicate=("model",))
+    assert repl.spec == P("data", None)
 
 
 def test_moe_sort_ranking_matches_semantics():
