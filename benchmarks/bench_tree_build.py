@@ -71,15 +71,21 @@ def run_pair(name: str, cipher: str, key_bits: int, n_trees: int = 4,
                                                 "n_split_roundtrips", n_trees),
         "plus_roundtrips_per_tree": _per_tree(plus.stats,
                                               "n_split_roundtrips", n_trees),
+        "plus_encrypt_s_per_tree": _per_tree(plus.stats, "encrypt_seconds",
+                                             n_trees),
+        "plus_overlap_frac": plus.stats.overlap_fraction,
         "auc_legacy": auc(legacy.predict_proba(Xg, [Xh]), y),
         "auc_plus": auc(plus.predict_proba(Xg, [Xh]), y),
     }
 
 
 def run_scale():
-    """Mesh-sharded frontier engine vs single device on the scale shape."""
-    import jax
+    """Mesh-sharded frontier engine + crypto endpoints vs single device.
 
+    Two ciphers on the same shape: ``plain`` isolates the sharded histogram
+    dispatch and the guest/host overlap; ``affine`` additionally exercises
+    the sharded encrypt/decrypt Toeplitz matmuls (DESIGN.md §8), which is
+    where the paper's ciphertext-cost argument lives."""
     from repro.launch.mesh import make_gbdt_mesh
 
     s = SCALE
@@ -88,38 +94,50 @@ def run_scale():
     # most features) -- the ciphertext histogram path is what shards
     n_guest = max(2, s["d"] // 8)
     Xg, Xh = X[:, :n_guest], X[:, n_guest:]
-    base = SBTParams(n_trees=s["n_trees"], max_depth=s["max_depth"],
-                     n_bins=s["n_bins"], cipher="plain", seed=1)
-
-    single = VerticalBoosting(base)
-    _, t1 = timed(lambda: single.fit(Xg, y, [Xh]))
-    rows = [(f"scale/{s['n']}x{s['d']}/plain/1dev",
-             t1 / s["n_trees"] * 1e6,
-             f"launches/tree={single.stats.n_hist_launches / s['n_trees']:.1f}"
-             f";devices=1")]
-
     mesh = make_gbdt_mesh()
-    if mesh is None:
-        rows.append((f"scale/{s['n']}x{s['d']}/plain/sharded", 0.0,
-                     "SKIP:single-device (set XLA_FLAGS="
-                     "--xla_force_host_platform_device_count=8)"))
-        return rows
 
-    sharded = VerticalBoosting(dataclasses.replace(base, mesh=mesh))
-    _, t2 = timed(lambda: sharded.fit(Xg, y, [Xh]))
-    ident = bool(np.array_equal(sharded.predict_proba(Xg, [Xh]),
-                                single.predict_proba(Xg, [Xh])))
-    coll = sharded.channel.collective_summary()
-    rows.append((
-        f"scale/{s['n']}x{s['d']}/plain/{mesh.devices.size}dev",
-        t2 / s["n_trees"] * 1e6,
-        f"speedup={t1 / t2:.2f}x;bit_identical={ident}"
-        f";coll_mb={sharded.stats.coll_bytes / 1e6:.1f}"
-        f";psum_mb={coll.get('hist_psum', {}).get('bytes', 0) / 1e6:.1f}"
-        f";allgather_mb="
-        f"{coll.get('hist_allgather', {}).get('bytes', 0) / 1e6:.1f}"
-        f";n_collectives={sharded.stats.n_collectives}"
-        f";mesh={'x'.join(map(str, mesh.devices.shape))}"))
+    rows = []
+    configs = [("plain", {"cipher": "plain"}, s["n_trees"]),
+               ("affine", {"cipher": "affine", "key_bits": 512,
+                           "precision": 24}, 2)]
+    for cname, kw, n_trees in configs:
+        base = SBTParams(n_trees=n_trees, max_depth=s["max_depth"],
+                         n_bins=s["n_bins"], seed=1, **kw)
+        single = VerticalBoosting(base)
+        _, t1 = timed(lambda: single.fit(Xg, y, [Xh]))
+        st1 = single.stats
+        rows.append((
+            f"scale/{s['n']}x{s['d']}/{cname}/1dev",
+            t1 / n_trees * 1e6,
+            f"launches/tree={st1.n_hist_launches / n_trees:.1f};devices=1"
+            f";encrypt_s_per_tree={st1.encrypt_seconds / n_trees:.3f}"
+            f";overlap_frac={st1.overlap_fraction:.3f}"))
+
+        if mesh is None:
+            rows.append((f"scale/{s['n']}x{s['d']}/{cname}/sharded", 0.0,
+                         "SKIP:single-device (set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)"))
+            continue
+
+        sharded = VerticalBoosting(dataclasses.replace(base, mesh=mesh))
+        _, t2 = timed(lambda: sharded.fit(Xg, y, [Xh]))
+        ident = bool(np.array_equal(sharded.predict_proba(Xg, [Xh]),
+                                    single.predict_proba(Xg, [Xh])))
+        coll = sharded.channel.collective_summary()
+        st2 = sharded.stats
+        rows.append((
+            f"scale/{s['n']}x{s['d']}/{cname}/{mesh.devices.size}dev",
+            t2 / n_trees * 1e6,
+            f"speedup={t1 / t2:.2f}x;bit_identical={ident}"
+            f";encrypt_s_per_tree={st2.encrypt_seconds / n_trees:.3f}"
+            f";overlap_frac={st2.overlap_fraction:.3f}"
+            f";cts_placements={st2.n_cts_placements}"
+            f";coll_mb={st2.coll_bytes / 1e6:.1f}"
+            f";psum_mb={coll.get('hist_psum', {}).get('bytes', 0) / 1e6:.1f}"
+            f";allgather_mb="
+            f"{coll.get('hist_allgather', {}).get('bytes', 0) / 1e6:.1f}"
+            f";n_collectives={st2.n_collectives}"
+            f";mesh={'x'.join(map(str, mesh.devices.shape))}"))
     return rows
 
 
@@ -141,7 +159,10 @@ def main(quick: bool = False):
                          f";auc={r['auc_plus']:.3f}"
                          f";launches/tree={r['plus_launches_per_tree']:.1f}"
                          f";roundtrips/tree="
-                         f"{r['plus_roundtrips_per_tree']:.1f}"))
+                         f"{r['plus_roundtrips_per_tree']:.1f}"
+                         f";encrypt_s_per_tree="
+                         f"{r['plus_encrypt_s_per_tree']:.3f}"
+                         f";overlap_frac={r['plus_overlap_frac']:.3f}"))
     rows += run_scale()
     emit(rows)
     return rows

@@ -50,7 +50,9 @@ def _parse_derived(derived: str) -> dict:
 
 
 def _env_info() -> dict:
-    info = {"python": sys.version.split()[0]}
+    import os
+    info = {"python": sys.version.split()[0],
+            "xla_flags": os.environ.get("XLA_FLAGS", "")}
     try:
         import jax
         info["jax"] = jax.__version__

@@ -104,8 +104,12 @@ class VerticalBoosting:
         for t in range(p.n_trees):
             t0 = time.perf_counter()
             if p.objective == "multiclass":
+                # g/h are computed ONCE per round for all classes (the
+                # paper's default multiclass setting): recomputing inside
+                # the class loop trained class c+1 on scores already
+                # updated by class c's tree this round
+                g, h = self._loss.grad_hess(y, score)
                 for c in range(p.n_classes):
-                    g, h = self._loss.grad_hess(y, score)
                     tree = self._grow(cipher, g[:, c], h[:, c], t, rng,
                                       mix_party=self._mix_party(t, n_parties))
                     self.trees.append(tree)

@@ -92,6 +92,10 @@ class CipherFrontier:
         self.channel = channel
         self.party = party
         self.counts: dict = {}          # nid -> (n_f, n_b) int64, plaintext
+        self.n_cts_placements = 0       # host->device placements of cts the
+                                        # frontier had to perform itself (0
+                                        # when ciphertexts arrive born-
+                                        # sharded at histogram width, §8)
 
         bins_np = data.bins.astype(np.int32)
         if self.sparse:
@@ -102,33 +106,46 @@ class CipherFrontier:
         if self.limb:
             import jax
             import jax.numpy as jnp
-            cts_j = jnp.asarray(cts)
             width = cipher.hist_width
-            per = cts_j.shape[-1]
-            cts_wide = jnp.pad(cts_j, ((0, 0), (0, 0), (0, width - per)))
-            bins_dev = jnp.asarray(bins_np)
             mesh = getattr(engine, "mesh", None)
-            if mesh is not None and mesh.devices.size > 1:
-                from ..parallel.sharding import gbdt_sharding
+            multi = mesh is not None and mesh.devices.size > 1
+            n = bins_np.shape[0]
+            pad = 0
+            if multi:
+                from ..parallel.sharding import data_pad, gbdt_sharding
                 # pad the instance axis so it divides the data-axis extent
                 # (device_put of a sharded layout requires divisibility; pad
                 # rows carry bins = -1 / cts = 0 and never receive a slot)
-                dd = dict(mesh.shape).get("data", 1)
-                n = bins_dev.shape[0]
-                pad = -n % dd
+                pad = data_pad(mesh, n)
+            self._n_rows_dev = n + pad
+            born = (isinstance(cts, jax.Array) and cts.ndim == 3
+                    and cts.shape[0] == n + pad and cts.shape[-1] == width)
+            if born and multi:
+                born = cts.sharding.is_equivalent_to(
+                    gbdt_sharding(mesh, "gh_cts"), cts.ndim)
+            if born:
+                # ciphertexts were born at histogram width with their
+                # at-rest sharding (_encrypt_all, DESIGN.md §8): adopt the
+                # buffers as-is — zero re-placements after encryption
+                cts_wide = cts
+            else:
+                self.n_cts_placements += 1
+                cts_j = jnp.asarray(cts)
+                cts_wide = jnp.pad(cts_j, ((0, pad), (0, 0),
+                                           (0, width - cts_j.shape[-1])))
+                if multi:
+                    cts_wide = jax.device_put(
+                        cts_wide, gbdt_sharding(mesh, "gh_cts"))
+            bins_dev = jnp.asarray(bins_np)
+            if multi:
                 if pad:
                     bins_dev = jnp.pad(bins_dev, ((0, pad), (0, 0)),
                                        constant_values=-1)
-                    cts_wide = jnp.pad(cts_wide,
-                                       ((0, pad), (0, 0), (0, 0)))
-                self._n_rows_dev = n + pad
                 # features replicate over "model" inside one party's
                 # dispatch: every node shard needs every local feature
                 bins_dev = jax.device_put(
                     bins_dev, gbdt_sharding(mesh, "bins",
                                             replicate=("model",)))
-                cts_wide = jax.device_put(
-                    cts_wide, gbdt_sharding(mesh, "gh_cts"))
             self.state = FrontierState(bins=bins_dev, cts=cts_wide, hists={})
             # flattened (n, slots*width) view for the kernel dispatch,
             # materialized once per tree (sharding preserved: axis 0 = data)
@@ -157,6 +174,14 @@ class CipherFrontier:
         for nid in nids:
             self.state.hists.pop(nid, None)
             self.counts.pop(nid, None)
+
+    def evict_except(self, keep) -> int:
+        """Drop every cached histogram whose nid is not in ``keep`` (the
+        subtract-parents scheduled for the next layer): nodes that became
+        leaves must not pin device memory for the tree's remainder.
+        Returns the cache size after eviction."""
+        self.evict([nid for nid in list(self.state.hists) if nid not in keep])
+        return len(self.state.hists)
 
     # -- per-layer ------------------------------------------------------
     def layer_slots(self, node_rows: dict, direct: list) -> np.ndarray:
@@ -206,6 +231,11 @@ class GuestFrontier:
     def evict(self, nids) -> None:
         for nid in nids:
             self.cache.pop(nid, None)
+
+    def evict_except(self, keep) -> int:
+        """See :meth:`CipherFrontier.evict_except`."""
+        self.evict([nid for nid in list(self.cache) if nid not in keep])
+        return len(self.cache)
 
     def layer_histograms(self, node_rows: dict, direct: list,
                          subtract: list) -> dict:

@@ -68,6 +68,10 @@ class AffineCipher:
             x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, self.Ln - L)])
         elif L > self.Ln:
             raise ValueError("plaintext wider than modulus")
+        # mirror the Paillier backend's range check: values >= n would wrap
+        # silently and decrypt to garbage
+        if bool(jnp.any(limbs.geq(x, jnp.broadcast_to(self.bctx.n, x.shape)))):
+            raise ValueError("plaintext out of range (>= modulus n)")
         return limbs.mod_mul_fixed(x, self.T_enc, self.bctx)
 
     def encrypt_ints(self, xs) -> jnp.ndarray:

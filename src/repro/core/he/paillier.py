@@ -79,8 +79,10 @@ class PaillierCipher:
 
     # -- guest ---------------------------------------------------------
     def encrypt_ints(self, xs) -> np.ndarray:
-        out = np.empty(len(list(xs)) if not hasattr(xs, "__len__") else len(xs),
-                       dtype=object)
+        # materialize once: len(list(xs)) on a generator would exhaust it,
+        # leaving the enumerate below a None-filled object array
+        xs = list(xs)
+        out = np.empty(len(xs), dtype=object)
         for i, m in enumerate(xs):
             if not 0 <= m < self.n:
                 raise ValueError("plaintext out of range")

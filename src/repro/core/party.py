@@ -37,12 +37,36 @@ class Stats:
     n_split_roundtrips: int = 0  # guest<->host split_infos exchanges
     n_collectives: int = 0      # intra-party device collectives (psum)
     coll_bytes: int = 0         # analytic bytes moved by those collectives
+    n_cts_placements: int = 0   # host->device ciphertext re-placements the
+                                # frontier performed (0 = born sharded, §8)
+    encrypt_seconds: float = 0.0  # guest encrypt wall time (blocked once/tree)
+    guest_hist_seconds: float = 0.0   # guest plaintext candidate time that
+                                      # ran while host cipher work was in
+                                      # flight (the overlapped window)
+    host_dispatch_seconds: float = 0.0  # async launch of the host pipeline
+    host_wait_seconds: float = 0.0      # blocking decrypt+decode tail
+    peak_hist_cache: int = 0    # max cached parent hists after any eviction
+    peak_frontier: int = 0      # max frontier width (layer node count)
     tree_seconds: list = dataclasses.field(default_factory=list)
+    layer_overlap: list = dataclasses.field(default_factory=list)
+    # per layer: guest-window seconds / total candidate-phase seconds.  An
+    # UPPER bound on true concurrency: the host pipeline may drain before
+    # the guest window ends (measuring the drain would require a sync probe
+    # that serializes the very overlap being measured)
 
     def as_dict(self):
         d = dataclasses.asdict(self)
         d["tree_seconds"] = list(self.tree_seconds)
+        d["layer_overlap"] = list(self.layer_overlap)
         return d
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Mean per-layer fraction of candidate wall time spent in the
+        guest's plaintext-histogram window while the host cipher pipeline
+        was dispatched (upper bound on true concurrency, see above)."""
+        return (float(sum(self.layer_overlap)) / len(self.layer_overlap)
+                if self.layer_overlap else 0.0)
 
 
 class Channel:

@@ -35,6 +35,7 @@ tallied in ``ctx.stats``.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable
 
 import numpy as np
@@ -185,32 +186,77 @@ class TreeContext:
         default_factory=lambda: np.random.default_rng(0))
 
 
+def _crypto_mesh(params, cipher):
+    """The (data, model) mesh when the limb crypto endpoints shard, else
+    None (single device, or the python-int Paillier oracle)."""
+    mesh = getattr(params, "mesh", None)
+    if cipher.backend == "limb" and mesh is not None \
+            and mesh.devices.size > 1:
+        return mesh
+    return None
+
+
 def _encrypt_all(ctx: TreeContext, g_sel: np.ndarray,
                  h_sel: np.ndarray) -> None:
-    """Guest packs + encrypts g/h of selected rows, broadcasts to hosts."""
+    """Guest packs + encrypts g/h of selected rows, broadcasts to hosts.
+
+    Limb-backend ciphertexts are *born* at histogram width with their
+    at-rest sharding (rule-table entries ``enc_plain`` / ``gh_cts``,
+    DESIGN.md §8): the plaintext batch is placed once (padded to the
+    data-axis extent), per-shard Pallas kernels encrypt with no collective,
+    and :class:`CipherFrontier` adopts the buffers as-is — zero
+    host->device re-placements after encryption.  The wire-byte ledger
+    keeps protocol-fidelity counts via ``ct_wire_bytes`` regardless of the
+    in-memory limb layout.
+    """
     p = ctx.params
+    t0 = time.perf_counter()
     plain = ctx.codec.encode_plain(g_sel, h_sel)
     n, s, Lp = plain.shape
     if ctx.cipher.backend == "limb":
+        import jax
         import jax.numpy as jnp
         from ..kernels.modmul import encrypt_batch
-        if ctx.cipher.name == "affine" and p.use_pallas:
-            flat = encrypt_batch(ctx.cipher, plain.reshape(n * s, Lp))
+        width = ctx.cipher.hist_width
+        mesh = _crypto_mesh(p, ctx.cipher)
+        if mesh is not None:
+            from ..parallel.sharding import data_pad, gbdt_sharding
+            pad = data_pad(mesh, n)
+            if pad:     # pad rows encrypt 0 -> 0 and never receive a slot
+                plain = np.concatenate(
+                    [plain, np.zeros((pad, s, Lp), plain.dtype)], axis=0)
+            plain_dev = jax.device_put(jnp.asarray(plain, jnp.int32),
+                                       gbdt_sharding(mesh, "enc_plain"))
+            if ctx.cipher.name == "affine" and p.use_pallas:
+                cts = encrypt_batch(ctx.cipher, plain_dev, mesh=mesh,
+                                    out_width=width)
+            else:
+                cts = limbs.pad_limbs(ctx.cipher.encrypt_limbs(plain_dev),
+                                      width)
+            # re-commit with the identical at-rest sharding (no data
+            # movement): a plain GSPMD array sidesteps the §7 eager-op
+            # caveat for partially-replicated shard_map outputs
+            cts = jax.device_put(cts, gbdt_sharding(mesh, "gh_cts"))
+        elif ctx.cipher.name == "affine" and p.use_pallas:
+            cts = encrypt_batch(ctx.cipher, plain.reshape(n * s, Lp),
+                                out_width=width).reshape(n, s, width)
         else:
-            flat = ctx.cipher.encrypt_limbs(jnp.asarray(plain.reshape(n * s, Lp)))
-        cts = flat.reshape(n, s, -1)
+            cts = limbs.pad_limbs(
+                ctx.cipher.encrypt_limbs(jnp.asarray(plain)), width)
+        jax.block_until_ready(cts)
     else:
         ints = limbs.to_pyints(plain.reshape(n * s, Lp))
         cts = ctx.cipher.encrypt_ints(ints).reshape(n, s)
     ctx.stats.n_encrypt += n * s
+    ctx.stats.encrypt_seconds += time.perf_counter() - t0
     nbytes = n * s * ct_wire_bytes(ctx.cipher) + n * 4   # + selected row ids
     for host in ctx.hosts:
         host.cts = ctx.channel.send("guest", f"host{host.hid}", "enc_gh",
                                     cts, nbytes)
         # host restricts its binned matrix to the synced selected ids so row
         # positions align with the ciphertext batch, then builds the
-        # device-resident frontier state for this tree (bins masked and
-        # ciphertexts width-padded once; sharded over the engine's mesh)
+        # device-resident frontier state for this tree (bins masked once;
+        # born-sharded ciphertexts are adopted without another placement)
         view = dataclasses.replace(
             host.data, bins=host.data.bins[ctx.sel_rows],
             zero_mask=(host.data.zero_mask[ctx.sel_rows]
@@ -218,6 +264,7 @@ def _encrypt_all(ctx: TreeContext, g_sel: np.ndarray,
         host.frontier = CipherFrontier(host.engine, view, host.cts,
                                        channel=ctx.channel,
                                        party=f"host{host.hid}")
+        ctx.stats.n_cts_placements += host.frontier.n_cts_placements
 
 
 def _resolve_modes(splittable: list, hist_mode: dict, cache,
@@ -245,16 +292,18 @@ def _resolve_modes(splittable: list, hist_mode: dict, cache,
     return direct, subtract
 
 
-def _host_layer_candidates(ctx: TreeContext, host: HostRuntime,
-                           splittable: list, rows_sel: dict,
-                           hist_mode: dict) -> dict:
+def _host_layer_dispatch(ctx: TreeContext, host: HostRuntime,
+                         splittable: list, rows_sel: dict,
+                         hist_mode: dict) -> tuple:
     """Host-side Algorithm 5, layer-batched: for ALL frontier nodes of one
     layer, one histogram accumulation (single kernel launch), one
     ``cipher.reduce``, one ciphertext-domain cumsum, one shuffle/compress
-    pass, and ONE ``split_infos`` message; guest side answers with ONE
-    batched decrypt + decode.  Per-node candidate blocks travel concatenated
-    (every node contributes exactly ``n_f * (n_b - 1)`` candidates, so
-    offsets are implicit).  Returns {nid: SplitCandidates}."""
+    pass, and ONE ``split_infos`` message.  Everything here is *async
+    dispatch* on the limb backends — kernels and collectives enqueue
+    without blocking the python thread — so the caller can run the guest's
+    plaintext histograms while the cipher pipeline is in flight
+    (DESIGN.md §8) and only then call :func:`_host_layer_finish`.
+    Returns the pending (payload, use_compress, M, m) tuple."""
     p = ctx.params
     engine = host.engine
     n_f, n_b = host.data.n_features, p.n_bins
@@ -329,8 +378,19 @@ def _host_layer_candidates(ctx: TreeContext, host: HostRuntime,
     payload = ctx.channel.send(f"host{host.hid}", "guest", "split_infos",
                                payload, nbytes)
     ctx.stats.n_split_roundtrips += 1
+    return payload, use_compress, M, m
 
-    # ---- guest side: ONE batched decrypt + decode (Algorithm 6) ----
+
+def _host_layer_finish(ctx: TreeContext, host: HostRuntime,
+                       splittable: list, pending: tuple) -> dict:
+    """Guest side of the layer batch: ONE batched decrypt + decode
+    (Algorithm 6) of the still-device-resident candidate stack dispatched
+    by :func:`_host_layer_dispatch`.  This is the blocking tail — the first
+    ``np.asarray`` synchronizes the whole in-flight cipher pipeline.
+    Returns {nid: SplitCandidates}."""
+    payload, use_compress, M, m = pending
+    limb = ctx.cipher.backend == "limb"
+    n_slots = ctx.codec.n_slots
     data, sizes, cl = payload
     if use_compress:
         plain = _decrypt_ints(ctx, data)
@@ -340,7 +400,8 @@ def _host_layer_candidates(ctx: TreeContext, host: HostRuntime,
         rows = np.asarray(vals, dtype=object).reshape(M, 1)
     else:
         if limb:
-            flat2 = np.asarray(data).reshape(M * n_slots, -1)
+            # keep the candidate stack on device into the batched decrypt
+            flat2 = data.reshape(M * n_slots, -1)
         else:
             flat2 = data.reshape(M * n_slots)
         plain = _decrypt_ints(ctx, flat2)
@@ -360,7 +421,37 @@ def _decrypt_ints(ctx: TreeContext, cts) -> list:
         import jax.numpy as jnp
         if ctx.cipher.name == "affine" and ctx.params.use_pallas:
             from ..kernels.modmul import decrypt_batch
-            pl_limbs = decrypt_batch(ctx.cipher, jnp.asarray(cts))
+            x = jnp.asarray(cts)
+            mesh = _crypto_mesh(ctx.params, ctx.cipher)
+            n = x.shape[0]
+            # shard only when every shard gets at least one full-size kernel
+            # row block: cipher-compressed package batches are small by
+            # design (that is the point of compression) and would pay a
+            # shard_map compile per pow2 bucket for sub-millisecond matmuls;
+            # large stacks (no-compress / MO / deep frontiers) shard for real
+            from ..kernels.modmul.modmul import BLOCK_N
+            dd = dict(mesh.shape).get("data", 1) if mesh is not None else 1
+            if mesh is not None and n >= BLOCK_N * dd:
+                import jax
+
+                from ..parallel.sharding import data_pad, gbdt_sharding
+                # the candidate stack is still device-resident: pad the
+                # candidate axis to the next power of two (the per-layer
+                # candidate count varies with the frontier, and the padded
+                # extent is a static shape — pow2 bucketing caps distinct
+                # compilations at O(log max_M), mirroring the node padding
+                # of the layer dispatch), then shard per the rule table and
+                # decrypt per shard with no collective
+                bucket = 1 << max(n - 1, 0).bit_length()
+                bucket += data_pad(mesh, bucket)
+                if bucket > n:
+                    x = jnp.pad(x, [(0, bucket - n)]
+                                + [(0, 0)] * (x.ndim - 1))
+                x = jax.device_put(
+                    x, gbdt_sharding(mesh, "split_infos", ndim=x.ndim))
+                pl_limbs = decrypt_batch(ctx.cipher, x, mesh=mesh)
+                return limbs.to_pyints(np.asarray(pl_limbs)[:n])
+            pl_limbs = decrypt_batch(ctx.cipher, x)
             return limbs.to_pyints(np.asarray(pl_limbs))
         return ctx.cipher.decrypt_to_ints(jnp.asarray(cts))
     return ctx.cipher.decrypt_to_ints(cts)
@@ -442,16 +533,39 @@ def grow_tree(ctx: TreeContext,
             else:
                 splittable.append(nid)
 
-        # one candidate batch per party for the whole layer
+        # one candidate batch per party for the whole layer.  The host
+        # cipher pipelines are DISPATCHED first (jax async dispatch: the
+        # kernels and collectives enqueue without blocking), the guest's
+        # plaintext numpy histograms run while that work is in flight, and
+        # only then does the guest block on the batched decrypt — the two
+        # sides are independent until find_best_split (DESIGN.md §8).
         guest_cands: dict = {}
-        if splittable and use_guest and ctx.guest_data.n_features > 0:
-            guest_cands = _guest_layer_candidates(
-                ctx, guest_frontier, splittable, rows_sel, hist_mode)
         host_cands: dict = {}
         if splittable:
-            for h in active_hosts:
-                host_cands[h.hid] = _host_layer_candidates(
-                    ctx, h, splittable, rows_sel, hist_mode)
+            t0 = time.perf_counter()
+            pending = [(h, _host_layer_dispatch(ctx, h, splittable, rows_sel,
+                                                hist_mode))
+                       for h in active_hosts]
+            t1 = time.perf_counter()
+            if use_guest and ctx.guest_data.n_features > 0:
+                guest_cands = _guest_layer_candidates(
+                    ctx, guest_frontier, splittable, rows_sel, hist_mode)
+            t2 = time.perf_counter()
+            for h, pend in pending:
+                host_cands[h.hid] = _host_layer_finish(ctx, h, splittable,
+                                                       pend)
+            t3 = time.perf_counter()
+            if active_hosts:
+                ctx.stats.host_dispatch_seconds += t1 - t0
+                ctx.stats.guest_hist_seconds += t2 - t1
+                ctx.stats.host_wait_seconds += t3 - t2
+                # overlap only exists for async-dispatch backends: the
+                # Paillier oracle completes synchronously inside dispatch,
+                # so nothing is in flight while the guest works
+                if guest_cands and ctx.cipher.backend == "limb":
+                    denom = t3 - t0
+                    ctx.stats.layer_overlap.append(
+                        (t2 - t1) / denom if denom > 0 else 0.0)
 
         for nid in splittable:
             node = nodes[nid]
@@ -507,12 +621,21 @@ def grow_tree(ctx: TreeContext,
                 hist_mode[rid] = ("direct", -1, -1)
                 hist_mode[lid] = ("subtract", nid, rid)
             next_frontier += [lid, rid]
-        # free parent histograms no longer needed
-        parents_done = [hist_mode[nid][1] for nid in frontier]
-        guest_frontier.evict(parents_done)
+        # free cached histograms: keep ONLY the parents the next layer's
+        # subtract-mode nodes will read.  Evicting just the used parents
+        # leaked every histogram cached for a node that became a leaf
+        # (triage, best=None, or max depth) — device memory grew with each
+        # dead branch for the tree's remainder.
+        keep = ({hist_mode[c][1] for c in next_frontier
+                 if hist_mode[c][0] == "subtract"}
+                if p.histogram_subtraction else set())
+        sizes = [guest_frontier.evict_except(keep)]
         for h in ctx.hosts:
             if h.frontier is not None:
-                h.frontier.evict(parents_done)
+                sizes.append(h.frontier.evict_except(keep))
+        ctx.stats.peak_hist_cache = max(ctx.stats.peak_hist_cache,
+                                        max(sizes))
+        ctx.stats.peak_frontier = max(ctx.stats.peak_frontier, len(frontier))
         frontier = next_frontier
 
     # finalize leaves at max depth

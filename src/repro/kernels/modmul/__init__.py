@@ -1,2 +1,3 @@
-from .ops import decrypt_batch, encrypt_batch, modmul_fixed  # noqa: F401
+from .ops import (decrypt_batch, encrypt_batch, modmul_fixed,  # noqa: F401
+                  modmul_fixed_sharded)
 from .ref import mul_fixed_ref  # noqa: F401

@@ -58,6 +58,9 @@ def mul_fixed_pallas(x: jnp.ndarray, T: jnp.ndarray,
         interpret = default_interpret()
     n, Lx = x.shape
     Lo = T.shape[-1]
+    # shrink the row block for small batches (e.g. per-shard slices of the
+    # mesh-sharded encrypt/decrypt path): same per-row arithmetic, less pad
+    block_n = max(8, min(block_n, round_up(max(n, 1), 8)))
     pn = round_up(max(n, 1), block_n)
     x_p = jnp.zeros((pn, Lx), jnp.int32).at[:n].set(x)
 

@@ -167,7 +167,22 @@ GBDT_RULES = {
     "layer_hist": ("model", None, None, None, None),
     #                                  (node, feature, bin, slot, limb)
     "layer_counts": ("model", None, None),   # (node, feature, bin) plaintext
+    # crypto endpoints (DESIGN.md §8): both are embarrassingly parallel over
+    # rows, so the encrypt input's instance axis and the per-layer decrypt
+    # stack's candidate axis shard over "data" with no collective.
+    "enc_plain": ("data", None, None),      # (instance, slot, plain-limb)
+    "split_infos": ("data", None, None),    # (candidate, slot, limb)
 }
+
+
+def data_pad(mesh, n: int) -> int:
+    """Rows to append so an instance/candidate axis of extent ``n`` divides
+    the mesh's data-axis extent (device_put of a sharded layout requires
+    divisibility).  Pad rows are protocol-inert by construction: bins = -1,
+    ciphertexts = 0, never assigned a frontier slot."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    d = int(np.prod([sizes.get(a, 1) for a in _data_axes(mesh)]))
+    return -n % d
 
 
 def gbdt_specs(mesh) -> dict:

@@ -49,3 +49,34 @@ def test_paillier_is_randomized():
     b = c.encrypt_ints([42])[0]
     assert a != b                      # semantic security: fresh randomness
     assert c.decrypt_to_ints(np.asarray([a, b], dtype=object)) == [42, 42]
+
+
+def test_paillier_encrypt_from_generator():
+    """Regression: len(list(xs)) consumed generator arguments, leaving an
+    object array of None 'ciphertexts'."""
+    c = _suite("paillier")
+    xs = [5, 7, 2 ** 80 + 3]
+    ct = c.encrypt_ints(x for x in xs)
+    assert all(v is not None for v in ct)
+    assert c.decrypt_to_ints(ct) == xs
+
+
+def test_affine_encrypt_rejects_out_of_range():
+    """Values >= n must raise like the Paillier backend does, not wrap
+    silently and decrypt to garbage."""
+    import jax.numpy as jnp
+
+    from repro.core.he import limbs
+    c = _suite("affine")
+    bad = jnp.asarray(limbs.from_pyints([c.n_int], c.Ln))
+    with pytest.raises(ValueError, match="out of range"):
+        c.encrypt_limbs(bad)
+    with pytest.raises(ValueError, match="out of range"):
+        c.encrypt_ints([c.n_int + 5])
+    # the kernelized path (the use_pallas production default) guards too
+    from repro.kernels.modmul import encrypt_batch
+    with pytest.raises(ValueError, match="out of range"):
+        encrypt_batch(c, bad)
+    # boundary: n - 1 still round-trips
+    ok = c.encrypt_ints([c.n_int - 1])
+    assert c.decrypt_to_ints(jnp.asarray(ok)) == [c.n_int - 1]

@@ -47,6 +47,8 @@ def test_paillier_oracle_one_tree():
                                      cipher="paillier", key_bits=256,
                                      precision=16)).fit(X[:, :3], y, [X[:, 3:]])
     assert _auc(fed.predict_proba(X[:, :3], [X[:, 3:]]), y) > 0.6
+    # the synchronous python-int oracle has no in-flight work to overlap
+    assert fed.stats.layer_overlap == []
 
 
 def test_multihost():
@@ -149,6 +151,37 @@ def test_multiclass_and_mo():
     acc_mo = (mo.predict_proba(X[:, :3], [X[:, 3:]]).argmax(1) == y).mean()
     assert acc_mc > 0.6 and acc_mo > 0.6
     assert len(mo.trees) == 3 and len(mc.trees) == 9   # MO: 1 tree per round
+
+
+def test_multiclass_gradients_computed_once_per_round():
+    """Regression: g/h were recomputed after each class's score update
+    inside a round, so class c+1 trees trained on scores already moved by
+    class c — the paper's default multiclass setting computes g/h ONCE per
+    round from round-start scores."""
+    from repro.core.loss import SoftmaxLoss
+    rng = np.random.default_rng(0)
+    X, _ = _data(n=300)
+    s = X @ rng.normal(0, 1, X.shape[1])
+    y = ((s > np.quantile(s, 0.33)).astype(float)
+         + (s > np.quantile(s, 0.66)).astype(float))
+    seen_scores = []
+    orig = SoftmaxLoss.grad_hess
+
+    def spy(self, yy, score):
+        seen_scores.append(np.array(score, copy=True))
+        return orig(self, yy, score)
+
+    SoftmaxLoss.grad_hess = spy
+    try:
+        VerticalBoosting(SBTParams(n_trees=2, max_depth=2, n_bins=8,
+                                   objective="multiclass", n_classes=3)).fit(
+            X[:, :3], y, [X[:, 3:]])
+    finally:
+        SoftmaxLoss.grad_hess = orig
+    # once per ROUND, not once per (round, class)
+    assert len(seen_scores) == 2
+    # round-start pin: the first call sees the untouched init scores
+    assert np.ptp(seen_scores[0], axis=0).max() == 0
 
 
 def test_channel_accounting_nonzero_and_structured():

@@ -1,0 +1,241 @@
+"""Mesh-sharded crypto endpoints (DESIGN.md §8): encrypt/decrypt parity,
+born-sharded ciphertexts, guest/host overlap accounting, cache eviction.
+
+The parity tests need a forced multi-device CPU
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``, the CI multidevice
+job) and skip otherwise; the rule-table, overlap, and eviction tests run
+anywhere.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SBTParams, VerticalBoosting, encoding
+from repro.core.binning import bin_features
+from repro.core.he import get_cipher, limbs
+from repro.core.histogram import CipherHistogram
+from repro.core.party import Channel, Stats
+from repro.core.tree import (HostRuntime, PackedCodec, TreeContext,
+                             _encrypt_all)
+from repro.kernels.modmul import decrypt_batch, encrypt_batch
+from repro.launch.mesh import make_gbdt_mesh
+from repro.parallel.sharding import GBDT_RULES, data_pad, gbdt_sharding
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count>=2")
+
+
+def _data(n=400, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(0, 1, (n, d)).astype(np.float32)
+    w = rng.normal(0, 1, d)
+    y = (X @ w + 0.3 * rng.normal(0, 1, n) > 0).astype(np.float64)
+    return X, y
+
+
+# ---------------------------------------------------------------------------
+# rule table (single device)
+# ---------------------------------------------------------------------------
+
+def test_crypto_endpoint_rules():
+    """enc_plain / split_infos shard their row axis over "data" with every
+    other axis replicated (embarrassingly parallel, no collective)."""
+    assert GBDT_RULES["enc_plain"] == ("data", None, None)
+    assert GBDT_RULES["split_infos"] == ("data", None, None)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from jax.sharding import PartitionSpec as P
+    assert gbdt_sharding(mesh, "enc_plain").spec == P("data", None, None)
+    assert gbdt_sharding(mesh, "split_infos", ndim=2).spec == P("data", None)
+
+
+def test_data_pad_divisibility():
+    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model")) \
+        if len(jax.devices()) > 1 else jax.make_mesh((1, 1), ("data", "model"))
+    d = dict(mesh.shape)["data"]
+    for n in (1, 7, d, d + 1, 5 * d):
+        assert (n + data_pad(mesh, n)) % d == 0
+
+
+# ---------------------------------------------------------------------------
+# sharded encrypt/decrypt bit-identity (multi-device only)
+# ---------------------------------------------------------------------------
+
+@multi_device
+@pytest.mark.parametrize("n", [64, 301, 1024])
+def test_sharded_encrypt_bit_identical(n):
+    """Row-sharded encrypt == single-device encrypt, limb for limb,
+    including non-divisible row counts (internal zero pad rows)."""
+    mesh = make_gbdt_mesh()
+    c = get_cipher("affine", key_bits=256, seed=11)
+    rng = np.random.default_rng(n)
+    xs = [int(v) for v in rng.integers(0, 2 ** 60, n)]
+    pl = jnp.asarray(limbs.from_pyints(xs, c.Ln))
+    single = np.asarray(encrypt_batch(c, pl))
+    shard = encrypt_batch(c, pl, mesh=mesh)
+    np.testing.assert_array_equal(single, np.asarray(shard)[:n])
+    # born at histogram width, 3-D (instance, slot, limb) layout
+    sh3 = encrypt_batch(c, pl.reshape(n, 1, -1), mesh=mesh,
+                        out_width=c.hist_width)
+    assert sh3.shape[-1] == c.hist_width
+    np.testing.assert_array_equal(single, np.asarray(sh3)[:n, 0, : c.Ln])
+    assert not np.asarray(sh3)[:, :, c.Ln:].any()
+
+
+@multi_device
+@pytest.mark.parametrize("n", [64, 301])
+def test_sharded_decrypt_bit_identical(n):
+    mesh = make_gbdt_mesh()
+    c = get_cipher("affine", key_bits=256, seed=7)
+    rng = np.random.default_rng(n + 1)
+    xs = [int(v) for v in rng.integers(0, 2 ** 60, n)]
+    ct = encrypt_batch(c, jnp.asarray(limbs.from_pyints(xs, c.Ln)))
+    single = np.asarray(decrypt_batch(c, ct))
+    shard = np.asarray(decrypt_batch(c, ct, mesh=mesh))
+    np.testing.assert_array_equal(single, shard)
+    assert limbs.to_pyints(shard) == xs
+
+
+# ---------------------------------------------------------------------------
+# born-sharded ciphertexts: zero host->device re-placements after encrypt
+# ---------------------------------------------------------------------------
+
+def _encrypt_ctx(cipher_name: str, mesh, n=300, d=4):
+    rng = np.random.default_rng(3)
+    X = rng.normal(0, 1, (n, d)).astype(np.float32)
+    g = rng.normal(0, 1, n)
+    h = rng.random(n) + 0.5
+    cipher = (get_cipher("plain", bits=256) if cipher_name == "plain"
+              else get_cipher("affine", key_bits=256, seed=11))
+    data = bin_features(X, 16)
+    plan = encoding.plan_packing(g, h, n, cipher.plaintext_bits, 20)
+    stats = Stats()
+    engine = CipherHistogram(cipher, 16, stats=stats, mesh=mesh)
+    host = HostRuntime(hid=0, data=data, engine=engine)
+    ctx = TreeContext(params=SBTParams(cipher=cipher_name, precision=20,
+                                       mesh=mesh),
+                      cipher=cipher, codec=PackedCodec(plan),
+                      channel=Channel(), stats=stats, guest_data=data,
+                      g=g, h=h, sel_rows=np.arange(n), hosts=[host])
+    _encrypt_all(ctx, g, h)
+    return ctx, host, cipher
+
+
+@multi_device
+@pytest.mark.parametrize("cipher_name", ["plain", "affine"])
+def test_encrypt_all_births_sharded_cts(cipher_name):
+    """Frontier state inspection: ciphertexts arrive at histogram width with
+    the gh_cts at-rest sharding and the frontier performs ZERO host->device
+    re-placements after encryption."""
+    mesh = make_gbdt_mesh()
+    ctx, host, cipher = _encrypt_ctx(cipher_name, mesh)
+    fr = host.frontier
+    assert fr.n_cts_placements == 0
+    assert ctx.stats.n_cts_placements == 0
+    cts = fr.state.cts
+    assert cts.shape[-1] == cipher.hist_width
+    assert cts.shape[0] == 300 + data_pad(mesh, 300)
+    assert cts.sharding.is_equivalent_to(gbdt_sharding(mesh, "gh_cts"),
+                                         cts.ndim)
+    assert ctx.stats.encrypt_seconds > 0
+
+
+def test_encrypt_all_single_device_also_born_at_width():
+    """Without a mesh the frontier still adopts the encrypt output as-is
+    (width-padded at birth): no second placement/pad pass."""
+    for name in ("plain", "affine"):
+        ctx, host, cipher = _encrypt_ctx(name, mesh=None)
+        assert host.frontier.n_cts_placements == 0
+        assert host.frontier.state.cts.shape[-1] == cipher.hist_width
+
+
+def test_legacy_cts_still_accepted():
+    """Narrow unsharded ciphertexts (the pre-§8 layout) still build a
+    frontier — with exactly one placement tallied."""
+    rng = np.random.default_rng(0)
+    n = 64
+    cipher = get_cipher("plain", bits=256)
+    data = bin_features(rng.normal(0, 1, (n, 3)).astype(np.float32), 8)
+    cts = jnp.asarray(rng.integers(0, 256, (n, 1, cipher.Ln)), jnp.int32)
+    from repro.core.frontier import CipherFrontier
+    fr = CipherFrontier(CipherHistogram(cipher, 8), data, cts)
+    assert fr.n_cts_placements == 1
+    assert fr.state.cts.shape[-1] == cipher.hist_width
+
+
+@multi_device
+def test_mesh_fit_zero_replacements_and_parity():
+    """End-to-end: mesh training performs zero ciphertext re-placements and
+    stays bit-identical to the unsharded run."""
+    X, y = _data(n=437)
+    mesh = make_gbdt_mesh()
+    base = dict(n_trees=2, max_depth=3, n_bins=16, cipher="plain")
+    m1 = VerticalBoosting(SBTParams(**base, mesh=mesh)).fit(
+        X[:, :3], y, [X[:, 3:]])
+    m2 = VerticalBoosting(SBTParams(**base)).fit(X[:, :3], y, [X[:, 3:]])
+    np.testing.assert_array_equal(m1.predict_proba(X[:, :3], [X[:, 3:]]),
+                                  m2.predict_proba(X[:, :3], [X[:, 3:]]))
+    assert m1.stats.n_cts_placements == 0
+    assert m2.stats.n_cts_placements == 0
+
+
+# ---------------------------------------------------------------------------
+# guest/host overlap accounting
+# ---------------------------------------------------------------------------
+
+def test_overlap_stats_recorded():
+    X, y = _data(n=300)
+    m = VerticalBoosting(SBTParams(n_trees=2, max_depth=3, n_bins=16)).fit(
+        X[:, :3], y, [X[:, 3:]])
+    s = m.stats
+    assert s.encrypt_seconds > 0
+    assert s.layer_overlap and all(0.0 <= f <= 1.0 for f in s.layer_overlap)
+    assert 0.0 <= s.overlap_fraction <= 1.0
+    assert s.guest_hist_seconds > 0 and s.host_wait_seconds > 0
+    d = s.as_dict()
+    assert "layer_overlap" in d and "encrypt_seconds" in d
+
+
+def test_guest_only_layers_record_no_overlap():
+    """mix-mode guest-local trees have no host dispatch to overlap with."""
+    X, y = _data(n=200)
+    m = VerticalBoosting(SBTParams(n_trees=1, max_depth=2, tree_mode="mix",
+                                   trees_per_party=1)).fit(
+        X[:, :3], y, [X[:, 3:]])
+    assert m.stats.layer_overlap == []
+
+
+# ---------------------------------------------------------------------------
+# frontier cache eviction
+# ---------------------------------------------------------------------------
+
+def test_hist_cache_bounded_by_frontier_width():
+    """Deep tree with many dead branches: cached parent histograms never
+    outnumber the frontier (the pre-fix code leaked every leaf's cached
+    histogram for the tree's remainder)."""
+    X, y = _data(n=250, seed=4)
+    m = VerticalBoosting(SBTParams(n_trees=2, max_depth=6, n_bins=16,
+                                   min_leaf=8, min_gain=1e-3)).fit(
+        X[:, :3], y, [X[:, 3:]])
+    s = m.stats
+    assert s.peak_frontier >= 2
+    assert s.peak_hist_cache <= s.peak_frontier
+    assert s.peak_hist_cache <= 2 ** 5          # <= splits per layer bound
+
+    # eviction must not change the model: parity with a shallow rerun
+    m2 = VerticalBoosting(SBTParams(n_trees=2, max_depth=6, n_bins=16,
+                                    min_leaf=8, min_gain=1e-3)).fit(
+        X[:, :3], y, [X[:, 3:]])
+    np.testing.assert_array_equal(m.predict_proba(X[:, :3], [X[:, 3:]]),
+                                  m2.predict_proba(X[:, :3], [X[:, 3:]]))
+
+
+def test_subtraction_off_evicts_everything():
+    X, y = _data(n=200, seed=2)
+    m = VerticalBoosting(SBTParams(n_trees=1, max_depth=4, n_bins=16,
+                                   histogram_subtraction=False)).fit(
+        X[:, :3], y, [X[:, 3:]])
+    assert m.stats.peak_hist_cache == 0
