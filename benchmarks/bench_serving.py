@@ -1,0 +1,154 @@
+"""Serving subsystem benchmark (DESIGN.md §9): packed engine vs the legacy
+per-node predict loop on the 65536-row bench shape.
+
+Reports, per configuration:
+
+* ``rows_per_s`` — batch throughput of each path,
+* ``speedup``    — packed vs legacy *from bins* (the routing engine vs the
+  python node loop; both paths share the binning front-end, reported
+  separately as the ``e2e`` rows),
+* ``p50_batch_ms`` — median serve latency over repeated full batches,
+* ``wire_bytes_per_instance`` / ``roundtrips_per_batch`` — from the
+  ``predict_*`` ledger entries (1 bit per host internal node per instance
+  plus the id request, ONE round-trip per host per batch),
+* ``bit_identical`` — packed output vs the legacy loop,
+* export → reload round-trip time and identity.
+
+The ensemble uses the paper's 25-tree budget (10 under ``--quick``) at
+depth 6: serving cost scales with total node count, which is where the
+per-node loop loses.  A mesh row appears when multiple devices are
+visible (forced CPU devices time-slice real cores, so its *throughput* is
+not the headline — bit-identity under row sharding is).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import emit, timed
+
+from repro.core import SBTParams, VerticalBoosting
+from repro.core.binning import apply_binning
+from repro.core.tree import predict_tree
+from repro.data import synthetic_tabular
+from repro.serving import (FederatedPredictor, PackedEnsemble, export_model,
+                           load_ensemble)
+
+SHAPE = dict(n=65536, d=16, n_bins=32, max_depth=6, n_train=4096)
+
+
+def _median(fn, reps: int) -> float:
+    ts = []
+    for _ in range(reps):
+        _, t = timed(fn)
+        ts.append(t)
+    return sorted(ts)[len(ts) // 2]
+
+
+def main(quick: bool = False):
+    s = SHAPE
+    n_trees = 10 if quick else 25
+    reps = 5 if quick else 7
+    X, y = synthetic_tabular(s["n"], s["d"], seed=0, task="binary")
+    n_guest = max(2, s["d"] // 8)           # host-heavy vertical split
+    Xg, Xh = X[:, :n_guest], X[:, n_guest:]
+
+    model = VerticalBoosting(SBTParams(
+        n_trees=n_trees, max_depth=s["max_depth"], n_bins=s["n_bins"],
+        cipher="plain", seed=1)).fit(Xg[: s["n_train"]], y[: s["n_train"]],
+                                     [Xh[: s["n_train"]]])
+    n_nodes = sum(len(t.nodes) for t in model.trees)
+    tag = f"serving/{s['n']}x{s['d']}/t{n_trees}"
+    rows = []
+
+    # --- from-bins: the routing engine vs the python node loop ----------
+    gb = apply_binning(Xg, model.guest_data)
+    hb = apply_binning(Xh, model.host_data[0])
+
+    def legacy_bins():
+        out = np.full(s["n"], model.init_score)
+        for tree in model.trees:
+            out += predict_tree(tree, gb, [hb])
+        return out
+
+    ens = PackedEnsemble.from_model(model)
+    pred = FederatedPredictor(ens.guest, ens.hosts)   # own ledgers
+
+    def packed_bins():
+        return pred.predict_score_binned(gb, [hb])
+
+    ref = legacy_bins()
+    t_leg = _median(legacy_bins, max(3, reps - 2))
+    packed_bins()                                     # compile
+    t_pkd = _median(packed_bins, reps)
+    ident = bool(np.array_equal(packed_bins(), ref))
+
+    ch = pred.channel.summary()
+    batches = pred.stats.n_predict_batches
+    wire = (ch["predict_bits"]["bytes"] + ch["predict_req"]["bytes"]) \
+        / batches / s["n"]
+    rt = pred.stats.n_predict_roundtrips / batches
+
+    rows.append((f"{tag}/legacy_loop", t_leg * 1e6,
+                 f"rows_per_s={s['n'] / t_leg:.0f};n_nodes={n_nodes}"))
+    rows.append((f"{tag}/packed", t_pkd * 1e6,
+                 f"rows_per_s={s['n'] / t_pkd:.0f}"
+                 f";speedup={t_leg / t_pkd:.1f}x"
+                 f";p50_batch_ms={t_pkd * 1e3:.1f}"
+                 f";wire_bytes_per_instance={wire:.1f}"
+                 f";roundtrips_per_batch={rt:.0f}"
+                 f";bit_identical={ident}"))
+
+    # --- end to end (binning included on both sides) --------------------
+    t_leg_e2e = _median(
+        lambda: model.predict_score(Xg, [Xh], packed=False), 3)
+    model.predict_score(Xg, [Xh])
+    t_pkd_e2e = _median(lambda: model.predict_score(Xg, [Xh]), reps)
+    rows.append((f"{tag}/legacy_e2e", t_leg_e2e * 1e6,
+                 f"rows_per_s={s['n'] / t_leg_e2e:.0f}"))
+    rows.append((f"{tag}/packed_e2e", t_pkd_e2e * 1e6,
+                 f"rows_per_s={s['n'] / t_pkd_e2e:.0f}"
+                 f";speedup={t_leg_e2e / t_pkd_e2e:.1f}x"))
+
+    # --- export -> reload -> serve --------------------------------------
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.perf_counter()
+        export_model(ens, d + "/model")
+        ens2 = load_ensemble(d + "/model")
+        t_io = time.perf_counter() - t0
+    pred2 = FederatedPredictor(ens2.guest, ens2.hosts)
+    ident2 = bool(np.array_equal(pred2.predict_score_binned(gb, [hb]), ref))
+    rows.append((f"{tag}/export_reload", t_io * 1e6,
+                 f"bit_identical={ident2}"))
+
+    # --- mesh row (visible multi-device runtimes only) ------------------
+    import jax
+    if len(jax.devices()) > 1:
+        from repro.launch.mesh import make_gbdt_mesh
+        mpred = FederatedPredictor(ens.guest, ens.hosts,
+                                   mesh=make_gbdt_mesh())
+        mpred.predict_score_binned(gb, [hb])
+        t_mesh = _median(lambda: mpred.predict_score_binned(gb, [hb]), 3)
+        ident3 = bool(np.array_equal(
+            mpred.predict_score_binned(gb, [hb]), ref))
+        rows.append((f"{tag}/packed_{len(jax.devices())}dev", t_mesh * 1e6,
+                     f"rows_per_s={s['n'] / t_mesh:.0f}"
+                     f";bit_identical={ident3}"))
+    else:
+        rows.append((f"{tag}/packed_mesh", 0.0,
+                     "SKIP:single-device (set XLA_FLAGS="
+                     "--xla_force_host_platform_device_count=8)"))
+
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

@@ -29,6 +29,7 @@ BENCHES = {
     "fig9_mo": "benchmarks.bench_mo",
     "cost_model": "benchmarks.bench_cost_model",
     "kernels": "benchmarks.bench_kernels",
+    "serving": "benchmarks.bench_serving",
 }
 
 

@@ -24,6 +24,7 @@ class BinnedData:
     n_bins: int
     zero_bins: np.ndarray | None = None   # (n_f,) int32, sparse mode only
     zero_mask: np.ndarray | None = None   # (n_i, n_f) bool: True where x==0
+    _thr_dev: object = dataclasses.field(default=None, repr=False)
 
     @property
     def n_instances(self) -> int:
@@ -32,6 +33,15 @@ class BinnedData:
     @property
     def n_features(self) -> int:
         return self.bins.shape[1]
+
+    def device_thresholds(self):
+        """Thresholds as a device-resident fp32 array, uploaded once and
+        cached: every ``apply_binning`` (one per party per predict batch)
+        previously re-placed the (n_f, n_b-1) table on device."""
+        if self._thr_dev is None:
+            import jax.numpy as jnp
+            self._thr_dev = jnp.asarray(self.thresholds, jnp.float32)
+        return self._thr_dev
 
     def split_value(self, fid: int, bid: int) -> float:
         """Threshold meaning 'go left iff bin <= bid'."""
@@ -57,6 +67,9 @@ def bin_features(X: np.ndarray, n_bins: int = 32, sparse: bool = False,
 
 def apply_binning(X: np.ndarray, binned: BinnedData,
                   use_pallas: bool = True) -> np.ndarray:
-    """Bin new data with already-fitted thresholds (inference path)."""
-    return np.asarray(bucketize(np.asarray(X, np.float32), binned.thresholds,
+    """Bin new data with already-fitted thresholds (inference path).  Reads
+    the cached device-resident threshold table, shared by the serving
+    engine and the legacy predict loop."""
+    return np.asarray(bucketize(np.asarray(X, np.float32),
+                                binned.device_thresholds(),
                                 use_pallas=use_pallas)).astype(np.int32)

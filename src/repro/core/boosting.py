@@ -74,11 +74,15 @@ class VerticalBoosting:
         self.stats = Stats()
         self.init_score = None
         self._loss = None
+        self._predictor = None            # cached packed serving engine
+        self._predictor_n_trees = -1
 
     # ------------------------------------------------------------------
     def fit(self, X_guest: np.ndarray, y: np.ndarray,
             X_hosts: list[np.ndarray]):
         p = self.params
+        self._predictor = None            # stale after refit
+        self._predictor_n_trees = -1
         rng = np.random.default_rng(p.seed)
         self.guest_data = bin_features(X_guest, p.n_bins, sparse=p.sparse,
                                        use_pallas=p.use_pallas)
@@ -110,18 +114,20 @@ class VerticalBoosting:
                 # updated by class c's tree this round
                 g, h = self._loss.grad_hess(y, score)
                 for c in range(p.n_classes):
-                    tree = self._grow(cipher, g[:, c], h[:, c], t, rng,
-                                      mix_party=self._mix_party(t, n_parties))
+                    tree, leaf_rows = self._grow(
+                        cipher, g[:, c], h[:, c], t, rng,
+                        mix_party=self._mix_party(t, n_parties))
                     self.trees.append(tree)
                     self.tree_class.append(c)
-                    self._apply(score, tree, cls=c)
+                    self._apply(score, tree, leaf_rows, cls=c)
             else:
                 g, h = self._loss.grad_hess(y, score)
-                tree = self._grow(cipher, g, h, t, rng,
-                                  mix_party=self._mix_party(t, n_parties))
+                tree, leaf_rows = self._grow(
+                    cipher, g, h, t, rng,
+                    mix_party=self._mix_party(t, n_parties))
                 self.trees.append(tree)
                 self.tree_class.append(-1)
-                self._apply(score, tree)
+                self._apply(score, tree, leaf_rows)
             self.stats.tree_seconds.append(time.perf_counter() - t0)
         self.train_score_ = score
         return self
@@ -141,7 +147,7 @@ class VerticalBoosting:
         return cycle % n_parties        # 0 = guest, 1.. = host id + 1
 
     # ------------------------------------------------------------------
-    def _grow(self, cipher, g, h, t: int, rng, mix_party=None) -> FederatedTree:
+    def _grow(self, cipher, g, h, t: int, rng, mix_party=None) -> tuple:
         p = self.params
         n = g.shape[0]
         if p.goss:
@@ -196,16 +202,42 @@ class VerticalBoosting:
         return NoPackCodec.plan(g, p.precision)
 
     # ------------------------------------------------------------------
-    def _apply(self, score, tree: FederatedTree, cls: int = -1):
+    def _apply(self, score, tree: FederatedTree, leaf_rows: dict,
+               cls: int = -1):
+        """Training score update from the grower's train-side row->leaf
+        map; ``leaf_rows`` never lives on the tree (serving/export must
+        see no row-level state)."""
         for nd in tree.nodes:
             if nd.left == -1 and nd.weight is not None:
-                rows = tree.leaf_rows[nd.nid]
+                rows = leaf_rows[nd.nid]
                 if cls >= 0:
                     score[rows, cls] += nd.weight
                 else:
                     score[rows] += nd.weight
 
-    def predict_score(self, X_guest, X_hosts) -> np.ndarray:
+    def _serving_predictor(self):
+        """Cached packed serving engine over this model's trees, wired to
+        the model's wire/stat ledgers (rebuilt if trees changed)."""
+        from ..serving import FederatedPredictor, PackedEnsemble
+        if self._predictor is None \
+                or self._predictor_n_trees != len(self.trees):
+            ens = PackedEnsemble.from_model(self)
+            self._predictor = FederatedPredictor(
+                ens.guest, ens.hosts, channel=self.channel,
+                stats=self.stats, mesh=self.params.mesh,
+                use_pallas=self.params.use_pallas)
+            self._predictor_n_trees = len(self.trees)
+        return self._predictor
+
+    def predict_score(self, X_guest, X_hosts,
+                      packed: bool = True) -> np.ndarray:
+        """Raw ensemble scores.  ``packed=True`` (default) serves through
+        the packed engine — bit-identical to the legacy loop, one wire
+        round-trip per host per batch, counted under the ``predict_*``
+        tags.  ``packed=False`` keeps the per-node ``predict_tree`` loop
+        as the slow oracle (tests, benchmarks)."""
+        if packed and self.trees:
+            return self._serving_predictor().predict_score(X_guest, X_hosts)
         from .binning import apply_binning
         p = self.params
         gb = apply_binning(X_guest, self.guest_data, p.use_pallas)
@@ -224,9 +256,10 @@ class VerticalBoosting:
                 score += out
         return score
 
-    def predict_proba(self, X_guest, X_hosts) -> np.ndarray:
+    def predict_proba(self, X_guest, X_hosts,
+                      packed: bool = True) -> np.ndarray:
         from .loss import sigmoid, softmax
-        s = self.predict_score(X_guest, X_hosts)
+        s = self.predict_score(X_guest, X_hosts, packed=packed)
         return sigmoid(s) if self.params.objective == "binary" else softmax(s)
 
 
@@ -250,10 +283,10 @@ class LocalGBDT(VerticalBoosting):
     def fit(self, X: np.ndarray, y: np.ndarray):   # type: ignore[override]
         return super().fit(X, y, [])
 
-    def predict_score(self, X) -> np.ndarray:      # type: ignore[override]
-        return super().predict_score(X, [])
+    def predict_score(self, X, packed: bool = True) -> np.ndarray:  # type: ignore[override]
+        return super().predict_score(X, [], packed=packed)
 
-    def predict_proba(self, X) -> np.ndarray:      # type: ignore[override]
+    def predict_proba(self, X, packed: bool = True) -> np.ndarray:  # type: ignore[override]
         from .loss import sigmoid, softmax
-        s = self.predict_score(X)
+        s = self.predict_score(X, packed=packed)
         return sigmoid(s) if self.params.objective == "binary" else softmax(s)

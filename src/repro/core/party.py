@@ -47,6 +47,11 @@ class Stats:
     host_wait_seconds: float = 0.0      # blocking decrypt+decode tail
     peak_hist_cache: int = 0    # max cached parent hists after any eviction
     peak_frontier: int = 0      # max frontier width (layer node count)
+    n_predict_batches: int = 0  # serving-engine batches served
+    n_predict_roundtrips: int = 0   # host predict_bits exchanges: exactly
+                                    # ONE per (host, batch) in the
+                                    # round-batched serving protocol
+    predict_seconds: float = 0.0    # serving engine wall time (bins->score)
     tree_seconds: list = dataclasses.field(default_factory=list)
     layer_overlap: list = dataclasses.field(default_factory=list)
     # per layer: guest-window seconds / total candidate-phase seconds.  An

@@ -156,6 +156,34 @@ class FederatedTree:
     nodes: list
     host_tables: list            # per host: {nid: (fid, bid)} -- host-private
 
+    def node_arrays(self) -> dict:
+        """Flat per-node arrays for the serving packer (serving/packed.py).
+
+        Returns structure (party/left/right/depth), the guest's own
+        (fid, bid) pairs, and the (n_nodes, w_dim) leaf-weight matrix
+        (zeros at internal nodes).  Host split tables stay in
+        ``host_tables`` — they are exported by the *host* half only.
+        Deliberately contains nothing row-level: a packed model must be
+        shippable to a serving process with no training-set residue.
+        """
+        nodes = self.nodes
+        n = len(nodes)
+        party = np.fromiter((nd.party for nd in nodes), np.int32, n)
+        left = np.fromiter((nd.left for nd in nodes), np.int32, n)
+        right = np.fromiter((nd.right for nd in nodes), np.int32, n)
+        depth = np.fromiter((nd.depth for nd in nodes), np.int32, n)
+        fid = np.fromiter((nd.fid for nd in nodes), np.int32, n)
+        bid = np.fromiter((nd.bid for nd in nodes), np.int32, n)
+        first_w = next(np.asarray(nd.weight, np.float64)
+                       for nd in nodes if nd.weight is not None)
+        weight = np.zeros((n, first_w.size), np.float64)
+        for nd in nodes:
+            if nd.weight is not None:
+                weight[nd.nid] = np.asarray(nd.weight,
+                                            np.float64).reshape(-1)
+        return {"party": party, "left": left, "right": right,
+                "depth": depth, "fid": fid, "bid": bid, "weight": weight}
+
 
 @dataclasses.dataclass
 class HostRuntime:
@@ -479,10 +507,16 @@ def _guest_layer_candidates(ctx: TreeContext, guest_frontier: GuestFrontier,
 
 def grow_tree(ctx: TreeContext,
               feature_parties: Callable[[int], tuple] | None = None
-              ) -> FederatedTree:
+              ) -> tuple:
     """Grow one federated tree.  ``feature_parties(depth) -> (use_guest,
     host_ids)`` schedules which parties contribute split candidates at each
-    depth (mix / layered modes); default: everyone, every depth."""
+    depth (mix / layered modes); default: everyone, every depth.
+
+    Returns ``(tree, leaf_rows)``: the model and the training row -> leaf
+    assignment.  ``leaf_rows`` is train-side state consumed once by the
+    boosting driver's score update — it is deliberately NOT attached to the
+    :class:`FederatedTree`, so a model held for serving (or exported via
+    ``serving/export.py``) carries no row-level training residue."""
     p = ctx.params
     if feature_parties is None:
         feature_parties = lambda d: (True, [h.hid for h in ctx.hosts])
@@ -646,12 +680,12 @@ def grow_tree(ctx: TreeContext,
                                       h_sel[rs].sum(axis=0),
                                       p.lam, p.learning_rate)
 
-    # leaf row assignment for the score update
+    # leaf row assignment for the score update (returned alongside, never
+    # retained on the model: the tree must stay free of row-level state)
     leaf_rows = {n.nid: rows_all[n.nid] for n in nodes if n.left == -1}
     tree = FederatedTree(nodes=nodes,
                          host_tables=[h.table for h in ctx.hosts])
-    tree.leaf_rows = leaf_rows
-    return tree
+    return tree, leaf_rows
 
 
 def predict_tree(tree: FederatedTree, guest_bins: np.ndarray,

@@ -172,6 +172,13 @@ GBDT_RULES = {
     # stack's candidate axis shard over "data" with no collective.
     "enc_plain": ("data", None, None),      # (instance, slot, plain-limb)
     "split_infos": ("data", None, None),    # (candidate, slot, limb)
+    # serving engine (DESIGN.md §9): decision bits travel transposed and
+    # bit-packed — (node-column, instance-byte) — so the *byte* axis is the
+    # instance axis and shards over "data"; the routing cursor is
+    # (instance, tree).  Routing is embarrassingly parallel over rows: no
+    # collective on either array.
+    "serve_bits": (None, "data"),           # (node-column, packed inst byte)
+    "serve_route": ("data", None),          # (instance, tree)
 }
 
 

@@ -1,0 +1,7 @@
+"""Federated serving subsystem (DESIGN.md §9): packed device-resident
+ensembles, a round-batched bit-tensor protocol (one round-trip per host
+per batch), and per-party model export."""
+
+from .engine import FederatedPredictor  # noqa: F401
+from .export import export_model, load_ensemble, load_guest, load_host  # noqa: F401
+from .packed import GuestHalf, HostHalf, PackedEnsemble, PartySlice  # noqa: F401

@@ -1,0 +1,180 @@
+"""Per-party model export/import for the serving subsystem (DESIGN.md §9).
+
+Layout mirrors the privacy boundary: one directory per party, each
+self-contained (manifest.json + arrays.npz), written to a temp dir and
+published with an atomic rename — the same crash-safety pattern as
+``checkpoint/checkpoint.py``:
+
+    <out_dir>/
+      guest/   manifest.json  arrays.npz   (structure, leaf weights,
+                                            guest splits, guest binning)
+      host0/   manifest.json  arrays.npz   (host0 splits + binning ONLY)
+      host1/   ...
+
+A serving process loads only its own directory: ``load_guest`` /
+``load_host`` rebuild the exact ``GuestHalf`` / ``HostHalf`` the packer
+produced, and ``FederatedPredictor`` serves from them with no training
+objects.  Manifests carry array shapes/dtypes so corruption fails loudly
+(``ValueError``) instead of mis-serving.  No array in any manifest is
+row-level: exported models carry zero training-set residue.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import numpy as np
+
+from .packed import GuestHalf, HostHalf, PackedEnsemble, PartySlice
+
+FORMAT = "sbt-packed-serving"
+VERSION = 1
+
+_GUEST_ARRAYS = ("step", "roots", "tree_class", "leaf_w", "k_parties",
+                 "fid", "bid", "thresholds")
+_HOST_ARRAYS = ("fid", "bid", "thresholds")
+
+
+def _write_party(party_dir: str, manifest: dict, arrays: dict) -> None:
+    os.makedirs(party_dir, exist_ok=True)
+    manifest = dict(manifest, format=FORMAT, version=VERSION,
+                    arrays={k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                            for k, v in arrays.items()})
+    np.savez_compressed(os.path.join(party_dir, "arrays.npz"), **arrays)
+    with open(os.path.join(party_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def export_model(model_or_ensemble, out_dir: str) -> str:
+    """Write per-party serving halves; returns ``out_dir``.
+
+    Accepts a fitted ``VerticalBoosting`` (packed on the fly) or a
+    ``PackedEnsemble``.  The whole export lands atomically: a partial
+    write can never shadow a previous good export.
+    """
+    ens = (model_or_ensemble
+           if isinstance(model_or_ensemble, PackedEnsemble)
+           else PackedEnsemble.from_model(model_or_ensemble))
+    g = ens.guest
+    out_dir = out_dir.rstrip("/")
+    tmp = out_dir + ".tmp-export"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    init = (g.init_score if np.isscalar(g.init_score)
+            else np.asarray(g.init_score).tolist())
+    _write_party(
+        os.path.join(tmp, "guest"),
+        {"role": "guest", "objective": g.objective,
+         "n_classes": g.n_classes, "n_bins": g.n_bins, "depth": g.depth,
+         "n_trees": g.n_trees, "n_nodes": g.n_nodes,
+         "n_hosts": g.n_hosts, "init_score": init},
+        {"step": g.step, "roots": g.roots, "tree_class": g.tree_class,
+         "leaf_w": g.leaf_w, "k_parties": g.k_parties,
+         "fid": g.guest.fid, "bid": g.guest.bid,
+         "thresholds": g.thresholds})
+    for h in ens.hosts:
+        _write_party(
+            os.path.join(tmp, f"host{h.hid}"),
+            {"role": "host", "hid": h.hid, "n_bins": h.n_bins,
+             "k": h.table.k},
+            {"fid": h.table.fid, "bid": h.table.bid,
+             "thresholds": h.thresholds})
+    # publish by rename: the previous export (if any) is moved aside
+    # BEFORE the new one lands and deleted only after — a crash at any
+    # point leaves either the old or the new export recoverable on disk,
+    # never neither
+    stale = out_dir + ".stale-export"
+    if os.path.exists(stale):
+        shutil.rmtree(stale)
+    if os.path.exists(out_dir):
+        os.replace(out_dir, stale)
+    os.replace(tmp, out_dir)                 # atomic publish
+    if os.path.exists(stale):
+        shutil.rmtree(stale)
+    return out_dir
+
+
+def _read_party(party_dir: str, role: str, names: tuple) -> tuple:
+    """Validated (manifest, arrays) for one party dir; ValueError on any
+    corruption (bad JSON, wrong role/format, missing or mis-shaped
+    arrays)."""
+    mpath = os.path.join(party_dir, "manifest.json")
+    try:
+        with open(mpath) as f:
+            man = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise ValueError(f"corrupt serving manifest {mpath}: {e}") from e
+    if man.get("format") != FORMAT:
+        raise ValueError(f"{mpath}: not a {FORMAT} manifest "
+                         f"(format={man.get('format')!r})")
+    if man.get("role") != role:
+        raise ValueError(f"{mpath}: role {man.get('role')!r}, "
+                         f"expected {role!r}")
+    meta = man.get("arrays")
+    if not isinstance(meta, dict):
+        raise ValueError(f"{mpath}: missing arrays metadata")
+    apath = os.path.join(party_dir, "arrays.npz")
+    try:
+        z = np.load(apath)
+    except Exception as e:   # truncated/corrupt zip, missing file, ...
+        raise ValueError(f"corrupt serving arrays {apath}: {e}") from e
+    with z:
+        arrays = {}
+        for name in names:
+            if name not in meta or name not in z:
+                raise ValueError(f"{mpath}: missing array {name!r}")
+            arr = z[name]
+            if list(arr.shape) != list(meta[name]["shape"]):
+                raise ValueError(
+                    f"{mpath}: array {name!r} shape {list(arr.shape)} != "
+                    f"manifest {meta[name]['shape']}")
+            if str(arr.dtype) != meta[name]["dtype"]:
+                raise ValueError(
+                    f"{mpath}: array {name!r} dtype {arr.dtype} != "
+                    f"manifest {meta[name]['dtype']}")
+            arrays[name] = arr
+    return man, arrays
+
+
+def load_guest(party_dir: str) -> GuestHalf:
+    man, a = _read_party(party_dir, "guest", _GUEST_ARRAYS)
+    try:
+        init = man["init_score"]
+        guest = GuestHalf(
+            step=a["step"], roots=a["roots"], tree_class=a["tree_class"],
+            leaf_w=a["leaf_w"], depth=int(man["depth"]),
+            k_parties=a["k_parties"],
+            guest=PartySlice(fid=a["fid"], bid=a["bid"]),
+            thresholds=a["thresholds"], n_bins=int(man["n_bins"]),
+            objective=man["objective"], n_classes=int(man["n_classes"]),
+            init_score=(float(init) if man["objective"] == "binary"
+                        else np.asarray(init, np.float64)))
+    except KeyError as e:
+        raise ValueError(f"corrupt guest manifest: missing {e}") from e
+    if guest.n_trees != int(man["n_trees"]) \
+            or guest.n_nodes != int(man["n_nodes"]):
+        raise ValueError("guest manifest tree/node counts disagree with "
+                         "arrays")
+    return guest
+
+
+def load_host(party_dir: str) -> HostHalf:
+    man, a = _read_party(party_dir, "host", _HOST_ARRAYS)
+    try:
+        return HostHalf(hid=int(man["hid"]),
+                        table=PartySlice(fid=a["fid"], bid=a["bid"]),
+                        thresholds=a["thresholds"],
+                        n_bins=int(man["n_bins"]))
+    except KeyError as e:
+        raise ValueError(f"corrupt host manifest: missing {e}") from e
+
+
+def load_ensemble(out_dir: str) -> PackedEnsemble:
+    """Load every party half back into a ``PackedEnsemble`` (simulation
+    convenience; real deployments load one half per process)."""
+    guest = load_guest(os.path.join(out_dir, "guest"))
+    hosts = [load_host(os.path.join(out_dir, f"host{h}"))
+             for h in range(guest.n_hosts)]
+    return PackedEnsemble(guest=guest, hosts=hosts)

@@ -1,0 +1,191 @@
+"""Packed ensembles for federated serving (DESIGN.md §9).
+
+Training produces a list of :class:`FederatedTree` objects whose split
+tables are scattered across parties.  Serving flattens them ONCE into flat
+arrays shaped for the layer-synchronous traversal engine
+(``serving/engine.py``):
+
+* Internal nodes of ALL trees are numbered by **bit column**: guest-owned
+  nodes first, then each host's block in hid order, each block ordered by
+  (tree, nid).  A party's decision-bit tensor for a batch is therefore one
+  contiguous row block, and the concatenated tensor needs no scatter.
+* Leaves continue the numbering above the internal block and self-loop in
+  the fused ``step`` table (``step[j] = [right, left]``, leaves
+  ``[j, j]``), so routing needs no leaf test.
+* The split *content* stays with its owner: the guest half carries tree
+  structure, leaf weights, and only the guest's own (fid, bid) pairs; each
+  host half carries only that host's (fid, bid) table and binning
+  thresholds — the same privacy boundary as training.
+
+Nothing here is row-level: a packed model is a pure function of the trees,
+shippable to a serving process with no training-set residue (asserted).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.tree import GUEST
+
+
+@dataclasses.dataclass
+class PartySlice:
+    """One party's private routing table: (fid, bid) per owned internal
+    node, ordered by that party's bit-column ids.  ``fid`` is local to the
+    party's own feature space."""
+    fid: np.ndarray            # (k,) int32
+    bid: np.ndarray            # (k,) int32
+
+    @property
+    def k(self) -> int:
+        return len(self.fid)
+
+
+@dataclasses.dataclass
+class GuestHalf:
+    """Everything the guest needs to serve: tree structure, leaf weights,
+    its own splits, and its binning thresholds.  Contains NO host split
+    content — only the per-party internal-node counts (``k_parties``),
+    which fix each host's row block in the combined bit tensor."""
+    step: np.ndarray           # (n_nodes, 2) int32: [right, left]; leaves
+                               # self-loop
+    roots: np.ndarray          # (n_trees,) int32 packed id of each root
+    tree_class: np.ndarray     # (n_trees,) int32; -1 for binary / MO
+    leaf_w: np.ndarray         # (n_nodes, w_dim) float64, 0 at internal ids
+    depth: int                 # max node depth over all trees
+    k_parties: np.ndarray      # (1 + n_hosts,) int32 internal nodes per
+                               # party, guest first
+    guest: PartySlice
+    thresholds: np.ndarray     # guest binning table (n_f, n_b-1) fp32
+    n_bins: int
+    objective: str             # binary | multiclass | mo
+    n_classes: int
+    init_score: object         # float (binary) or (n_classes,) float64
+
+    @property
+    def n_nodes(self) -> int:
+        return self.step.shape[0]
+
+    @property
+    def n_trees(self) -> int:
+        return len(self.roots)
+
+    @property
+    def n_hosts(self) -> int:
+        return len(self.k_parties) - 1
+
+    @property
+    def k_total(self) -> int:
+        return int(np.sum(self.k_parties))
+
+
+@dataclasses.dataclass
+class HostHalf:
+    """Everything one host needs to serve: its split table (in bit-column
+    order) and its binning thresholds.  No tree structure, no leaf
+    weights, no other party's splits."""
+    hid: int
+    table: PartySlice
+    thresholds: np.ndarray
+    n_bins: int
+
+
+@dataclasses.dataclass
+class PackedEnsemble:
+    guest: GuestHalf
+    hosts: list
+
+    @classmethod
+    def from_model(cls, model) -> "PackedEnsemble":
+        """Flatten a trained ``VerticalBoosting`` into serving halves."""
+        trees = model.trees
+        if not trees:
+            raise ValueError("cannot pack an unfitted model (no trees)")
+        n_hosts = len(model.host_data)
+        for t in trees:
+            # the grower keeps row->leaf maps train-side; a tree that still
+            # carries one must never reach an exportable ensemble
+            if hasattr(t, "leaf_rows"):
+                raise AssertionError(
+                    "FederatedTree retains row-level training state "
+                    "(leaf_rows); packed models must be training-set free")
+
+        arrays = [t.node_arrays() for t in trees]
+
+        # pass 1: bit-column ids — guest block, then host blocks (hid
+        # order), each ordered by (tree, nid)
+        owners = [GUEST] + list(range(n_hosts))
+        internal = {p: [] for p in owners}
+        n_leaves = 0
+        for ti, a in enumerate(arrays):
+            for nid in range(len(a["party"])):
+                if a["left"][nid] != -1:
+                    internal[int(a["party"][nid])].append((ti, nid))
+                else:
+                    n_leaves += 1
+        k_parties = np.asarray([len(internal[p]) for p in owners], np.int32)
+        k_total = int(k_parties.sum())
+        n_nodes = k_total + n_leaves
+
+        gid = {}
+        col = 0
+        for p in owners:
+            for key in internal[p]:
+                gid[key] = col
+                col += 1
+        for ti, a in enumerate(arrays):
+            for nid in range(len(a["party"])):
+                if a["left"][nid] == -1:
+                    gid[(ti, nid)] = col
+                    col += 1
+
+        w_dim = arrays[0]["weight"].shape[1]
+        step = np.empty((n_nodes, 2), np.int32)
+        leaf_w = np.zeros((n_nodes, w_dim), np.float64)
+        depth = 0
+        roots = np.empty(len(trees), np.int32)
+        for ti, a in enumerate(arrays):
+            roots[ti] = gid[(ti, 0)]
+            depth = max(depth, int(a["depth"].max()))
+            for nid in range(len(a["party"])):
+                g = gid[(ti, nid)]
+                if a["left"][nid] != -1:
+                    step[g, 0] = gid[(ti, int(a["right"][nid]))]
+                    step[g, 1] = gid[(ti, int(a["left"][nid]))]
+                else:
+                    step[g] = g
+                    leaf_w[g] = a["weight"][nid]
+
+        def _slice(p, lookup):
+            keys = internal[p]
+            fid = np.empty(len(keys), np.int32)
+            bid = np.empty(len(keys), np.int32)
+            for i, (ti, nid) in enumerate(keys):
+                fid[i], bid[i] = lookup(ti, nid)
+            return PartySlice(fid=fid, bid=bid)
+
+        guest_slice = _slice(
+            GUEST, lambda ti, nid: (int(arrays[ti]["fid"][nid]),
+                                    int(arrays[ti]["bid"][nid])))
+        p = model.params
+        guest = GuestHalf(
+            step=step, roots=roots,
+            tree_class=np.asarray(model.tree_class, np.int32),
+            leaf_w=leaf_w, depth=depth, k_parties=k_parties,
+            guest=guest_slice,
+            thresholds=np.asarray(model.guest_data.thresholds, np.float32),
+            n_bins=p.n_bins, objective=p.objective, n_classes=p.n_classes,
+            init_score=(np.asarray(model.init_score, np.float64)
+                        if p.objective != "binary"
+                        else float(model.init_score)))
+        hosts = [
+            HostHalf(hid=h,
+                     table=_slice(h, lambda ti, nid:
+                                  trees[ti].host_tables[h][nid]),
+                     thresholds=np.asarray(model.host_data[h].thresholds,
+                                           np.float32),
+                     n_bins=p.n_bins)
+            for h in range(n_hosts)]
+        return cls(guest=guest, hosts=hosts)

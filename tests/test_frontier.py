@@ -227,9 +227,12 @@ def test_mesh_training_bit_identical_to_local_with_collectives():
     if sizes.get("model", 1) > 1:
         assert coll["hist_allgather"]["bytes"] > 0
     # collectives are NOT wire bytes: the cross-party ledger is unchanged
+    # (prediction above counted predict_* wire traffic too, so the
+    # single-device reference serves the same batch before comparing)
     fed1 = VerticalBoosting(SBTParams(n_trees=3, max_depth=4, n_bins=16,
                                       cipher="plain")).fit(
         X[:, :3], y, [X[:, 3:]])
+    fed1.predict_proba(X[:, :3], [X[:, 3:]])
     assert fed.channel.total_bytes == fed1.channel.total_bytes
     assert fed1.stats.coll_bytes == 0
 

@@ -1,0 +1,339 @@
+"""Serving subsystem: packed ensembles, round-batched bit protocol,
+per-party export (DESIGN.md §9).
+
+The load-bearing claim is *bit-identity*: the packed engine must reproduce
+the legacy ``predict_tree`` loop exactly (routing is integer work; the
+float accumulation replays the same per-tree order), for every objective
+and cipher, from live models and from reloaded per-party halves, on one
+device and on a forced multi-device mesh.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import LocalGBDT, SBTParams, VerticalBoosting
+from repro.core.binning import apply_binning, bin_features
+from repro.serving import (FederatedPredictor, PackedEnsemble, export_model,
+                           load_ensemble, load_guest, load_host)
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count>=2")
+
+
+def _data(n=400, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(0, 1, (n, d)).astype(np.float32)
+    w = rng.normal(0, 1, d)
+    y = (X @ w + 0.3 * rng.normal(0, 1, n) > 0).astype(np.float64)
+    return X, y
+
+
+def _multi_labels(X, seed=0):
+    rng = np.random.default_rng(seed)
+    s = X @ rng.normal(0, 1, X.shape[1])
+    return ((s > np.quantile(s, 0.33)).astype(float)
+            + (s > np.quantile(s, 0.66)).astype(float))
+
+
+def _split(X):
+    return X[:, :2], [X[:, 2:4], X[:, 4:]]
+
+
+# ---------------------------------------------------------------------------
+# bit-identity of the packed engine vs the legacy loop
+# ---------------------------------------------------------------------------
+
+def test_packed_bit_identical_binary_multihost():
+    X, y = _data()
+    Xg, Xh = _split(X)
+    fed = VerticalBoosting(SBTParams(n_trees=4, max_depth=3,
+                                     n_bins=16)).fit(Xg, y, Xh)
+    Xn, _ = _data(n=237, seed=3)           # fresh rows, n % 8 != 0
+    Xng, Xnh = _split(Xn)
+    np.testing.assert_array_equal(
+        fed.predict_score(Xng, Xnh),
+        fed.predict_score(Xng, Xnh, packed=False))
+    # train rows too, and through the local (zero-host) baseline
+    np.testing.assert_array_equal(fed.predict_score(Xg, Xh),
+                                  fed.predict_score(Xg, Xh, packed=False))
+    loc = LocalGBDT(SBTParams(n_trees=3, max_depth=3, n_bins=16)).fit(X, y)
+    np.testing.assert_array_equal(loc.predict_score(X),
+                                  loc.predict_score(X, packed=False))
+
+
+@pytest.mark.parametrize("objective", ["multiclass", "mo"])
+def test_packed_bit_identical_multiclass_and_mo(objective):
+    X, _ = _data(n=450)
+    y = _multi_labels(X)
+    m = VerticalBoosting(SBTParams(n_trees=3, max_depth=3,
+                                   objective=objective, n_classes=3)).fit(
+        X[:, :3], y, [X[:, 3:]])
+    Xn, _ = _data(n=201, seed=5)
+    np.testing.assert_array_equal(
+        m.predict_score(Xn[:, :3], [Xn[:, 3:]]),
+        m.predict_score(Xn[:, :3], [Xn[:, 3:]], packed=False))
+
+
+@pytest.mark.parametrize("kw", [dict(tree_mode="mix"),
+                                dict(tree_mode="layered", host_depth=2),
+                                dict(goss=True, seed=1),
+                                dict(sparse=True),
+                                dict(cipher="affine", key_bits=256,
+                                     precision=20)])
+def test_packed_bit_identical_modes_and_ciphers(kw):
+    """Mode/cipher coverage: trees with empty host tables (mix), guest-only
+    depths (layered), GOSS row subsets, sparse binning, affine training."""
+    X, y = _data(n=350, seed=2)
+    m = VerticalBoosting(SBTParams(n_trees=4, max_depth=3, n_bins=16,
+                                   **kw)).fit(X[:, :3], y, [X[:, 3:]])
+    np.testing.assert_array_equal(
+        m.predict_score(X[:, :3], [X[:, 3:]]),
+        m.predict_score(X[:, :3], [X[:, 3:]], packed=False))
+
+
+# ---------------------------------------------------------------------------
+# wire protocol: exactly one round-trip per host per batch
+# ---------------------------------------------------------------------------
+
+def test_one_roundtrip_per_host_per_batch():
+    X, y = _data()
+    Xg, Xh = _split(X)
+    fed = VerticalBoosting(SBTParams(n_trees=3, max_depth=3,
+                                     n_bins=16)).fit(Xg, y, Xh)
+    base_rt = fed.stats.n_predict_roundtrips
+    ens = PackedEnsemble.from_model(fed)
+    pred = FederatedPredictor(ens.guest, ens.hosts)   # fresh ledgers
+    n = 203
+    Xn, _ = _data(n=n, seed=7)
+    Xng, Xnh = _split(Xn)
+    pred.predict_score(Xng, Xnh)
+    s = pred.channel.summary()
+    # one predict_req + one predict_bits per host, per batch — regardless
+    # of tree count, depth, or frontier shape
+    assert s["predict_req"]["msgs"] == 2
+    assert s["predict_bits"]["msgs"] == 2
+    assert pred.stats.n_predict_roundtrips == 2
+    assert pred.stats.n_predict_batches == 1
+    # analytic payload: 1 bit per owned internal node per instance
+    k_hosts = [int(k) for k in ens.guest.k_parties[1:]]
+    assert s["predict_bits"]["bytes"] == sum(k * ((n + 7) // 8)
+                                             for k in k_hosts)
+    assert s["predict_req"]["bytes"] == 2 * n * 4
+    pred.predict_score(Xng, Xnh)                      # second batch
+    assert pred.channel.summary()["predict_bits"]["msgs"] == 4
+    assert pred.stats.n_predict_roundtrips == 4
+    # wrong party count must refuse loudly, not mis-route silently
+    with pytest.raises(ValueError, match="host matrices"):
+        pred.predict_score(Xng, Xnh[:1])
+    with pytest.raises(ValueError, match="host matrices"):
+        pred.predict_score_binned(np.zeros((8, 2), np.int32),
+                                  [np.zeros((8, 2), np.int32)])
+    # a guest half whose split slice disagrees with k_parties is corrupt
+    import dataclasses
+    bad = dataclasses.replace(
+        ens.guest, guest=dataclasses.replace(
+            ens.guest.guest, fid=ens.guest.guest.fid[:-1],
+            bid=ens.guest.guest.bid[:-1]))
+    with pytest.raises(ValueError, match="guest split table"):
+        FederatedPredictor(bad, ens.hosts)
+    # the model-attached engine tallies into the model's own ledgers
+    assert fed.stats.n_predict_roundtrips == base_rt
+    fed.predict_score(Xng, Xnh)
+    assert fed.stats.n_predict_roundtrips == base_rt + 2
+    assert "predict_bits" in fed.channel.summary()
+
+
+# ---------------------------------------------------------------------------
+# export -> import round-trip
+# ---------------------------------------------------------------------------
+
+def _assert_roundtrip(model, out_dir, Xg, Xh):
+    export_model(model, out_dir)
+    ens = load_ensemble(out_dir)
+    pred = FederatedPredictor(ens.guest, ens.hosts)
+    np.testing.assert_array_equal(
+        pred.predict_score(Xg, Xh),
+        model.predict_score(Xg, Xh, packed=False))
+    return ens
+
+
+@pytest.mark.parametrize("objective,cipher",
+                         [("binary", "plain"), ("binary", "affine"),
+                          ("multiclass", "plain"), ("mo", "affine")])
+def test_export_import_roundtrip(tmp_path, objective, cipher):
+    """Guest/host halves saved separately, reloaded, and served —
+    bit-identical to predict_tree, for plain and affine-trained models."""
+    X, yb = _data(n=350, seed=4)
+    y = yb if objective == "binary" else _multi_labels(X, seed=4)
+    kw = dict(cipher=cipher)
+    if cipher == "affine":
+        kw.update(key_bits=256, precision=20)
+    if objective != "binary":
+        kw.update(n_classes=3)
+    m = VerticalBoosting(SBTParams(n_trees=3, max_depth=3, n_bins=16,
+                                   objective=objective, **kw)).fit(
+        X[:, :3], y, [X[:, 3:]])
+    out = str(tmp_path / "model")
+    ens = _assert_roundtrip(m, out, X[:, :3], [X[:, 3:]])
+    # halves live in separate per-party dirs; the host dir carries ONLY
+    # its split table + binning — no tree structure, no leaf weights
+    assert sorted(os.listdir(out)) == ["guest", "host0"]
+    with np.load(os.path.join(out, "host0", "arrays.npz")) as z:
+        assert sorted(z.files) == ["bid", "fid", "thresholds"]
+    assert ens.hosts[0].table.k == int(ens.guest.k_parties[1])
+
+
+def test_export_is_atomic_and_overwrites(tmp_path):
+    X, y = _data(n=250, seed=6)
+    m = VerticalBoosting(SBTParams(n_trees=2, max_depth=2, n_bins=8)).fit(
+        X[:, :3], y, [X[:, 3:]])
+    out = str(tmp_path / "model")
+    export_model(m, out)
+    first = load_guest(os.path.join(out, "guest"))
+    export_model(m, out)                    # overwrite publishes atomically
+    again = load_guest(os.path.join(out, "guest"))
+    np.testing.assert_array_equal(first.step, again.step)
+    assert not os.path.exists(out + ".tmp-export")
+    assert not os.path.exists(out + ".stale-export")
+
+
+def test_corrupted_manifest_raises(tmp_path):
+    X, y = _data(n=250, seed=6)
+    m = VerticalBoosting(SBTParams(n_trees=2, max_depth=2, n_bins=8)).fit(
+        X[:, :3], y, [X[:, 3:]])
+    out = str(tmp_path / "model")
+    export_model(m, out)
+    gman = os.path.join(out, "guest", "manifest.json")
+    # truncated JSON
+    with open(gman) as f:
+        good = f.read()
+    with open(gman, "w") as f:
+        f.write(good[: len(good) // 2])
+    with pytest.raises(ValueError, match="corrupt"):
+        load_guest(os.path.join(out, "guest"))
+    # wrong role
+    man = json.loads(good)
+    man["role"] = "host"
+    with open(gman, "w") as f:
+        json.dump(man, f)
+    with pytest.raises(ValueError, match="role"):
+        load_guest(os.path.join(out, "guest"))
+    # shape mismatch between manifest and arrays
+    man = json.loads(good)
+    man["arrays"]["step"]["shape"] = [1, 2]
+    with open(gman, "w") as f:
+        json.dump(man, f)
+    with pytest.raises(ValueError, match="shape"):
+        load_guest(os.path.join(out, "guest"))
+    # missing array metadata
+    man = json.loads(good)
+    del man["arrays"]["roots"]
+    with open(gman, "w") as f:
+        json.dump(man, f)
+    with pytest.raises(ValueError, match="missing array"):
+        load_guest(os.path.join(out, "guest"))
+    # host manifest with bad format marker
+    hman = os.path.join(out, "host0", "manifest.json")
+    with open(hman) as f:
+        h = json.load(f)
+    h["format"] = "something-else"
+    with open(hman, "w") as f:
+        json.dump(h, f)
+    with pytest.raises(ValueError, match="format"):
+        load_host(os.path.join(out, "host0"))
+    # dtype swap with identical shape must not mis-serve silently
+    with open(gman, "w") as f:
+        f.write(good)
+    az = os.path.join(out, "guest", "arrays.npz")
+    with np.load(az) as z:
+        arrays = {k: z[k] for k in z.files}
+    arrays["leaf_w"] = arrays["leaf_w"].astype(np.float32)
+    np.savez_compressed(az, **arrays)
+    with pytest.raises(ValueError, match="dtype"):
+        load_guest(os.path.join(out, "guest"))
+    # truncated npz surfaces as ValueError, not zipfile.BadZipFile
+    with open(az, "rb") as f:
+        raw = f.read()
+    with open(az, "wb") as f:
+        f.write(raw[: len(raw) // 2])
+    with pytest.raises(ValueError, match="corrupt serving arrays"):
+        load_guest(os.path.join(out, "guest"))
+
+
+# ---------------------------------------------------------------------------
+# no row-level training state on models / exports
+# ---------------------------------------------------------------------------
+
+def test_no_row_level_training_state(tmp_path):
+    n_train = 389                           # prime-ish: can't alias a node
+    X, y = _data(n=n_train, seed=8)         # or feature dimension
+    m = VerticalBoosting(SBTParams(n_trees=3, max_depth=3, n_bins=16)).fit(
+        X[:, :3], y, [X[:, 3:]])
+    # the grower returns leaf_rows to the driver; trees never carry it
+    assert all(not hasattr(t, "leaf_rows") for t in m.trees)
+    out = str(tmp_path / "model")
+    export_model(m, out)
+    for party in sorted(os.listdir(out)):
+        with np.load(os.path.join(out, party, "arrays.npz")) as z:
+            for name in z.files:
+                assert n_train not in z[name].shape, \
+                    f"{party}/{name} has a training-row-sized axis"
+    # packing a tree that somehow kept row state must refuse
+    m.trees[0].leaf_rows = {0: np.arange(n_train)}
+    with pytest.raises(AssertionError, match="row-level"):
+        PackedEnsemble.from_model(m)
+
+
+# ---------------------------------------------------------------------------
+# device-resident threshold cache (binning satellite)
+# ---------------------------------------------------------------------------
+
+def test_thresholds_cached_on_device():
+    X, _ = _data(n=300, seed=9)
+    data = bin_features(X, 16)
+    thr1 = data.device_thresholds()
+    thr2 = data.device_thresholds()
+    assert thr1 is thr2                     # uploaded once, reused
+    assert isinstance(thr1, jax.Array)
+    Xn, _ = _data(n=123, seed=10)
+    b1 = apply_binning(Xn, data)
+    b2 = apply_binning(Xn, data, use_pallas=False)
+    np.testing.assert_array_equal(b1, b2)
+    # fresh binning (no cache) agrees
+    np.testing.assert_array_equal(
+        b1, np.asarray(
+            __import__("repro.kernels.binning", fromlist=["bucketize"])
+            .bucketize(Xn, data.thresholds)).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded serving (multi-device only)
+# ---------------------------------------------------------------------------
+
+@multi_device
+def test_mesh_serving_bit_identical():
+    """Acceptance: packed serving on the forced multi-device CPU mesh is
+    bit-identical to single-device serving and to predict_tree, for binary
+    and multiclass models (rows shard over "data"; no collective)."""
+    from repro.launch.mesh import make_gbdt_mesh
+    mesh = make_gbdt_mesh()
+    X, y = _data(n=437, seed=11)            # non-divisible row count
+    for objective in ("binary", "multiclass"):
+        yy = y if objective == "binary" else _multi_labels(X, seed=11)
+        kw = {} if objective == "binary" else dict(n_classes=3)
+        m = VerticalBoosting(SBTParams(n_trees=3, max_depth=4, n_bins=16,
+                                       objective=objective, mesh=mesh,
+                                       **kw)).fit(X[:, :3], yy, [X[:, 3:]])
+        legacy = m.predict_score(X[:, :3], [X[:, 3:]], packed=False)
+        meshed = m.predict_score(X[:, :3], [X[:, 3:]])
+        ens = PackedEnsemble.from_model(m)
+        onedev = FederatedPredictor(ens.guest, ens.hosts).predict_score(
+            X[:, :3], [X[:, 3:]])
+        np.testing.assert_array_equal(meshed, legacy)
+        np.testing.assert_array_equal(onedev, legacy)
