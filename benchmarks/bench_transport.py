@@ -1,0 +1,113 @@
+"""Multi-host transport benchmark (DESIGN.md §10): socket-vs-ledger bytes
+and round-trip latency for one training round and one serving batch.
+
+Runs the forced-2-process runtime (guest here, one host spawned over the
+length-prefixed localhost socket) and reports, per phase:
+
+* ``ledger_bytes``  — the analytic protocol-fidelity wire model the paper's
+  cost equations (10/16) read,
+* ``socket_bytes``  — framed bytes that actually crossed the transport
+  (tx + rx, headers and the int32 in-memory limb layout included),
+* ``overhead_x``    — socket / ledger (the serialization-fidelity gap),
+* ``rt_ms``         — median control-frame round-trip latency,
+* ``bit_identical`` — vs the in-process Channel oracle.
+
+Falls back to the in-memory loopback transport (identical framing and
+byte accounting, no sockets) where process spawning is unavailable; the
+``mode`` field says which ran.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from .common import emit, timed
+
+from repro.core import SBTParams, VerticalBoosting
+from repro.data import synthetic_tabular
+from repro.runtime.transport import MultiHostRun
+
+SHAPE = dict(n=4096, d=12, n_bins=16, max_depth=4)
+
+
+def _phase_bytes(channel, tags) -> tuple:
+    ledger = sum(channel.totals[t] for t in tags)
+    sock = sum(channel.tx_bytes[t] + channel.rx_bytes[t] for t in tags)
+    return ledger, sock
+
+
+def main(quick: bool = False):
+    s = SHAPE
+    n = 1024 if quick else s["n"]
+    X, y = synthetic_tabular(n, s["d"], seed=0, task="binary")
+    Xg, Xh = X[:, :4], X[:, 4:]
+    params = SBTParams(n_trees=1, max_depth=s["max_depth"],
+                       n_bins=s["n_bins"], cipher="affine", key_bits=256,
+                       precision=20, seed=1)
+
+    ref = VerticalBoosting(params).fit(Xg, y, [Xh])
+
+    rows = []
+    run = None
+    try:
+        try:
+            run = MultiHostRun(params, [Xh], transport="socket",
+                               export_dir=tempfile.mkdtemp(), timeout=300.0)
+            mode = "socket"
+        except Exception:                        # noqa: BLE001
+            run = MultiHostRun(params, [Xh], transport="loopback",
+                               export_dir=tempfile.mkdtemp())
+            mode = "loopback"
+
+        # -- one training round (1 tree) over the transport -------------
+        model, t_fit = timed(lambda: run.fit(Xg, y))
+        train_tags = ("enc_gh", "assign_sync", "split_infos", "chosen_sid",
+                      "assign_mask")
+        ledger, sock = _phase_bytes(run.channel, train_tags)
+        ident = bool(np.array_equal(model.train_score_, ref.train_score_))
+        pings = sorted(run.ping() for _ in range(5))
+        rt_ms = pings[len(pings) // 2] * 1e3
+        rows.append((
+            "transport/train_round",
+            t_fit * 1e6,
+            f"mode={mode};ledger_bytes={ledger};socket_bytes={sock};"
+            f"overhead_x={sock / max(ledger, 1):.2f};rt_ms={rt_ms:.3f};"
+            f"roundtrips={model.stats.n_split_roundtrips};"
+            f"bit_identical={ident}"))
+
+        # -- one serving batch from reloaded per-party exports -----------
+        run.serve()
+        ref.predict_score(Xg, [Xh])              # warm the oracle's jits
+        base = dict(run.channel.totals)
+        base_tx = dict(run.channel.tx_bytes)
+        base_rx = dict(run.channel.rx_bytes)
+        t0 = time.perf_counter()
+        score = run.predict_score(Xg, staged=True)
+        t_serve = time.perf_counter() - t0
+        serve_tags = ("predict_req", "predict_bits")
+        ledger = sum(run.channel.totals[t] - base.get(t, 0)
+                     for t in serve_tags)
+        sock = sum(run.channel.tx_bytes[t] - base_tx.get(t, 0)
+                   + run.channel.rx_bytes[t] - base_rx.get(t, 0)
+                   for t in serve_tags)
+        s_ref = ref.predict_score(Xg, [Xh])
+        rows.append((
+            "transport/serve_batch",
+            t_serve * 1e6,
+            f"mode={mode};rows={n};ledger_bytes={ledger};"
+            f"socket_bytes={sock};overhead_x={sock / max(ledger, 1):.2f};"
+            f"batch_ms={t_serve * 1e3:.1f};"
+            f"bit_identical={bool(np.array_equal(score, s_ref))}"))
+    finally:
+        if run is not None:
+            run.close()
+
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,7 @@ BENCHES = {
     "cost_model": "benchmarks.bench_cost_model",
     "kernels": "benchmarks.bench_kernels",
     "serving": "benchmarks.bench_serving",
+    "transport": "benchmarks.bench_transport",
 }
 
 

@@ -32,14 +32,39 @@ def _leaf_name(path) -> str:
     return "__".join(keys) or "leaf"
 
 
+def _leaf_names(paths) -> list:
+    """Filenames for a flattened pytree, deterministically de-collided.
+
+    Joining path keys with ``__`` is not injective (a dict key containing
+    ``__`` vs. genuinely nested keys): two distinct leaves could map to the
+    same .npz and silently overwrite each other — ``restore`` then returned
+    the wrong array for one of them.  Suffix repeats with ``#k``, feeding
+    chosen names back into the seen-set so a suffixed name can never
+    collide with a genuine leaf named ``...#k`` either; both ``save`` and
+    ``restore`` flatten in the same (sorted-key) order, so the mapping
+    stays stable without storing extra state."""
+    seen: set = set()
+    out = []
+    for path in paths:
+        name = _leaf_name(path)
+        k = 0
+        final = name
+        while final in seen:
+            k += 1
+            final = f"{name}#{k}"
+        seen.add(final)
+        out.append(final)
+    return out
+
+
 def save(ckpt_dir: str, step: int, tree) -> str:
     tmp = ckpt_dir + f".tmp-{step}"
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     os.makedirs(tmp, exist_ok=True)
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     manifest = {"step": step, "leaves": []}
-    for path, leaf in leaves:
-        name = _leaf_name(path)
+    names = _leaf_names([p for p, _ in leaves])
+    for name, (path, leaf) in zip(names, leaves):
         arr = np.asarray(jax.device_get(leaf))
         # npz can't hold ml_dtypes (bf16 etc.); store raw bytes + dtype str
         raw = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
@@ -81,9 +106,9 @@ def restore(ckpt_dir: str, step: int, like, shardings=None):
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
                     else [None] * len(paths))
+    names = _leaf_names([p for p, _ in paths])
     out = []
-    for (path, leaf), sh in zip(paths, shard_leaves):
-        name = _leaf_name(path)
+    for name, (path, leaf), sh in zip(names, paths, shard_leaves):
         if name not in by_name:
             raise KeyError(f"checkpoint missing leaf {name}")
         meta = by_name[name]

@@ -65,6 +65,15 @@ class SBTParams:
                                        # node axis over "model" (DESIGN §5/§7)
 
 
+def cipher_kwargs(params: SBTParams) -> dict:
+    """Cipher-construction kwargs from run params — the SINGLE definition
+    shared by the guest driver and the multi-host PartyProcess, so the
+    two sides can never silently diverge on key parameters."""
+    if params.cipher == "plain":
+        return {"bits": max(params.key_bits, 256)}
+    return {"key_bits": params.key_bits, "seed": params.seed}
+
+
 class VerticalBoosting:
     def __init__(self, params: SBTParams):
         self.params = params
@@ -76,14 +85,26 @@ class VerticalBoosting:
         self._loss = None
         self._predictor = None            # cached packed serving engine
         self._predictor_n_trees = -1
+        # multi-host mode (runtime/transport.py): handles to host parties
+        # living in their own OS processes.  When set, ``fit`` is called
+        # with X_hosts=[] — host features never enter this process — and
+        # every cross-party message flows through the transport channel.
+        self.remote_hosts: list | None = None
 
     # ------------------------------------------------------------------
     def fit(self, X_guest: np.ndarray, y: np.ndarray,
             X_hosts: list[np.ndarray]):
         p = self.params
+        # a refit is a fresh model: without these resets a second fit()
+        # appended n_trees more trees whose (fid, bid) splits were decoded
+        # against the NEW fit's binning thresholds — silently wrong
+        # scores — and stats/ledger accumulated across fits
+        self.trees = []
+        self.tree_class = []
+        self.stats = Stats()
+        self.channel.reset_accounting()
         self._predictor = None            # stale after refit
         self._predictor_n_trees = -1
-        rng = np.random.default_rng(p.seed)
         self.guest_data = bin_features(X_guest, p.n_bins, sparse=p.sparse,
                                        use_pallas=p.use_pallas)
         self.host_data = [bin_features(Xh, p.n_bins, sparse=p.sparse,
@@ -104,7 +125,8 @@ class VerticalBoosting:
         cipher = get_cipher(p.cipher, **self._cipher_kwargs())
         self.cipher = cipher
 
-        n_parties = 1 + len(X_hosts)
+        n_parties = 1 + (len(self.remote_hosts)
+                         if self.remote_hosts is not None else len(X_hosts))
         for t in range(p.n_trees):
             t0 = time.perf_counter()
             if p.objective == "multiclass":
@@ -115,7 +137,7 @@ class VerticalBoosting:
                 g, h = self._loss.grad_hess(y, score)
                 for c in range(p.n_classes):
                     tree, leaf_rows = self._grow(
-                        cipher, g[:, c], h[:, c], t, rng,
+                        cipher, g[:, c], h[:, c], t,
                         mix_party=self._mix_party(t, n_parties))
                     self.trees.append(tree)
                     self.tree_class.append(c)
@@ -123,7 +145,7 @@ class VerticalBoosting:
             else:
                 g, h = self._loss.grad_hess(y, score)
                 tree, leaf_rows = self._grow(
-                    cipher, g, h, t, rng,
+                    cipher, g, h, t,
                     mix_party=self._mix_party(t, n_parties))
                 self.trees.append(tree)
                 self.tree_class.append(-1)
@@ -133,12 +155,7 @@ class VerticalBoosting:
         return self
 
     def _cipher_kwargs(self):
-        p = self.params
-        if p.cipher == "plain":
-            return {"bits": max(p.key_bits, 256)}
-        if p.cipher == "affine":
-            return {"key_bits": p.key_bits, "seed": p.seed}
-        return {"key_bits": p.key_bits, "seed": p.seed}
+        return cipher_kwargs(self.params)
 
     def _mix_party(self, t: int, n_parties: int):
         if self.params.tree_mode != "mix":
@@ -147,13 +164,16 @@ class VerticalBoosting:
         return cycle % n_parties        # 0 = guest, 1.. = host id + 1
 
     # ------------------------------------------------------------------
-    def _grow(self, cipher, g, h, t: int, rng, mix_party=None) -> tuple:
+    def _grow(self, cipher, g, h, t: int, mix_party=None) -> tuple:
         p = self.params
         n = g.shape[0]
         if p.goss:
-            # dedicated per-tree stream: host split-info shuffling must not
-            # perturb GOSS sampling, or federated != local under GOSS
-            goss_rng = np.random.default_rng((p.seed, t, 17))
+            # dedicated per-tree stream keyed by the GLOBAL tree counter:
+            # host split-info shuffling must not perturb GOSS sampling (or
+            # federated != local under GOSS), and a per-round key would
+            # hand every class tree of a multiclass round the identical
+            # subsample of the rest set
+            goss_rng = np.random.default_rng((p.seed, len(self.trees), 17))
             sel, w = goss_sample(g, p.top_rate, p.other_rate, goss_rng)
             g = g.copy(); h = h.copy()
             if g.ndim == 1:
@@ -164,16 +184,19 @@ class VerticalBoosting:
             sel = np.arange(n)
 
         codec = self._make_codec(cipher, g[sel], h[sel])
-        engines = [CipherHistogram(cipher, p.n_bins, sparse=p.sparse,
-                                   use_pallas=p.use_pallas, stats=self.stats,
-                                   mesh=p.mesh)
-                   for _ in self.host_data]
-        hosts = [HostRuntime(hid=i, data=d, engine=e)
-                 for i, (d, e) in enumerate(zip(self.host_data, engines))]
+        if self.remote_hosts is not None:
+            hosts = self.remote_hosts   # one party per process (transport)
+        else:
+            engines = [CipherHistogram(cipher, p.n_bins, sparse=p.sparse,
+                                       use_pallas=p.use_pallas,
+                                       stats=self.stats, mesh=p.mesh)
+                       for _ in self.host_data]
+            hosts = [HostRuntime(hid=i, data=d, engine=e)
+                     for i, (d, e) in enumerate(zip(self.host_data, engines))]
         ctx = TreeContext(params=p, cipher=cipher, codec=codec,
                           channel=self.channel, stats=self.stats,
                           guest_data=self.guest_data, g=g, h=h, sel_rows=sel,
-                          hosts=hosts, rng=rng)
+                          hosts=hosts, tree_idx=len(self.trees))
         schedule = self._schedule(mix_party, len(hosts))
         return grow_tree(ctx, schedule)
 
@@ -238,6 +261,11 @@ class VerticalBoosting:
         as the slow oracle (tests, benchmarks)."""
         if packed and self.trees:
             return self._serving_predictor().predict_score(X_guest, X_hosts)
+        if self.remote_hosts is not None:
+            raise ValueError(
+                "host split tables live in remote processes: the "
+                "predict_tree oracle cannot run here — serve through "
+                "MultiHostRun.predict_score (per-party exports)")
         from .binning import apply_binning
         p = self.params
         gb = apply_binning(X_guest, self.guest_data, p.use_pallas)

@@ -65,6 +65,24 @@ class Stats:
         d["layer_overlap"] = list(self.layer_overlap)
         return d
 
+    # gauge fields are maxima, not counters: merging across parties must
+    # take the max or a 2-host run would report 3x the real peak
+    _GAUGES = ("peak_hist_cache", "peak_frontier")
+
+    def merge_counts(self, other: dict) -> None:
+        """Fold another party's ``as_dict()`` into this one: numeric
+        counters add, gauges max, per-tree/per-layer lists concatenate.
+        Under the multi-host runtime each process tallies its own side of
+        the work; merging reconstructs the single shared-Stats view of an
+        in-process run (``MultiHostRun.merged_stats``)."""
+        for key, val in other.items():
+            cur = getattr(self, key, None)
+            if isinstance(cur, list):
+                cur.extend(val)
+            elif isinstance(cur, (int, float)) and not isinstance(cur, bool):
+                merged = max(cur, val) if key in self._GAUGES else cur + val
+                setattr(self, key, type(cur)(merged))
+
     @property
     def overlap_fraction(self) -> float:
         """Mean per-layer fraction of candidate wall time spent in the
@@ -100,6 +118,17 @@ class Channel:
         self.coll_ledger.append((party, kind, int(nbytes)))
         self.coll_totals[kind] += int(nbytes)
         self.coll_msgs[kind] += 1
+
+    def reset_accounting(self) -> None:
+        """Zero every ledger/counter.  A long-lived channel (the
+        multi-host transport) spans model lifetimes; per-fit accounting
+        needs a clean slate or refits double-count."""
+        self.ledger.clear()
+        self.totals.clear()
+        self.msgs.clear()
+        self.coll_ledger.clear()
+        self.coll_totals.clear()
+        self.coll_msgs.clear()
 
     @property
     def total_bytes(self) -> int:

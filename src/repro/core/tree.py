@@ -30,6 +30,18 @@ a lazy-limb psum over instance shards -- bit-identical to one device.
 Party boundaries are explicit: everything that crosses guest<->host goes
 through ``ctx.channel.send`` with wire-fidelity byte counts, and HE work is
 tallied in ``ctx.stats``.
+
+Host-side protocol logic lives in :class:`HostRuntime` (DESIGN.md §10):
+every guest->host message is a *serializable* payload (numpy/limb tensors,
+ints, small dicts — never live Python objects), handled by
+``HostRuntime.deliver(tag, payload)``, and every host->guest reply is
+emitted through ``channel.send`` and picked up with ``collect(tag)``.  The
+grower only talks to hosts through this tagged-message surface, so the same
+code runs in-process (``HostRuntime`` is the handle, the shared
+:class:`Channel` is the ledger) or one-party-per-OS-process
+(``runtime/transport.py`` ships the identical payloads over a
+length-prefixed socket and the handle becomes a ``RemoteHostHandle``) —
+bit-identically, with identical per-tag ledgers.
 """
 
 from __future__ import annotations
@@ -187,15 +199,200 @@ class FederatedTree:
 
 @dataclasses.dataclass
 class HostRuntime:
+    """One host party: private data + the host side of the protocol.
+
+    In-process, the instance doubles as the guest's handle — ``deliver``
+    runs the handler synchronously and ``collect`` pops the reply the
+    handler emitted.  Under ``runtime/transport.py`` the same instance runs
+    inside the host's own OS process, driven by decoded socket frames, and
+    the guest holds a ``RemoteHostHandle`` with the identical
+    deliver/collect surface.  All handler inputs and all replies are
+    serializable (numpy/limb tensors + plain python), never shared live
+    objects.
+    """
+
     hid: int
     data: BinnedData
-    engine: CipherHistogram
+    engine: object               # CipherHistogram (fresh per tree)
     cts: object = None           # (n_sel, n_slots, L) limbs / (n_sel, n_slots) obj
     frontier: CipherFrontier | None = None   # device-resident layer state:
                                      # the GOSS-selected view + padded cts +
                                      # parent-histogram cache (DESIGN.md §7)
     perms: dict = dataclasses.field(default_factory=dict)
     table: dict = dataclasses.field(default_factory=dict)
+    params: object = None        # wired by bind()
+    cipher: object = None
+    channel: Channel | None = None
+    stats: Stats | None = None
+    codec: object = None         # packing view from the enc_gh payload
+    shuffle_rng: object = None   # host-PRIVATE split-id shuffle stream
+    _outbox: dict = dataclasses.field(default_factory=dict)
+
+    # -- wiring ---------------------------------------------------------
+    def bind(self, params, cipher, channel, stats) -> None:
+        """Attach the run context.  In-process these are the guest's own
+        objects (one shared ledger/stats, as always); in a PartyProcess
+        they are the host's private instances."""
+        self.params, self.cipher = params, cipher
+        self.channel, self.stats = channel, stats
+
+    def deliver(self, tag: str, payload) -> None:
+        {"enc_gh": self.begin_tree,
+         "assign_sync": self.on_assign_sync,
+         "chosen_sid": self.on_chosen_sid}[tag](payload)
+
+    def collect(self, tag: str):
+        """Pop the pending reply the last handler emitted for ``tag``."""
+        return self._outbox[tag].pop(0)
+
+    def _reply(self, tag: str, payload, nbytes: int) -> None:
+        self.channel.send(f"host{self.hid}", "guest", tag, payload, nbytes)
+        self._outbox.setdefault(tag, []).append(payload)
+
+    # -- handlers (Algorithm 5, host side) ------------------------------
+    def begin_tree(self, msg: dict) -> None:
+        """enc_gh: adopt the encrypted GH batch, restrict the binned view
+        to the synced selected ids so row positions align with the
+        ciphertext batch, and build the device-resident frontier."""
+        import types
+        self.codec = types.SimpleNamespace(**msg["codec"])
+        # host-private shuffle stream: deterministic per (seed, tree, hid)
+        # so an in-process run and a process-per-party run permute split
+        # ids identically without the stream ever crossing the wire
+        self.shuffle_rng = np.random.default_rng(
+            (int(msg["seed"]), 23, int(msg["tree"]), self.hid))
+        sel = np.asarray(msg["sel_rows"])
+        self.cts = msg["cts"]
+        self.perms = {}
+        self.table = {}
+        view = dataclasses.replace(
+            self.data, bins=self.data.bins[sel],
+            zero_mask=(self.data.zero_mask[sel]
+                       if self.data.zero_mask is not None else None))
+        self.frontier = CipherFrontier(self.engine, view, self.cts,
+                                       channel=self.channel,
+                                       party=f"host{self.hid}")
+        if self.stats is not None:
+            self.stats.n_cts_placements += self.frontier.n_cts_placements
+
+    def on_assign_sync(self, plan: dict) -> None:
+        """One layer, batched: one histogram accumulation, one
+        ``cipher.reduce``, one ciphertext cumsum, one shuffle/compress
+        pass, ONE ``split_infos`` reply.  On limb backends everything is
+        async dispatch — in-process the guest's plaintext histograms run
+        while this work is in flight; across processes the overlap is
+        physical."""
+        p = self.params
+        splittable = [int(nid) for nid in plan["splittable"]]
+
+        # prune the parent-histogram cache to exactly this layer's
+        # subtract parents — BEFORE the empty-layer return, so an
+        # all-leaf layer frees the previous layer's cache just like the
+        # guest-side eviction loop does: a remote host never sees that
+        # loop, the plan itself is its eviction schedule (in-process this
+        # is a no-op shadow of the guest's eviction)
+        if self.frontier is not None:
+            keep = ({int(par) for _, mode, par, _ in plan["modes"]
+                     if mode == "subtract"}
+                    if p.histogram_subtraction else set())
+            size = self.frontier.evict_except(keep)
+            # gauge, not counter (max-merged across parties): in-process
+            # the guest's end-of-layer measurement already dominates it
+            self.stats.peak_hist_cache = max(self.stats.peak_hist_cache,
+                                             size)
+        if not splittable:
+            return
+        codec, cipher = self.codec, self.cipher
+        engine = self.engine
+        node_of = np.asarray(plan["node_of"])
+        hist_mode = {int(nid): (mode, int(par), int(sib))
+                     for nid, mode, par, sib in plan["modes"]}
+        n_f, n_b = self.data.n_features, p.n_bins
+        n_slots = codec.n_slots
+
+        limb = cipher.backend == "limb"
+        if limb:
+            import jax.numpy as jnp
+
+        direct, subtract = _resolve_modes(splittable, hist_mode,
+                                          self.frontier,
+                                          p.histogram_subtraction)
+        node_rows = {nid: np.where(node_of == nid)[0] for nid in splittable}
+        hists = self.frontier.layer_histograms(node_rows, direct, subtract)
+        for nid in direct:
+            self.stats.n_hom_add += int(hists[nid][1].sum()) * n_slots
+        self.stats.n_hom_add += len(subtract) * n_f * n_b * n_slots
+
+        # batched cumsum over the node axis, then per-node shuffle + concat
+        # (histograms are already device arrays -- no host round-trip)
+        if limb:
+            stack = jnp.stack([hists[nid][0] for nid in splittable])
+        else:
+            stack = np.stack([hists[nid][0] for nid in splittable])
+        cum = engine.cumsum(stack)
+        self.stats.n_hom_add += len(splittable) * n_f * (n_b - 1) * n_slots
+
+        m = n_f * (n_b - 1)          # candidates per node (fixed)
+        fid_grid, bid_grid = np.meshgrid(np.arange(n_f), np.arange(n_b - 1),
+                                         indexing="ij")
+        real_sids = (fid_grid * n_b + bid_grid).reshape(-1)
+        flats, counts_l = [], []
+        for k, nid in enumerate(splittable):
+            # flatten to split infos, drop last bin (empty right side)
+            if limb:
+                flat = cum[k][:, : n_b - 1].reshape(m, n_slots, -1)
+            else:
+                flat = cum[k][:, : n_b - 1].reshape(m, n_slots)
+            fc = hists[nid][1].cumsum(axis=1)[:, : n_b - 1].reshape(-1)
+            # real sids use the same fid*n_b+bid encoding as decode_sid
+            perm = self.shuffle_rng.permutation(m)
+            self.perms[nid] = real_sids[perm]  # shuffled position -> real sid
+            if limb:
+                flat = flat[jnp.asarray(perm)]
+            else:
+                flat = flat[perm]
+            flats.append(flat)
+            counts_l.append(fc[perm])
+        self.stats.n_split_infos += m * len(splittable)
+        flat_all = (jnp.concatenate(flats, axis=0) if limb
+                    else np.concatenate(flats, axis=0))
+        counts_all = np.concatenate(counts_l)
+        M = m * len(splittable)
+
+        wire = ct_wire_bytes(cipher)
+        use_compress = (p.compression and codec.compressible
+                        and codec.eta_s > 1)
+        if use_compress:
+            eta = codec.eta_s
+            src = flat_all[:, 0, :] if limb else flat_all[:, 0]
+            pkgs, sizes = compress_mod.compress_batch(
+                cipher, src, eta, codec.b_slot)
+            n_pkgs = len(sizes)
+            self.stats.n_hom_scalar += int(np.sum(sizes - 1))
+            self.stats.n_hom_add += int(np.sum(sizes - 1))
+            payload = {"data": pkgs, "sizes": sizes, "counts": counts_all,
+                       "m": m}
+            nbytes = n_pkgs * wire + M * 8
+            self.stats.n_packages += n_pkgs
+        else:
+            payload = {"data": flat_all, "sizes": None, "counts": counts_all,
+                       "m": m}
+            nbytes = M * n_slots * wire + M * 8
+            self.stats.n_packages += M * n_slots
+        self._reply("split_infos", payload, nbytes)
+
+    def on_chosen_sid(self, msg: dict) -> None:
+        """The guest committed to one of this host's shuffled candidates:
+        resolve it against the private permutation, record the (fid, bid)
+        in the host-private table, and answer with the go-left bitmask
+        over the node's instance space."""
+        nid, sid = int(msg["nid"]), int(msg["sid"])
+        rows = np.asarray(msg["rows"])
+        real_sid = int(self.perms[nid][sid])
+        fid, bid = decode_sid(real_sid, self.params.n_bins)
+        self.table[nid] = (fid, bid)
+        go_left = self.data.bins[rows, fid] <= bid
+        self._reply("assign_mask", go_left, (len(go_left) + 7) // 8)
 
 
 @dataclasses.dataclass
@@ -210,8 +407,7 @@ class TreeContext:
     h: np.ndarray
     sel_rows: np.ndarray         # GOSS-selected row ids (into full set)
     hosts: list = dataclasses.field(default_factory=list)
-    rng: np.random.Generator = dataclasses.field(
-        default_factory=lambda: np.random.default_rng(0))
+    tree_idx: int = 0            # global tree counter (host shuffle seeds)
 
 
 def _crypto_mesh(params, cipher):
@@ -278,21 +474,17 @@ def _encrypt_all(ctx: TreeContext, g_sel: np.ndarray,
     ctx.stats.n_encrypt += n * s
     ctx.stats.encrypt_seconds += time.perf_counter() - t0
     nbytes = n * s * ct_wire_bytes(ctx.cipher) + n * 4   # + selected row ids
+    codec_view = {"n_slots": int(ctx.codec.n_slots),
+                  "compressible": bool(ctx.codec.compressible),
+                  "eta_s": int(getattr(ctx.codec, "eta_s", 0)),
+                  "b_slot": int(getattr(ctx.codec, "b_slot", 0))}
+    payload = {"tree": int(ctx.tree_idx), "seed": int(p.seed),
+               "sel_rows": ctx.sel_rows, "codec": codec_view, "cts": cts}
     for host in ctx.hosts:
-        host.cts = ctx.channel.send("guest", f"host{host.hid}", "enc_gh",
-                                    cts, nbytes)
-        # host restricts its binned matrix to the synced selected ids so row
-        # positions align with the ciphertext batch, then builds the
-        # device-resident frontier state for this tree (bins masked once;
-        # born-sharded ciphertexts are adopted without another placement)
-        view = dataclasses.replace(
-            host.data, bins=host.data.bins[ctx.sel_rows],
-            zero_mask=(host.data.zero_mask[ctx.sel_rows]
-                       if host.data.zero_mask is not None else None))
-        host.frontier = CipherFrontier(host.engine, view, host.cts,
-                                       channel=ctx.channel,
-                                       party=f"host{host.hid}")
-        ctx.stats.n_cts_placements += host.frontier.n_cts_placements
+        host.bind(ctx.params, ctx.cipher, ctx.channel, ctx.stats)
+        ctx.channel.send("guest", f"host{host.hid}", "enc_gh", payload,
+                         nbytes)
+        host.deliver("enc_gh", payload)
 
 
 def _resolve_modes(splittable: list, hist_mode: dict, cache,
@@ -320,106 +512,20 @@ def _resolve_modes(splittable: list, hist_mode: dict, cache,
     return direct, subtract
 
 
-def _host_layer_dispatch(ctx: TreeContext, host: HostRuntime,
-                         splittable: list, rows_sel: dict,
-                         hist_mode: dict) -> tuple:
-    """Host-side Algorithm 5, layer-batched: for ALL frontier nodes of one
-    layer, one histogram accumulation (single kernel launch), one
-    ``cipher.reduce``, one ciphertext-domain cumsum, one shuffle/compress
-    pass, and ONE ``split_infos`` message.  Everything here is *async
-    dispatch* on the limb backends — kernels and collectives enqueue
-    without blocking the python thread — so the caller can run the guest's
-    plaintext histograms while the cipher pipeline is in flight
-    (DESIGN.md §8) and only then call :func:`_host_layer_finish`.
-    Returns the pending (payload, use_compress, M, m) tuple."""
-    p = ctx.params
-    engine = host.engine
-    n_f, n_b = host.data.n_features, p.n_bins
-    n_slots = ctx.codec.n_slots
-
-    limb = ctx.cipher.backend == "limb"
-    if limb:
-        import jax.numpy as jnp
-
-    direct, subtract = _resolve_modes(splittable, hist_mode, host.frontier,
-                                      p.histogram_subtraction)
-    node_rows = {nid: rows_sel[nid] for nid in splittable}
-    hists = host.frontier.layer_histograms(node_rows, direct, subtract)
-    for nid in direct:
-        ctx.stats.n_hom_add += int(hists[nid][1].sum()) * n_slots
-    ctx.stats.n_hom_add += len(subtract) * n_f * n_b * n_slots
-
-    # batched cumsum over the node axis, then per-node shuffle + concat
-    # (histograms are already device arrays -- no host round-trip)
-    if limb:
-        stack = jnp.stack([hists[nid][0] for nid in splittable])
-    else:
-        stack = np.stack([hists[nid][0] for nid in splittable])
-    cum = engine.cumsum(stack)
-    ctx.stats.n_hom_add += len(splittable) * n_f * (n_b - 1) * n_slots
-
-    m = n_f * (n_b - 1)          # candidates per node (fixed)
-    fid_grid, bid_grid = np.meshgrid(np.arange(n_f), np.arange(n_b - 1),
-                                     indexing="ij")
-    real_sids = (fid_grid * n_b + bid_grid).reshape(-1)
-    flats, counts_l = [], []
-    for k, nid in enumerate(splittable):
-        # flatten to split infos, drop last bin (empty right side)
-        if limb:
-            flat = cum[k][:, : n_b - 1].reshape(m, n_slots, -1)
-        else:
-            flat = cum[k][:, : n_b - 1].reshape(m, n_slots)
-        fc = hists[nid][1].cumsum(axis=1)[:, : n_b - 1].reshape(-1)
-        # real sids use the same fid*n_b+bid encoding as decode_sid
-        perm = ctx.rng.permutation(m)
-        host.perms[nid] = real_sids[perm]  # shuffled position -> real sid
-        if limb:
-            flat = flat[jnp.asarray(perm)]
-        else:
-            flat = flat[perm]
-        flats.append(flat)
-        counts_l.append(fc[perm])
-    ctx.stats.n_split_infos += m * len(splittable)
-    flat_all = (jnp.concatenate(flats, axis=0) if limb
-                else np.concatenate(flats, axis=0))
-    counts_all = np.concatenate(counts_l)
-    M = m * len(splittable)
-
-    wire = ct_wire_bytes(ctx.cipher)
-    use_compress = (p.compression and ctx.codec.compressible
-                    and ctx.codec.eta_s > 1)
-    if use_compress:
-        eta = ctx.codec.eta_s
-        src = flat_all[:, 0, :] if limb else flat_all[:, 0]
-        pkgs, sizes = compress_mod.compress_batch(
-            ctx.cipher, src, eta, ctx.codec.b_slot)
-        n_pkgs = len(sizes)
-        ctx.stats.n_hom_scalar += int(np.sum(sizes - 1))
-        ctx.stats.n_hom_add += int(np.sum(sizes - 1))
-        payload = (pkgs, sizes, counts_all)
-        nbytes = n_pkgs * wire + M * 8
-        ctx.stats.n_packages += n_pkgs
-    else:
-        payload = (flat_all, None, counts_all)
-        nbytes = M * n_slots * wire + M * 8
-        ctx.stats.n_packages += M * n_slots
-    payload = ctx.channel.send(f"host{host.hid}", "guest", "split_infos",
-                               payload, nbytes)
-    ctx.stats.n_split_roundtrips += 1
-    return payload, use_compress, M, m
-
-
-def _host_layer_finish(ctx: TreeContext, host: HostRuntime,
-                       splittable: list, pending: tuple) -> dict:
+def _host_layer_finish(ctx: TreeContext, hid: int,
+                       splittable: list, pending: dict) -> dict:
     """Guest side of the layer batch: ONE batched decrypt + decode
-    (Algorithm 6) of the still-device-resident candidate stack dispatched
-    by :func:`_host_layer_dispatch`.  This is the blocking tail — the first
-    ``np.asarray`` synchronizes the whole in-flight cipher pipeline.
-    Returns {nid: SplitCandidates}."""
-    payload, use_compress, M, m = pending
+    (Algorithm 6) of the candidate stack a host answered ``assign_sync``
+    with (``HostRuntime.on_assign_sync``).  In-process the stack is still
+    device-resident and the first ``np.asarray`` synchronizes the whole
+    in-flight cipher pipeline; over the transport it arrives as a decoded
+    limb tensor.  Returns {nid: SplitCandidates}."""
     limb = ctx.cipher.backend == "limb"
     n_slots = ctx.codec.n_slots
-    data, sizes, cl = payload
+    data, sizes, cl = pending["data"], pending["sizes"], pending["counts"]
+    m = int(pending["m"])
+    M = m * len(splittable)
+    use_compress = sizes is not None
     if use_compress:
         plain = _decrypt_ints(ctx, data)
         ctx.stats.n_decrypt += len(plain)
@@ -439,7 +545,7 @@ def _host_layer_finish(ctx: TreeContext, host: HostRuntime,
     out = {}
     for k, nid in enumerate(splittable):
         sl = slice(k * m, (k + 1) * m)
-        out[nid] = SplitCandidates(party=host.hid, sid=np.arange(m),
+        out[nid] = SplitCandidates(party=hid, sid=np.arange(m),
                                    g_l=g_l[sl], h_l=h_l[sl], cnt_l=cl[sl])
     return out
 
@@ -551,9 +657,6 @@ def grow_tree(ctx: TreeContext,
             node_of = np.full(len(ctx.sel_rows), -1, np.int32)
             for nid in frontier:
                 node_of[rows_sel[nid]] = nid
-            for h in active_hosts:
-                ctx.channel.send("guest", f"host{h.hid}", "assign_sync",
-                                 node_of, node_of.size * 4)
 
         # triage: nodes too small to split become leaves immediately; the
         # rest form this layer's batch
@@ -567,27 +670,40 @@ def grow_tree(ctx: TreeContext,
             else:
                 splittable.append(nid)
 
-        # one candidate batch per party for the whole layer.  The host
-        # cipher pipelines are DISPATCHED first (jax async dispatch: the
-        # kernels and collectives enqueue without blocking), the guest's
-        # plaintext numpy histograms run while that work is in flight, and
-        # only then does the guest block on the batched decrypt — the two
-        # sides are independent until find_best_split (DESIGN.md §8).
+        # one candidate batch per party for the whole layer.  The layer
+        # plan (assignment vector + splittable batch + subtraction
+        # schedule) is ONE serializable assign_sync message per host; each
+        # host answers with ONE split_infos message.  In-process the
+        # deliver below runs the host pipeline as jax async dispatch; with
+        # remote hosts it is a no-op (the channel already shipped the
+        # plan) and every host process computes concurrently.  Either way
+        # the guest's plaintext numpy histograms run while the host cipher
+        # work is in flight, and only then does the guest block on the
+        # batched decrypt — the two sides are independent until
+        # find_best_split (DESIGN.md §8).
         guest_cands: dict = {}
         host_cands: dict = {}
+        t0 = time.perf_counter()
+        if active_hosts:
+            plan = {"node_of": node_of,
+                    "splittable": list(splittable),
+                    "modes": [(nid,) + tuple(hist_mode[nid])
+                              for nid in splittable]}
+            for h in active_hosts:
+                ctx.channel.send("guest", f"host{h.hid}", "assign_sync",
+                                 plan, node_of.size * 4)
+                h.deliver("assign_sync", plan)
         if splittable:
-            t0 = time.perf_counter()
-            pending = [(h, _host_layer_dispatch(ctx, h, splittable, rows_sel,
-                                                hist_mode))
-                       for h in active_hosts]
             t1 = time.perf_counter()
             if use_guest and ctx.guest_data.n_features > 0:
                 guest_cands = _guest_layer_candidates(
                     ctx, guest_frontier, splittable, rows_sel, hist_mode)
             t2 = time.perf_counter()
-            for h, pend in pending:
-                host_cands[h.hid] = _host_layer_finish(ctx, h, splittable,
-                                                       pend)
+            for h in active_hosts:
+                pend = h.collect("split_infos")
+                ctx.stats.n_split_roundtrips += 1
+                host_cands[h.hid] = _host_layer_finish(ctx, h.hid,
+                                                       splittable, pend)
             t3 = time.perf_counter()
             if active_hosts:
                 ctx.stats.host_dispatch_seconds += t1 - t0
@@ -628,16 +744,18 @@ def grow_tree(ctx: TreeContext,
                 go_left_sel = ctx.guest_data.bins[fsel, fid] <= bid
                 node.party, node.fid, node.bid = GUEST, fid, bid
             else:
+                # the chosen split id travels WITH the node's instance
+                # space (the host resolves its private (fid, bid) and
+                # answers one go-left bitmask over those rows); the
+                # selected-row mask is derived guest-side — fsel is always
+                # a subset of the ascending ra, so no second message
                 host = next(h for h in ctx.hosts if h.hid == best.party)
+                msg = {"nid": nid, "sid": best.sid, "rows": ra}
                 ctx.channel.send("guest", f"host{host.hid}", "chosen_sid",
-                                 (nid, best.sid), 8)
-                real_sid = int(host.perms[nid][best.sid])
-                fid, bid = decode_sid(real_sid, p.n_bins)
-                host.table[nid] = (fid, bid)
-                go_left = host.data.bins[ra, fid] <= bid
-                go_left_sel = host.data.bins[fsel, fid] <= bid
-                ctx.channel.send(f"host{host.hid}", "guest", "assign_mask",
-                                 go_left, (len(go_left) + 7) // 8)
+                                 msg, 8 + 4 * len(ra))
+                host.deliver("chosen_sid", msg)
+                go_left = np.asarray(host.collect("assign_mask"), bool)
+                go_left_sel = go_left[np.searchsorted(ra, fsel)]
                 node.party, node.sid = host.hid, best.sid
             node.gain = best.gain
 
@@ -665,7 +783,9 @@ def grow_tree(ctx: TreeContext,
                 if p.histogram_subtraction else set())
         sizes = [guest_frontier.evict_except(keep)]
         for h in ctx.hosts:
-            if h.frontier is not None:
+            # remote handles hold no frontier: their PartyProcess evicts
+            # against the same schedule when the next assign_sync arrives
+            if getattr(h, "frontier", None) is not None:
                 sizes.append(h.frontier.evict_except(keep))
         ctx.stats.peak_hist_cache = max(ctx.stats.peak_hist_cache,
                                         max(sizes))

@@ -1,2 +1,6 @@
 from .fault import (Heartbeat, ResilientLoop, StragglerError,  # noqa: F401
                     StragglerPolicy)
+from .transport import (LoopbackEndpoint, MultiHostRun,  # noqa: F401
+                        PartyProcess, RemoteHostHandle, RemoteServingHost,
+                        SocketEndpoint, TransportChannel, TransportError,
+                        decode_payload, encode_payload, host_main)

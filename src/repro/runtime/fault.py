@@ -90,7 +90,12 @@ class StragglerPolicy:
 
 class ResilientLoop:
     """step_fn(state, batch) -> state; save_fn(step, state); restore_fn()
-    -> (step, state).  Runs to n_steps surviving transient failures."""
+    -> (step, state).  Runs to n_steps surviving transient failures.
+
+    ``step_fn`` must treat ``state`` functionally (return a new state, as
+    jax pytree updates do): the no-checkpoint fallback replays from the
+    state object the caller passed in, which only equals the true initial
+    state if steps never mutated it in place."""
 
     def __init__(self, step_fn, save_fn, restore_fn, next_batch,
                  save_every: int = 100, max_retries: int = 3,
@@ -108,6 +113,8 @@ class ResilientLoop:
     def run(self, state, start_step: int, n_steps: int):
         step = start_step
         retries = 0
+        last_saved = None            # step of the newest checkpoint this run
+        initial = (start_step, state)
         while step < n_steps:
             try:
                 t0 = time.time()
@@ -117,6 +124,7 @@ class ResilientLoop:
                 retries = 0
                 if step % self.save_every == 0:
                     self.save_fn(step, state)
+                    last_saved = step
             except StragglerError:
                 self.save_fn(step, state)
                 raise
@@ -126,5 +134,33 @@ class ResilientLoop:
                 if retries > self.max_retries:
                     raise
                 time.sleep(self.backoff * (2 ** (retries - 1)))
-                step, state = self.restore_fn()
+                # a failure before the first save may have no checkpoint to
+                # restore: replay from the caller's initial (step, state)
+                # instead of crashing inside restore_fn.  ONLY a missing
+                # checkpoint qualifies — a present-but-corrupt one (or a
+                # transient I/O error) must surface, not silently restart
+                # training from scratch.
+                try:
+                    step, state = self.restore_fn()
+                except FileNotFoundError:
+                    if last_saved is not None:
+                        raise
+                    step, state = initial
+        # the tail n_steps % save_every steps used to be lost: a crash
+        # after run() returned replayed them from the last periodic save.
+        # (step > start_step: a zero-step invocation must stay I/O-free,
+        # not rewrite an existing checkpoint.)  The save gets the same
+        # transient-failure budget as a training step — a completed run
+        # must not abort on one flaky write — but ultimately raises:
+        # silently losing the final checkpoint is the bug being fixed
+        if last_saved != step and step > start_step:
+            for attempt in range(self.max_retries + 1):
+                try:
+                    self.save_fn(step, state)
+                    break
+                except Exception:                  # noqa: BLE001
+                    self.failures += 1
+                    if attempt == self.max_retries:
+                        raise
+                    time.sleep(self.backoff * (2 ** attempt))
         return step, state

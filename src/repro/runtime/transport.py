@@ -1,0 +1,930 @@
+"""Multi-host party runtime: a real transport behind the Channel contract
+(DESIGN.md §10).
+
+The whole protocol — training (per-layer ``assign_sync`` -> ``split_infos``
+-> batched decrypt, §8) and serving (one ``predict_bits`` round-trip per
+host per batch, §9) — already flows through tagged, serializable messages
+(``core/tree.py``, ``serving/engine.py``).  This module gives those
+messages a wire:
+
+* a **payload codec**: numpy/limb tensors, python-int object arrays
+  (Paillier ciphertexts), ints/floats/strs/bytes and nested
+  tuples/lists/dicts <-> length-prefixed binary.  No pickle anywhere on
+  the wire.
+* **framed endpoints**: a length-prefixed TCP socket transport and an
+  in-memory loopback with the identical framing (the loopback pumps the
+  peer inline — single-threaded, deterministic, still exercising the full
+  encode/decode path).
+* :class:`TransportChannel` — a :class:`~repro.core.party.Channel` whose
+  ``send`` *ships* outgoing frames and whose ``recv`` records incoming
+  ones, so each party's ledger converges to the same per-tag byte totals
+  as the in-process shared ledger (the oracle).  Actual framed socket
+  bytes are tallied separately (``tx_bytes``/``rx_bytes``) so the
+  analytic wire model (paper eqs 10/16) can be compared against what the
+  socket really moved.
+* :class:`PartyProcess` — hosts ONE party per OS process for both
+  training (drives the party's :class:`~repro.core.tree.HostRuntime`) and
+  serving (a :class:`~repro.serving.engine.PartyBits` evaluator built
+  from the host's own reloaded export half).
+* :class:`MultiHostRun` — guest-side orchestration: spawn host processes,
+  train over the sockets, export per-party halves, serve from the
+  reloaded halves.
+
+A forced-2-process run is bit-identical to the in-process ``Channel`` run
+with identical per-tag ledgers and round-trip counts (asserted in
+``tests/test_transport.py``).
+"""
+
+from __future__ import annotations
+
+import os
+import socket as _socket
+import struct
+import time
+from collections import Counter, deque
+
+import numpy as np
+
+from ..core.party import Channel, Stats
+
+KIND_PROTO = 0          # protocol message: enters the wire-byte ledger
+KIND_CTRL = 1           # runtime control (hello/serve_setup/stats/bye):
+                        # real socket traffic, never ledger bytes
+
+_U32 = struct.Struct("!I")
+_I64 = struct.Struct("!q")
+_F64 = struct.Struct("!d")
+
+
+class TransportError(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# payload codec (no pickle on the wire)
+# ---------------------------------------------------------------------------
+
+def _enc_str(out: bytearray, s: str) -> None:
+    b = s.encode("utf-8")
+    out += _U32.pack(len(b))
+    out += b
+
+
+def _enc_bigint(out: bytearray, x: int) -> None:
+    sign = 1 if x < 0 else 0
+    raw = abs(x).to_bytes((abs(x).bit_length() + 7) // 8 or 1, "big")
+    out += bytes([sign])
+    out += _U32.pack(len(raw))
+    out += raw
+
+
+def _encode(obj, out: bytearray) -> None:
+    if obj is None:
+        out += b"N"
+    elif isinstance(obj, (bool, np.bool_)):
+        out += (b"T" if obj else b"F")
+    elif isinstance(obj, (int, np.integer)):
+        x = int(obj)
+        if -(2 ** 63) <= x < 2 ** 63:
+            out += b"i"
+            out += _I64.pack(x)
+        else:
+            out += b"I"
+            _enc_bigint(out, x)
+    elif isinstance(obj, (float, np.floating)):
+        out += b"f"
+        out += _F64.pack(float(obj))
+    elif isinstance(obj, str):
+        out += b"s"
+        _enc_str(out, obj)
+    elif isinstance(obj, (bytes, bytearray)):
+        out += b"b"
+        out += _U32.pack(len(obj))
+        out += bytes(obj)
+    elif isinstance(obj, tuple):
+        out += b"u"
+        out += _U32.pack(len(obj))
+        for it in obj:
+            _encode(it, out)
+    elif isinstance(obj, list):
+        out += b"l"
+        out += _U32.pack(len(obj))
+        for it in obj:
+            _encode(it, out)
+    elif isinstance(obj, dict):
+        out += b"d"
+        out += _U32.pack(len(obj))
+        for k, v in obj.items():
+            _encode(k, out)
+            _encode(v, out)
+    else:
+        if not isinstance(obj, np.ndarray) and hasattr(obj, "__array__"):
+            obj = np.asarray(obj)       # jax arrays land here (sync point)
+        if not isinstance(obj, np.ndarray):
+            raise TransportError(f"unserializable payload type "
+                                 f"{type(obj).__name__}")
+        if obj.dtype == object:
+            # Paillier ciphertexts / decrypted ints: python bigints
+            out += b"O"
+            out += bytes([obj.ndim])
+            for d in obj.shape:
+                out += _I64.pack(d)
+            for x in obj.reshape(-1).tolist():
+                if not isinstance(x, int):
+                    raise TransportError(
+                        f"object arrays may only carry python ints, got "
+                        f"{type(x).__name__}")
+                _enc_bigint(out, x)
+        else:
+            out += b"a"
+            _enc_str(out, str(obj.dtype))
+            out += bytes([obj.ndim])
+            for d in obj.shape:
+                out += _I64.pack(d)
+            out += np.ascontiguousarray(obj).tobytes()
+
+
+def encode_payload(obj) -> bytes:
+    out = bytearray()
+    _encode(obj, out)
+    return bytes(out)
+
+
+class _Reader:
+    def __init__(self, buf: bytes):
+        self.buf = buf
+        self.pos = 0
+
+    def take(self, n: int) -> bytes:
+        b = self.buf[self.pos: self.pos + n]
+        if len(b) != n:
+            raise TransportError("truncated payload")
+        self.pos += n
+        return b
+
+    def u32(self) -> int:
+        return _U32.unpack(self.take(4))[0]
+
+    def i64(self) -> int:
+        return _I64.unpack(self.take(8))[0]
+
+    def string(self) -> str:
+        return self.take(self.u32()).decode("utf-8")
+
+    def bigint(self) -> int:
+        sign = self.take(1)[0]
+        raw = self.take(self.u32())
+        x = int.from_bytes(raw, "big")
+        return -x if sign else x
+
+
+def _decode(r: _Reader):
+    t = r.take(1)
+    if t == b"N":
+        return None
+    if t == b"T":
+        return True
+    if t == b"F":
+        return False
+    if t == b"i":
+        return r.i64()
+    if t == b"I":
+        return r.bigint()
+    if t == b"f":
+        return _F64.unpack(r.take(8))[0]
+    if t == b"s":
+        return r.string()
+    if t == b"b":
+        return r.take(r.u32())
+    if t == b"u":
+        return tuple(_decode(r) for _ in range(r.u32()))
+    if t == b"l":
+        return [_decode(r) for _ in range(r.u32())]
+    if t == b"d":
+        return {_decode(r): _decode(r) for _ in range(r.u32())}
+    if t == b"a":
+        dtype = np.dtype(r.string())
+        shape = tuple(r.i64() for _ in range(r.take(1)[0]))
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        arr = np.frombuffer(r.take(n * dtype.itemsize), dtype=dtype)
+        return arr.reshape(shape).copy()
+    if t == b"O":
+        shape = tuple(r.i64() for _ in range(r.take(1)[0]))
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        arr = np.empty(n, dtype=object)
+        for i in range(n):
+            arr[i] = r.bigint()
+        return arr.reshape(shape)
+    raise TransportError(f"bad payload type byte {t!r}")
+
+
+def decode_payload(buf: bytes):
+    r = _Reader(buf)
+    obj = _decode(r)
+    if r.pos != len(buf):
+        raise TransportError("trailing bytes in payload")
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# framing + endpoints
+# ---------------------------------------------------------------------------
+
+def encode_frame(kind: int, src: str, dst: str, tag: str, nbytes: int,
+                 payload, payload_bytes: bytes | None = None) -> bytes:
+    out = bytearray([kind])
+    _enc_str(out, src)
+    _enc_str(out, dst)
+    _enc_str(out, tag)
+    out += _I64.pack(int(nbytes))
+    out += (payload_bytes if payload_bytes is not None
+            else encode_payload(payload))
+    return bytes(out)
+
+
+def decode_frame(buf: bytes) -> tuple:
+    r = _Reader(buf)
+    kind = r.take(1)[0]
+    src, dst, tag = r.string(), r.string(), r.string()
+    nbytes = r.i64()
+    payload = decode_payload(buf[r.pos:])
+    return kind, src, dst, tag, nbytes, payload
+
+
+class SocketEndpoint:
+    """Length-prefixed frames over one TCP connection (TCP_NODELAY: the
+    protocol is strict request/reply, Nagle only adds latency)."""
+
+    def __init__(self, sock: _socket.socket):
+        sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
+        self.sock = sock
+
+    def send_bytes(self, frame: bytes) -> None:
+        self.sock.sendall(_U32.pack(len(frame)) + frame)
+
+    def _read_exact(self, n: int) -> bytes:
+        buf = bytearray(n)
+        view = memoryview(buf)
+        got = 0
+        while got < n:
+            r = self.sock.recv_into(view[got:], n - got)
+            if r == 0:
+                raise TransportError("peer closed the connection")
+            got += r
+        return bytes(buf)
+
+    def recv_bytes(self, timeout: float | None = None) -> bytes:
+        self.sock.settimeout(timeout)
+        try:
+            n = _U32.unpack(self._read_exact(4))[0]
+            return self._read_exact(n)
+        except _socket.timeout as e:
+            raise TransportError(f"recv timed out after {timeout}s") from e
+
+    def poll(self) -> bool:
+        import select
+        return bool(select.select([self.sock], [], [], 0)[0])
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+class LoopbackEndpoint:
+    """In-memory endpoint with the same framed interface.  ``on_deliver``
+    (when set on the *receiving* end) is invoked after each delivery —
+    the inline pump that lets a PartyProcess handle frames synchronously
+    inside the sender's call, single-threaded and deterministic."""
+
+    def __init__(self):
+        self.inbox: deque = deque()
+        self.peer: "LoopbackEndpoint | None" = None
+        self.on_deliver = None
+        self.closed = False
+
+    @classmethod
+    def pair(cls) -> tuple:
+        a, b = cls(), cls()
+        a.peer, b.peer = b, a
+        return a, b
+
+    def send_bytes(self, frame: bytes) -> None:
+        if self.peer is None or self.peer.closed:
+            raise TransportError("loopback peer closed")
+        self.peer.inbox.append(frame)
+        if self.peer.on_deliver is not None:
+            self.peer.on_deliver()
+
+    def recv_bytes(self, timeout: float | None = None) -> bytes:
+        if not self.inbox:
+            raise TransportError("loopback recv on empty inbox (protocol "
+                                 "desync: no pending frame)")
+        return self.inbox.popleft()
+
+    def poll(self) -> bool:
+        return bool(self.inbox)
+
+    def close(self) -> None:
+        self.closed = True
+
+
+# ---------------------------------------------------------------------------
+# the channel over a transport
+# ---------------------------------------------------------------------------
+
+class TransportChannel(Channel):
+    """The Channel contract over real endpoints.
+
+    ``send`` keeps the exact in-process accounting (same tags, same
+    analytic nbytes) and additionally ships the frame when ``dst`` is a
+    remote peer; ``recv`` decodes one incoming frame and records it in
+    the ledger, so a 2-party conversation yields the same per-tag ledger
+    on each side as the single in-process ledger does.  Framed bytes that
+    actually crossed the transport are counted per tag in
+    ``tx_bytes``/``rx_bytes`` (control frames included): the gap between
+    those and the ledger is the protocol-vs-socket overhead the
+    transport benchmark reports.
+    """
+
+    def __init__(self, party: str, peers: dict, timeout: float = 600.0):
+        super().__init__()
+        self.party = party
+        self.peers = peers
+        self.timeout = timeout
+        self.tx_bytes = Counter()       # tag -> framed bytes shipped
+        self.rx_bytes = Counter()       # tag -> framed bytes received
+        self._enc_memo = (object(), b"")    # one-slot broadcast memo
+                                            # (sentinel: matches nothing)
+
+    # -- outgoing -------------------------------------------------------
+    def send(self, src: str, dst: str, tag: str, payload, nbytes: int):
+        super().send(src, dst, tag, payload, nbytes)
+        if dst != self.party:
+            self._ship(KIND_PROTO, src, dst, tag, nbytes, payload)
+        return payload
+
+    def control_send(self, dst: str, tag: str, payload) -> None:
+        self._ship(KIND_CTRL, self.party, dst, tag, 0, payload)
+
+    def _ship(self, kind, src, dst, tag, nbytes, payload) -> None:
+        ep = self.peers.get(dst)
+        if ep is None:
+            raise TransportError(f"{self.party}: no endpoint for {dst!r}")
+        # broadcast memo: the guest sends the SAME payload object to every
+        # host back to back (enc_gh ciphertext batch, layer plans) — encode
+        # it once, not once per destination (the enc_gh encode includes a
+        # jax device sync)
+        memo_obj, payload_bytes = self._enc_memo
+        if payload is not memo_obj:
+            payload_bytes = encode_payload(payload)
+            self._enc_memo = (payload, payload_bytes)
+        frame = encode_frame(kind, src, dst, tag, nbytes, None,
+                             payload_bytes=payload_bytes)
+        self.tx_bytes[tag] += len(frame) + 4        # + length prefix
+        ep.send_bytes(frame)
+
+    # -- incoming -------------------------------------------------------
+    def _read(self, src: str, timeout: float | None = None):
+        ep = self.peers.get(src)
+        if ep is None:
+            raise TransportError(f"{self.party}: no endpoint for {src!r}")
+        frame = ep.recv_bytes(self.timeout if timeout is None else timeout)
+        kind, fsrc, fdst, tag, nbytes, payload = decode_frame(frame)
+        self.rx_bytes[tag] += len(frame) + 4
+        if kind == KIND_CTRL and tag == "error":
+            # a peer's dying words: surface its actual failure instead of
+            # a tag mismatch now / 'peer closed' later
+            raise TransportError(f"peer {fsrc} failed: {payload}")
+        if kind == KIND_PROTO:
+            # mirror the sender's ledger entry (analytic nbytes travels in
+            # the frame header) so each side's per-tag totals converge to
+            # the in-process shared ledger
+            Channel.send(self, fsrc, fdst, tag, payload, nbytes)
+        return kind, fsrc, fdst, tag, payload
+
+    def recv(self, src: str, tag: str):
+        """Blocking receive of one PROTOCOL frame from ``src``; the tag
+        must match (the protocol is strict request/reply — anything else
+        is a desync worth crashing on)."""
+        kind, _, _, ftag, payload = self._read(src)
+        if kind != KIND_PROTO or ftag != tag:
+            raise TransportError(f"{self.party}: expected protocol frame "
+                                 f"{tag!r} from {src}, got "
+                                 f"{'ctrl' if kind else 'proto'}:{ftag!r}")
+        return payload
+
+    def control_recv(self, src: str, tag: str):
+        kind, _, _, ftag, payload = self._read(src)
+        if kind != KIND_CTRL or ftag != tag:
+            raise TransportError(f"{self.party}: expected control frame "
+                                 f"{tag!r} from {src}, got "
+                                 f"{'ctrl' if kind else 'proto'}:{ftag!r}")
+        return payload
+
+    def recv_any(self, src: str) -> tuple:
+        """(kind, tag, payload) of the next frame from ``src`` — the
+        PartyProcess serve loop."""
+        kind, _, _, tag, payload = self._read(src)
+        return kind, tag, payload
+
+    def try_recv_any(self, src: str):
+        ep = self.peers.get(src)
+        if ep is None or not ep.poll():
+            return None
+        return self.recv_any(src)
+
+    # -- socket accounting ---------------------------------------------
+    def reset_accounting(self) -> None:
+        super().reset_accounting()
+        self.tx_bytes.clear()
+        self.rx_bytes.clear()
+
+    @property
+    def total_tx_bytes(self) -> int:
+        return sum(self.tx_bytes.values())
+
+    @property
+    def total_rx_bytes(self) -> int:
+        return sum(self.rx_bytes.values())
+
+    def socket_summary(self) -> dict:
+        tags = sorted(set(self.tx_bytes) | set(self.rx_bytes))
+        return {t: {"tx": self.tx_bytes[t], "rx": self.rx_bytes[t]}
+                for t in tags}
+
+    def close(self) -> None:
+        for ep in self.peers.values():
+            ep.close()
+
+
+# ---------------------------------------------------------------------------
+# guest-side handles
+# ---------------------------------------------------------------------------
+
+class RemoteHostHandle:
+    """What the grower sees for a host living in another process: the
+    guest's ``channel.send`` already shipped every guest->host message, so
+    ``deliver`` is a no-op and ``collect`` blocks on the reply frame.
+    Mirror of the in-process ``HostRuntime`` handle surface."""
+
+    def __init__(self, channel: TransportChannel, hid: int):
+        self.channel = channel
+        self.hid = hid
+
+    @property
+    def table(self) -> dict:
+        return {}           # host-private; never enters the guest process
+
+    def bind(self, params, cipher, channel, stats) -> None:
+        pass
+
+    def deliver(self, tag: str, payload) -> None:
+        pass
+
+    def collect(self, tag: str):
+        return self.channel.recv(f"host{self.hid}", tag)
+
+
+class RemoteServingHost:
+    """Serving-side handle: the host's PartyProcess computes its packed
+    decision bits and answers the guest's ``predict_req``."""
+
+    def __init__(self, channel: TransportChannel, hid: int, k: int):
+        self.channel = channel
+        self.hid = hid
+        self.k = int(k)
+
+    def predict_bits(self):
+        return self.channel.recv(f"host{self.hid}", "predict_bits")
+
+
+# ---------------------------------------------------------------------------
+# the party process (host side)
+# ---------------------------------------------------------------------------
+
+def _strip_private_key(cipher):
+    """Reduce a cipher object to what a passive host may hold.
+
+    The repro's cipher classes bundle keygen and BOTH key halves for the
+    in-process simulation (key distribution here is a simulation
+    shortcut: the host derives the shared parameters from the run config
+    instead of a key-exchange handshake).  A host party only ever needs
+    the public/evaluation surface — modulus, Barrett context, lazy
+    reduce/sub, compress shifts — so the private material is deleted the
+    moment the object exists: any host-side code path that reached for
+    decrypt (or the affine scheme's symmetric encrypt) dies with an
+    AttributeError instead of silently voiding the privacy boundary.
+    ``plain`` is the keyless debugging cipher; nothing to strip.
+    """
+    for attr in ("T_dec", "T_enc", "a_inv_int", "a_int", "_lam", "_mu"):
+        if hasattr(cipher, attr):
+            delattr(cipher, attr)
+    return cipher
+
+
+class PartyProcess:
+    """One host party, driven entirely by decoded frames.
+
+    Training frames (``enc_gh`` / ``assign_sync`` / ``chosen_sid``) run the
+    same :class:`~repro.core.tree.HostRuntime` handlers the in-process
+    simulation runs — replies leave through this party's
+    :class:`TransportChannel`.  Serving is set up by a ``serve_setup``
+    control frame: the host builds its :class:`HostHalf` from its private
+    per-tree tables + the guest-published bit-column key order, exports it
+    to ``export_dir``, RELOADS it, and answers ``predict_req`` from the
+    reloaded half (the per-party export is the process boundary).
+    """
+
+    def __init__(self, hid: int, params, X_host, channel: TransportChannel,
+                 export_dir: str | None = None):
+        from ..core.binning import bin_features
+        self.hid = hid
+        self.params = params
+        self.channel = channel
+        self.export_dir = export_dir
+        self.stats = Stats()
+        self.data = bin_features(np.asarray(X_host), params.n_bins,
+                                 sparse=params.sparse,
+                                 use_pallas=params.use_pallas)
+        self.X_serve = np.asarray(X_host)
+        self.cipher = None
+        self.hr = None              # current tree's HostRuntime
+        self.tables: dict = {}      # tree_idx -> {nid: (fid, bid)}
+        self.server = None          # PartyBits after serve_setup
+        self._serve_k = 0
+
+    # -- frame dispatch -------------------------------------------------
+    def serve_forever(self) -> None:
+        while True:
+            kind, tag, payload = self.channel.recv_any("guest")
+            try:
+                cont = self.handle(kind, tag, payload)
+            except Exception as e:             # noqa: BLE001
+                # ship the real failure to the guest before dying: the
+                # alternative is an opaque 'peer closed the connection'
+                # on the guest's next recv
+                try:
+                    self.channel.control_send(
+                        "guest", "error",
+                        f"host{self.hid} {type(e).__name__}: {e}")
+                except Exception:              # noqa: BLE001
+                    pass
+                raise
+            if not cont:
+                return
+
+    def pump(self) -> None:
+        """Drain pending frames (loopback inline mode)."""
+        while True:
+            got = self.channel.try_recv_any("guest")
+            if got is None:
+                return
+            self.handle(*got)
+
+    def handle(self, kind: int, tag: str, payload) -> bool:
+        if kind == KIND_CTRL:
+            return self._control(tag, payload)
+        if tag == "enc_gh":
+            self._begin_tree(payload)
+        elif tag in ("assign_sync", "chosen_sid"):
+            self.hr.deliver(tag, payload)
+            self.hr._outbox.clear()     # replies already shipped
+        elif tag == "predict_req":
+            self._predict(payload)
+        else:
+            raise TransportError(f"host{self.hid}: unknown protocol tag "
+                                 f"{tag!r}")
+        return True
+
+    # -- training -------------------------------------------------------
+    def _begin_tree(self, payload) -> None:
+        from ..core.histogram import CipherHistogram
+        from ..core.tree import HostRuntime
+        if self.cipher is None:
+            from ..core.boosting import cipher_kwargs
+            from ..core.he import get_cipher
+            self.cipher = _strip_private_key(
+                get_cipher(self.params.cipher,
+                           **cipher_kwargs(self.params)))
+        engine = CipherHistogram(self.cipher, self.params.n_bins,
+                                 sparse=self.params.sparse,
+                                 use_pallas=self.params.use_pallas,
+                                 stats=self.stats)
+        self.hr = HostRuntime(hid=self.hid, data=self.data, engine=engine)
+        self.hr.bind(self.params, self.cipher, self.channel, self.stats)
+        self.hr.deliver("enc_gh", payload)
+        self.tables[int(payload["tree"])] = self.hr.table
+
+    # -- serving --------------------------------------------------------
+    def _serve_setup(self, payload) -> None:
+        from ..kernels.common import default_interpret
+        from ..serving.engine import PartyBits
+        from ..serving.export import export_host, load_host
+        from ..serving.packed import host_half_from_keys
+        keys = [(int(ti), int(nid)) for ti, nid in payload["keys"]]
+        half = host_half_from_keys(self.hid, keys, self.tables,
+                                   self.data.thresholds, self.params.n_bins)
+        # the guest names the export root in the setup frame so one
+        # serve() call produces ONE coherent per-party tree; the
+        # constructor's export_dir is only the fallback
+        export_dir = payload.get("export_dir", self.export_dir)
+        if export_dir:
+            out = export_host(half, os.path.join(export_dir,
+                                                 f"host{self.hid}"))
+            half = load_host(out)   # serve from the RELOADED export
+        use_pallas = self.params.use_pallas and not default_interpret()
+        self._serve_k = half.table.k
+        self.server = (PartyBits(half.table, half.thresholds, half.n_bins,
+                                 use_pallas)
+                       if half.table.k else None)
+        self.channel.control_send("guest", "serve_ready",
+                                  {"k": self._serve_k})
+
+    def _predict(self, req) -> None:
+        ids = np.asarray(req["ids"])
+        n = len(ids)
+        n_pad = int(req["n_pad"])
+        if n and int(ids.max()) >= len(self.X_serve):
+            raise TransportError(
+                f"host{self.hid}: predict_req references row "
+                f"{int(ids.max())} but only {len(self.X_serve)} rows are "
+                f"staged — ship this batch's host rows first "
+                f"(MultiHostRun.stage_host_data / the serve_data frame)")
+        pb = self.server.packed_from_X(self.X_serve[ids], n_pad)
+        # round-trips are counted ONCE, at the guest's collect site (the
+        # same place the in-process engine counts them) — not here, or
+        # merged_stats would double-count every batch
+        self.channel.send(f"host{self.hid}", "guest", "predict_bits", pb,
+                          self._serve_k * ((n + 7) // 8))
+
+    # -- control --------------------------------------------------------
+    def _control(self, tag: str, payload) -> bool:
+        if tag == "serve_setup":
+            self._serve_setup(payload)
+        elif tag == "serve_data":
+            # out-of-band data staging: in a real deployment each party
+            # pulls the batch's rows from its OWN source; the control
+            # plane simulates that arrival.  predict_req still carries
+            # only instance ids.
+            self.X_serve = np.asarray(payload["X"])
+        elif tag == "reset_stats":
+            # a refit starts: fresh Stats (the next enc_gh's engine binds
+            # to it) and fresh per-fit wire accounting, mirroring the
+            # fresh model the guest constructs
+            self.stats = Stats()
+            self.channel.reset_accounting()
+        elif tag == "get_stats":
+            self.channel.control_send(
+                "guest", "stats",
+                {"stats": self.stats.as_dict(),
+                 "ledger": self.channel.summary(),
+                 "socket": self.channel.socket_summary()})
+        elif tag == "ping":
+            self.channel.control_send("guest", "pong", payload)
+        elif tag == "bye":
+            return False
+        else:
+            raise TransportError(f"host{self.hid}: unknown control tag "
+                                 f"{tag!r}")
+        return True
+
+
+def host_main(port: int, hid: int, params, X_host,
+              export_dir: str | None = None) -> None:
+    """Entry point of a spawned host process: connect to the guest's
+    listener, introduce ourselves, serve frames until ``bye``."""
+    sock = _socket.create_connection(("127.0.0.1", port))
+    ep = SocketEndpoint(sock)
+    channel = TransportChannel(f"host{hid}", {"guest": ep})
+    channel.control_send("guest", "hello", {"hid": hid})
+    try:
+        PartyProcess(hid, params, X_host, channel,
+                     export_dir=export_dir).serve_forever()
+    finally:
+        ep.close()
+
+
+# ---------------------------------------------------------------------------
+# guest-side orchestration
+# ---------------------------------------------------------------------------
+
+class MultiHostRun:
+    """Drive a process-per-party run from the guest side.
+
+    ``transport="socket"`` spawns one OS process per host (multiprocessing
+    ``spawn`` — a fresh interpreter, so jax state is never forked) talking
+    length-prefixed TCP on localhost.  ``transport="loopback"`` builds the
+    host PartyProcess objects in this process on in-memory endpoints with
+    the identical framing — same codec, same ledgers, no sockets — which
+    is what CI uses where spawning is too slow and what the benchmark
+    falls back to in sandboxes.
+
+        run = MultiHostRun(params, [X_host])
+        model = run.fit(X_guest, y)         # training over the transport
+        run.serve(out_dir)                  # per-party exports, reloaded
+        score = run.predict_score(X_eval_guest)
+        run.close()
+    """
+
+    def __init__(self, params, X_hosts: list, transport: str = "socket",
+                 export_dir: str | None = None, timeout: float = 600.0):
+        if getattr(params, "mesh", None) is not None:
+            raise ValueError("multi-host runtime: params.mesh must be None "
+                             "(per-process meshes are per-party state)")
+        self.params = params
+        self.n_hosts = len(X_hosts)
+        self.export_dir = export_dir
+        self.transport = transport
+        self.procs: list = []
+        self.parties: list = []         # loopback PartyProcess objects
+        self._listener = None
+        self.model = None
+        self.predictor = None
+
+        peers: dict = {}
+        if transport == "socket":
+            import multiprocessing as mp
+            ctx = mp.get_context("spawn")
+            self._listener = _socket.socket()
+            try:
+                self._listener.bind(("127.0.0.1", 0))
+                self._listener.listen(self.n_hosts)
+                port = self._listener.getsockname()[1]
+                for hid, X in enumerate(X_hosts):
+                    p = ctx.Process(target=host_main,
+                                    args=(port, hid, params, np.asarray(X),
+                                          export_dir),
+                                    daemon=True)
+                    p.start()
+                    self.procs.append(p)
+                self._listener.settimeout(timeout)
+                hello_rx = 0        # read before the channel exists;
+                                    # credited to rx_bytes below so each
+                                    # side's framed-byte totals reconcile
+                for _ in range(self.n_hosts):
+                    try:
+                        sock, _ = self._listener.accept()
+                    except _socket.timeout as e:
+                        dead = [p.pid for p in self.procs
+                                if not p.is_alive()]
+                        raise TransportError(
+                            f"host process(es) never connected within "
+                            f"{timeout}s (exited early: {dead or 'none'})"
+                            ) from e
+                    ep = SocketEndpoint(sock)
+                    frame = ep.recv_bytes(timeout)
+                    _, _, _, tag, _, hello = decode_frame(frame)
+                    if tag != "hello":
+                        raise TransportError(
+                            f"expected hello, got {tag!r}")
+                    hello_rx += len(frame) + 4
+                    peers[f"host{int(hello['hid'])}"] = ep
+            except BaseException:
+                # __init__ failed: the caller never gets an object to
+                # close(), so reap children and sockets here
+                for ep in peers.values():
+                    ep.close()
+                for p in self.procs:
+                    if p.is_alive():
+                        p.terminate()
+                self._listener.close()
+                raise
+        elif transport == "loopback":
+            for hid, X in enumerate(X_hosts):
+                guest_end, host_end = LoopbackEndpoint.pair()
+                hch = TransportChannel(f"host{hid}", {"guest": host_end},
+                                       timeout)
+                pp = PartyProcess(hid, params, X, hch,
+                                  export_dir=export_dir)
+                host_end.on_deliver = pp.pump
+                peers[f"host{hid}"] = guest_end
+                self.parties.append(pp)
+        else:
+            raise ValueError(f"unknown transport {transport!r}")
+        self.channel = TransportChannel("guest", peers, timeout)
+        if transport == "socket":
+            self.channel.rx_bytes["hello"] += hello_rx
+
+    # -- training -------------------------------------------------------
+    def fit(self, X_guest, y):
+        from ..core.boosting import VerticalBoosting
+        # per-fit accounting on BOTH sides of the wire: the model's Stats
+        # are fresh, so the channel ledgers and host Stats must be too,
+        # or a refit on a long-lived run double-counts
+        self.channel.reset_accounting()
+        for hid in range(self.n_hosts):
+            self.channel.control_send(f"host{hid}", "reset_stats", None)
+        model = VerticalBoosting(self.params)
+        model.channel = self.channel
+        model.remote_hosts = [RemoteHostHandle(self.channel, hid)
+                              for hid in range(self.n_hosts)]
+        model.fit(X_guest, y, [])
+        self.model = model
+        self.predictor = None           # stale after refit
+        return model
+
+    # -- serving --------------------------------------------------------
+    def serve(self, out_dir: str | None = None):
+        """Export per-party halves (guest here, each host in its own
+        process), reload them, and wire a predictor over the transport.
+        Returns the :class:`FederatedPredictor`."""
+        from ..serving.engine import FederatedPredictor
+        from ..serving.export import export_guest, load_guest
+        from ..serving.packed import pack_guest
+        if self.model is None:
+            raise RuntimeError("serve() needs a fitted model: call fit()")
+        out_dir = out_dir or self.export_dir
+        guest_half, host_keys = pack_guest(self.model)
+        if out_dir:
+            gdir = export_guest(guest_half,
+                                os.path.join(out_dir, "guest"))
+            guest_half = load_guest(gdir)   # serve from the reloaded half
+        for hid in range(self.n_hosts):
+            self.channel.control_send(
+                f"host{hid}", "serve_setup",
+                {"keys": [list(k) for k in host_keys[hid]],
+                 "export_dir": out_dir})
+        remote = []
+        for hid in range(self.n_hosts):
+            ack = self.channel.control_recv(f"host{hid}", "serve_ready")
+            remote.append(RemoteServingHost(self.channel, hid,
+                                            int(ack["k"])))
+        self.predictor = FederatedPredictor(
+            guest_half, remote, channel=self.channel,
+            stats=self.model.stats)
+        return self.predictor
+
+    def stage_host_data(self, X_hosts: list) -> None:
+        """Ship each host its OWN feature rows for the upcoming batch —
+        the out-of-band data arrival every party sees in a real
+        deployment (the serving protocol itself still moves only
+        instance ids and bit blocks)."""
+        for hid, X in enumerate(X_hosts):
+            self.channel.control_send(f"host{hid}", "serve_data",
+                                      {"X": np.asarray(X)})
+
+    def predict_score(self, X_guest, X_hosts: list | None = None, *,
+                      staged: bool = False) -> np.ndarray:
+        """Serve one batch.  Pass ``X_hosts`` to stage each host's rows
+        for THIS batch, or ``staged=True`` to assert the hosts already
+        hold the right rows (initially their training matrices).  With
+        neither, raise: a guest batch silently scored against stale host
+        rows mixes features from different instances with no error."""
+        if self.predictor is None:
+            self.serve()
+        if X_hosts is not None:
+            self.stage_host_data(X_hosts)
+        elif not staged:
+            raise ValueError(
+                "host rows for this batch are not staged: pass X_hosts "
+                "(ships each host its rows) or staged=True (the hosts' "
+                "currently staged matrices ARE this batch's rows)")
+        return self.predictor.predict_score(X_guest,
+                                            [None] * self.n_hosts)
+
+    # -- diagnostics ----------------------------------------------------
+    def host_stats(self) -> list:
+        """Each host's Stats/ledger/socket counters (control round-trip)."""
+        out = []
+        for hid in range(self.n_hosts):
+            self.channel.control_send(f"host{hid}", "get_stats", None)
+            out.append(self.channel.control_recv(f"host{hid}", "stats"))
+        return out
+
+    def merged_stats(self) -> Stats:
+        """Guest stats + every host's counters folded in: comparable to
+        the single shared Stats of an in-process run."""
+        merged = Stats()
+        merged.merge_counts(self.model.stats.as_dict())
+        for hs in self.host_stats():
+            merged.merge_counts(hs["stats"])
+        return merged
+
+    def ping(self, hid: int = 0) -> float:
+        """One control round-trip, seconds."""
+        t0 = time.perf_counter()
+        self.channel.control_send(f"host{hid}", "ping", {"t": t0})
+        self.channel.control_recv(f"host{hid}", "pong")
+        return time.perf_counter() - t0
+
+    def close(self) -> None:
+        for hid in range(self.n_hosts):
+            try:
+                self.channel.control_send(f"host{hid}", "bye", None)
+            except (TransportError, OSError):
+                pass        # peer already dead (crashed host, reset pipe)
+        for p in self.procs:
+            p.join(timeout=30)
+            if p.is_alive():
+                p.terminate()
+        self.channel.close()
+        if self._listener is not None:
+            self._listener.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

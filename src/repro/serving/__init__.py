@@ -2,6 +2,8 @@
 ensembles, a round-batched bit-tensor protocol (one round-trip per host
 per batch), and per-party model export."""
 
-from .engine import FederatedPredictor  # noqa: F401
-from .export import export_model, load_ensemble, load_guest, load_host  # noqa: F401
-from .packed import GuestHalf, HostHalf, PackedEnsemble, PartySlice  # noqa: F401
+from .engine import FederatedPredictor, PartyBits  # noqa: F401
+from .export import (export_guest, export_host, export_model,  # noqa: F401
+                     load_ensemble, load_guest, load_host)
+from .packed import (GuestHalf, HostHalf, PackedEnsemble,  # noqa: F401
+                     PartySlice, host_half_from_keys, pack_guest)

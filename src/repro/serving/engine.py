@@ -79,14 +79,48 @@ def _route(bits, step, node, depth: int):
     return jax.lax.fori_loop(0, depth, body, node)
 
 
+class PartyBits:
+    """One party's serving evaluator: bins its OWN features and computes
+    its decision-bit block (the fused compare→packbits pass).
+
+    This is exactly the computation a host's ``PartyProcess`` runs on its
+    side of the socket under ``runtime/transport.py`` — in-process serving
+    calls the same object directly, so the two modes are bit-identical by
+    construction."""
+
+    def __init__(self, table, thresholds, n_bins: int, use_pallas: bool):
+        self.table = table
+        self.use_pallas = use_pallas
+        # binner view: reuses the BinnedData device-threshold cache
+        self.binner = BinnedData(
+            bins=np.zeros((0, thresholds.shape[0]), np.int32),
+            thresholds=thresholds, n_bins=n_bins)
+        self._fid = jnp.asarray(table.fid)
+        self._bid = jnp.asarray(table.bid)
+
+    def bin(self, X) -> np.ndarray:
+        return apply_binning(X, self.binner, self.use_pallas)
+
+    def packed(self, bins: np.ndarray, n_pad: int):
+        """(k, n_pad // 8) uint8 decision bits for one binned batch."""
+        bins_T = np.zeros((bins.shape[1], n_pad), np.int32)
+        bins_T[:, : bins.shape[0]] = bins.T
+        return _packed_bits(jnp.asarray(bins_T), self._fid, self._bid)
+
+    def packed_from_X(self, X, n_pad: int):
+        return self.packed(self.bin(X), n_pad)
+
+
 class FederatedPredictor:
     """Serves batched predictions from packed per-party halves.
 
     Works from a live ``VerticalBoosting`` (see
-    ``VerticalBoosting.predict_score``) or from halves reloaded by
+    ``VerticalBoosting.predict_score``), from halves reloaded by
     ``serving/export.py`` — a serving process never needs the training
-    objects.  All cross-party transfers go through ``channel`` with
-    protocol-fidelity byte counts under the ``predict_*`` tags.
+    objects — or from ``RemoteServingHost`` handles whose half lives in
+    another OS process (``runtime/transport.py``).  All cross-party
+    transfers go through ``channel`` with protocol-fidelity byte counts
+    under the ``predict_*`` tags.
     """
 
     def __init__(self, guest, hosts, *, channel: Channel | None = None,
@@ -103,9 +137,10 @@ class FederatedPredictor:
                 f"guest split table has {guest.guest.k} nodes, k_parties "
                 f"records {int(guest.k_parties[0])}")
         for h in hosts:
-            if h.table.k != int(guest.k_parties[1 + h.hid]):
+            k = h.table.k if hasattr(h, "table") else h.k
+            if k != int(guest.k_parties[1 + h.hid]):
                 raise ValueError(
-                    f"host{h.hid} table has {h.table.k} nodes, guest half "
+                    f"host{h.hid} table has {k} nodes, guest half "
                     f"expects {int(guest.k_parties[1 + h.hid])}")
         self.guest = guest
         self.hosts = hosts
@@ -121,27 +156,36 @@ class FederatedPredictor:
         self.use_pallas = use_pallas and not default_interpret()
 
         self._step = jnp.asarray(guest.step)
-        self._tables = []          # per party: (fid_dev, bid_dev) or None
-        for sl in [guest.guest] + [h.table for h in hosts]:
-            self._tables.append(None if sl.k == 0 else
-                                (jnp.asarray(sl.fid), jnp.asarray(sl.bid)))
-        # binner views: reuse the BinnedData device-threshold cache
-        self._binners = [
-            BinnedData(bins=np.zeros((0, thr.shape[0]), np.int32),
-                       thresholds=thr, n_bins=nb)
-            for thr, nb in [(guest.thresholds, guest.n_bins)]
-            + [(h.thresholds, h.n_bins) for h in hosts]]
+        # per party: a PartyBits evaluator (in-process halves), or None
+        # for parties owning no internal nodes, or a remote handle whose
+        # process evaluates its own bits (``RemoteServingHost``)
+        self._bits = [PartyBits(guest.guest, guest.thresholds, guest.n_bins,
+                                self.use_pallas)
+                      if guest.guest.k else None]
+        for h in hosts:
+            if hasattr(h, "table"):     # in-process HostHalf
+                self._bits.append(
+                    PartyBits(h.table, h.thresholds, h.n_bins,
+                              self.use_pallas) if h.table.k else None)
+            else:                       # remote: its PartyProcess computes
+                self._bits.append(h if h.k else None)
 
     # ------------------------------------------------------------------
     def predict_score(self, X_guest, X_hosts) -> np.ndarray:
-        """Raw ensemble scores for one batch (one round-trip per host)."""
+        """Raw ensemble scores for one batch (one round-trip per host).
+
+        With remote hosts the corresponding ``X_hosts`` entries are
+        ignored (pass None): each host process bins its OWN feature
+        matrix and answers the ``predict_req`` with its bit block."""
         if len(X_hosts) != len(self.hosts):
             raise ValueError(f"expected {len(self.hosts)} host matrices, "
                              f"got {len(X_hosts)}")
-        parts = [X_guest] + list(X_hosts)
-        binned = [apply_binning(X, b, self.use_pallas)
-                  for X, b in zip(parts, self._binners)]
-        return self.predict_score_binned(binned[0], binned[1:])
+        # a guest owning no internal nodes (e.g. layered mode) never needs
+        # its bins — only the batch row count
+        guest_bins = (self._bits[0].bin(X_guest)
+                      if self._bits[0] is not None
+                      else np.zeros((len(X_guest), 0), np.int32))
+        return self._predict_core(guest_bins, list(X_hosts), binned=False)
 
     def predict_proba(self, X_guest, X_hosts) -> np.ndarray:
         from ..core.loss import sigmoid, softmax
@@ -151,12 +195,24 @@ class FederatedPredictor:
     def predict_score_binned(self, guest_bins: np.ndarray,
                              host_bins: list) -> np.ndarray:
         """Serve one already-binned batch: the engine entry point shared by
-        ``predict_score`` and the from-bins benchmark."""
+        ``predict_score`` and the from-bins benchmark.  In-process halves
+        only: a remote host bins its OWN staged rows, so caller-supplied
+        bins for it would be silently ignored — refuse instead."""
+        if any(b is not None and not isinstance(b, PartyBits)
+               for b in self._bits[1:]):
+            raise ValueError(
+                "predict_score_binned serves in-process halves only; "
+                "remote hosts bin their own staged rows — use "
+                "predict_score / MultiHostRun.predict_score")
+        return self._predict_core(guest_bins, list(host_bins), binned=True)
+
+    def _predict_core(self, guest_bins: np.ndarray, host_parts: list,
+                      binned: bool) -> np.ndarray:
         g = self.guest
         t0 = time.perf_counter()
-        if len(host_bins) != len(self.hosts):
+        if len(host_parts) != len(self.hosts):
             raise ValueError(f"expected {len(self.hosts)} host matrices, "
-                             f"got {len(host_bins)}")
+                             f"got {len(host_parts)}")
         n = guest_bins.shape[0]
         self.stats.n_predict_batches += 1
 
@@ -176,24 +232,40 @@ class FederatedPredictor:
         n_pad += (-n_pad) % (8 * dext)
 
         blocks = []
-        for pid, bins in enumerate([guest_bins] + list(host_bins)):
-            if self._tables[pid] is None:
+        if self._bits[0] is not None:
+            blocks.append(self._bits[0].packed(guest_bins, n_pad))
+        # one round-trip per host per batch: the request carries the
+        # instance ids (+ the pad extent so both sides bucket alike), the
+        # reply the packed bit block.  ALL requests go out before any
+        # reply is collected, so remote hosts compute their bit blocks
+        # concurrently (latency = max over hosts, not the sum) — the same
+        # dispatch-then-collect shape as the training layer batch.
+        pending = []                        # (block slot, party, i)
+        # ONE request object for all hosts: the transport's broadcast
+        # memo then encodes the id vector once, not once per host
+        req = {"ids": np.arange(n, dtype=np.int32), "n_pad": int(n_pad)}
+        for i, h in enumerate(self.hosts):
+            party = self._bits[1 + i]
+            if party is None:
                 continue                    # party owns no internal nodes
-            if pid > 0:
-                # one round-trip per host per batch: the request carries
-                # the instance ids, the reply the packed bit block
-                self.channel.send("guest", f"host{pid - 1}", "predict_req",
-                                  np.arange(n, dtype=np.int32), n * 4)
-            bins_T = np.zeros((bins.shape[1], n_pad), np.int32)
-            bins_T[:, :n] = bins.T
-            fid, bid = self._tables[pid]
-            pb = _packed_bits(jnp.asarray(bins_T), fid, bid)
-            if pid > 0:
+            self.channel.send("guest", f"host{h.hid}", "predict_req",
+                              req, n * 4)
+            if isinstance(party, PartyBits):
+                # in-process half: compute (async jax dispatch) and record
+                # the reply send here, exactly the oracle accounting
+                pb = (party.packed(host_parts[i], n_pad) if binned
+                      else party.packed_from_X(host_parts[i], n_pad))
                 k = pb.shape[0]
-                pb = self.channel.send(f"host{pid - 1}", "guest",
+                pb = self.channel.send(f"host{h.hid}", "guest",
                                        "predict_bits", pb,
                                        k * ((n + 7) // 8))
-                self.stats.n_predict_roundtrips += 1
+                pending.append(pb)
+            else:
+                pending.append(party)       # remote: collect below
+        for item in pending:
+            pb = item.predict_bits() if hasattr(item, "predict_bits") \
+                else item
+            self.stats.n_predict_roundtrips += 1
             blocks.append(pb)
 
         if blocks and g.depth > 0:

@@ -47,40 +47,27 @@ def _write_party(party_dir: str, manifest: dict, arrays: dict) -> None:
         json.dump(manifest, f, indent=1)
 
 
-def export_model(model_or_ensemble, out_dir: str) -> str:
-    """Write per-party serving halves; returns ``out_dir``.
-
-    Accepts a fitted ``VerticalBoosting`` (packed on the fly) or a
-    ``PackedEnsemble``.  The whole export lands atomically: a partial
-    write can never shadow a previous good export.
-    """
-    ens = (model_or_ensemble
-           if isinstance(model_or_ensemble, PackedEnsemble)
-           else PackedEnsemble.from_model(model_or_ensemble))
-    g = ens.guest
-    out_dir = out_dir.rstrip("/")
-    tmp = out_dir + ".tmp-export"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
+def _guest_payload(g: GuestHalf) -> tuple:
     init = (g.init_score if np.isscalar(g.init_score)
             else np.asarray(g.init_score).tolist())
-    _write_party(
-        os.path.join(tmp, "guest"),
-        {"role": "guest", "objective": g.objective,
-         "n_classes": g.n_classes, "n_bins": g.n_bins, "depth": g.depth,
-         "n_trees": g.n_trees, "n_nodes": g.n_nodes,
-         "n_hosts": g.n_hosts, "init_score": init},
-        {"step": g.step, "roots": g.roots, "tree_class": g.tree_class,
-         "leaf_w": g.leaf_w, "k_parties": g.k_parties,
-         "fid": g.guest.fid, "bid": g.guest.bid,
-         "thresholds": g.thresholds})
-    for h in ens.hosts:
-        _write_party(
-            os.path.join(tmp, f"host{h.hid}"),
-            {"role": "host", "hid": h.hid, "n_bins": h.n_bins,
+    return ({"role": "guest", "objective": g.objective,
+             "n_classes": g.n_classes, "n_bins": g.n_bins, "depth": g.depth,
+             "n_trees": g.n_trees, "n_nodes": g.n_nodes,
+             "n_hosts": g.n_hosts, "init_score": init},
+            {"step": g.step, "roots": g.roots, "tree_class": g.tree_class,
+             "leaf_w": g.leaf_w, "k_parties": g.k_parties,
+             "fid": g.guest.fid, "bid": g.guest.bid,
+             "thresholds": g.thresholds})
+
+
+def _host_payload(h: HostHalf) -> tuple:
+    return ({"role": "host", "hid": h.hid, "n_bins": h.n_bins,
              "k": h.table.k},
             {"fid": h.table.fid, "bid": h.table.bid,
              "thresholds": h.thresholds})
+
+
+def _publish(tmp: str, out_dir: str) -> str:
     # publish by rename: the previous export (if any) is moved aside
     # BEFORE the new one lands and deleted only after — a crash at any
     # point leaves either the old or the new export recoverable on disk,
@@ -94,6 +81,49 @@ def export_model(model_or_ensemble, out_dir: str) -> str:
     if os.path.exists(stale):
         shutil.rmtree(stale)
     return out_dir
+
+
+def export_guest(guest: GuestHalf, out_dir: str) -> str:
+    """Atomically write ONE party directory: the guest half.  This is what
+    the guest process publishes under the multi-host runtime — host halves
+    are exported by their own processes (:func:`export_host`)."""
+    out_dir = out_dir.rstrip("/")
+    tmp = out_dir + ".tmp-export"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    _write_party(tmp, *_guest_payload(guest))
+    return _publish(tmp, out_dir)
+
+
+def export_host(host: HostHalf, out_dir: str) -> str:
+    """Atomically write ONE party directory: a host half (its split table
+    + binning thresholds only), from inside that host's process."""
+    out_dir = out_dir.rstrip("/")
+    tmp = out_dir + ".tmp-export"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    _write_party(tmp, *_host_payload(host))
+    return _publish(tmp, out_dir)
+
+
+def export_model(model_or_ensemble, out_dir: str) -> str:
+    """Write per-party serving halves; returns ``out_dir``.
+
+    Accepts a fitted ``VerticalBoosting`` (packed on the fly) or a
+    ``PackedEnsemble``.  The whole export lands atomically: a partial
+    write can never shadow a previous good export.
+    """
+    ens = (model_or_ensemble
+           if isinstance(model_or_ensemble, PackedEnsemble)
+           else PackedEnsemble.from_model(model_or_ensemble))
+    out_dir = out_dir.rstrip("/")
+    tmp = out_dir + ".tmp-export"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    _write_party(os.path.join(tmp, "guest"), *_guest_payload(ens.guest))
+    for h in ens.hosts:
+        _write_party(os.path.join(tmp, f"host{h.hid}"), *_host_payload(h))
+    return _publish(tmp, out_dir)
 
 
 def _read_party(party_dir: str, role: str, names: tuple) -> tuple:

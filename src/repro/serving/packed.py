@@ -99,93 +99,137 @@ class PackedEnsemble:
 
     @classmethod
     def from_model(cls, model) -> "PackedEnsemble":
-        """Flatten a trained ``VerticalBoosting`` into serving halves."""
+        """Flatten a trained ``VerticalBoosting`` into serving halves.
+
+        Requires in-process host tables (simulation).  Under the
+        process-per-party runtime use :func:`pack_guest` — each host's
+        ``PartyProcess`` builds its own :class:`HostHalf` from the key
+        order ``pack_guest`` returns, and the private (fid, bid) content
+        never enters the guest process."""
+        if getattr(model, "remote_hosts", None) is not None:
+            raise ValueError(
+                "host tables live in remote processes: use pack_guest() "
+                "here and host_half_from_keys()/export_host() in each "
+                "host's PartyProcess (MultiHostRun.serve does this)")
+        guest, host_keys = pack_guest(model)
         trees = model.trees
-        if not trees:
-            raise ValueError("cannot pack an unfitted model (no trees)")
-        n_hosts = len(model.host_data)
-        for t in trees:
-            # the grower keeps row->leaf maps train-side; a tree that still
-            # carries one must never reach an exportable ensemble
-            if hasattr(t, "leaf_rows"):
-                raise AssertionError(
-                    "FederatedTree retains row-level training state "
-                    "(leaf_rows); packed models must be training-set free")
 
-        arrays = [t.node_arrays() for t in trees]
-
-        # pass 1: bit-column ids — guest block, then host blocks (hid
-        # order), each ordered by (tree, nid)
-        owners = [GUEST] + list(range(n_hosts))
-        internal = {p: [] for p in owners}
-        n_leaves = 0
-        for ti, a in enumerate(arrays):
-            for nid in range(len(a["party"])):
-                if a["left"][nid] != -1:
-                    internal[int(a["party"][nid])].append((ti, nid))
-                else:
-                    n_leaves += 1
-        k_parties = np.asarray([len(internal[p]) for p in owners], np.int32)
-        k_total = int(k_parties.sum())
-        n_nodes = k_total + n_leaves
-
-        gid = {}
-        col = 0
-        for p in owners:
-            for key in internal[p]:
-                gid[key] = col
-                col += 1
-        for ti, a in enumerate(arrays):
-            for nid in range(len(a["party"])):
-                if a["left"][nid] == -1:
-                    gid[(ti, nid)] = col
-                    col += 1
-
-        w_dim = arrays[0]["weight"].shape[1]
-        step = np.empty((n_nodes, 2), np.int32)
-        leaf_w = np.zeros((n_nodes, w_dim), np.float64)
-        depth = 0
-        roots = np.empty(len(trees), np.int32)
-        for ti, a in enumerate(arrays):
-            roots[ti] = gid[(ti, 0)]
-            depth = max(depth, int(a["depth"].max()))
-            for nid in range(len(a["party"])):
-                g = gid[(ti, nid)]
-                if a["left"][nid] != -1:
-                    step[g, 0] = gid[(ti, int(a["right"][nid]))]
-                    step[g, 1] = gid[(ti, int(a["left"][nid]))]
-                else:
-                    step[g] = g
-                    leaf_w[g] = a["weight"][nid]
-
-        def _slice(p, lookup):
-            keys = internal[p]
+        def _slice(keys, lookup):
             fid = np.empty(len(keys), np.int32)
             bid = np.empty(len(keys), np.int32)
             for i, (ti, nid) in enumerate(keys):
                 fid[i], bid[i] = lookup(ti, nid)
             return PartySlice(fid=fid, bid=bid)
 
-        guest_slice = _slice(
-            GUEST, lambda ti, nid: (int(arrays[ti]["fid"][nid]),
-                                    int(arrays[ti]["bid"][nid])))
-        p = model.params
-        guest = GuestHalf(
-            step=step, roots=roots,
-            tree_class=np.asarray(model.tree_class, np.int32),
-            leaf_w=leaf_w, depth=depth, k_parties=k_parties,
-            guest=guest_slice,
-            thresholds=np.asarray(model.guest_data.thresholds, np.float32),
-            n_bins=p.n_bins, objective=p.objective, n_classes=p.n_classes,
-            init_score=(np.asarray(model.init_score, np.float64)
-                        if p.objective != "binary"
-                        else float(model.init_score)))
         hosts = [
             HostHalf(hid=h,
-                     table=_slice(h, lambda ti, nid:
+                     table=_slice(host_keys[h], lambda ti, nid:
                                   trees[ti].host_tables[h][nid]),
                      thresholds=np.asarray(model.host_data[h].thresholds,
                                            np.float32),
-                     n_bins=p.n_bins)
-            for h in range(n_hosts)]
+                     n_bins=model.params.n_bins)
+            for h in range(len(host_keys))]
         return cls(guest=guest, hosts=hosts)
+
+
+def pack_guest(model) -> tuple:
+    """Pack the guest's serving half from a trained model, WITHOUT touching
+    host split content.
+
+    Returns ``(guest_half, host_keys)`` where ``host_keys[hid]`` is that
+    host's internal nodes in bit-column order as ``(tree_idx, nid)`` pairs
+    — the guest-visible structure a host needs (and all it needs) to build
+    its own :class:`HostHalf` from its private tables in its own process.
+    """
+    trees = model.trees
+    if not trees:
+        raise ValueError("cannot pack an unfitted model (no trees)")
+    n_hosts = (len(model.remote_hosts)
+               if getattr(model, "remote_hosts", None) is not None
+               else len(model.host_data))
+    for t in trees:
+        # the grower keeps row->leaf maps train-side; a tree that still
+        # carries one must never reach an exportable ensemble
+        if hasattr(t, "leaf_rows"):
+            raise AssertionError(
+                "FederatedTree retains row-level training state "
+                "(leaf_rows); packed models must be training-set free")
+
+    arrays = [t.node_arrays() for t in trees]
+
+    # pass 1: bit-column ids — guest block, then host blocks (hid
+    # order), each ordered by (tree, nid)
+    owners = [GUEST] + list(range(n_hosts))
+    internal = {p: [] for p in owners}
+    n_leaves = 0
+    for ti, a in enumerate(arrays):
+        for nid in range(len(a["party"])):
+            if a["left"][nid] != -1:
+                internal[int(a["party"][nid])].append((ti, nid))
+            else:
+                n_leaves += 1
+    k_parties = np.asarray([len(internal[p]) for p in owners], np.int32)
+    k_total = int(k_parties.sum())
+    n_nodes = k_total + n_leaves
+
+    gid = {}
+    col = 0
+    for p in owners:
+        for key in internal[p]:
+            gid[key] = col
+            col += 1
+    for ti, a in enumerate(arrays):
+        for nid in range(len(a["party"])):
+            if a["left"][nid] == -1:
+                gid[(ti, nid)] = col
+                col += 1
+
+    w_dim = arrays[0]["weight"].shape[1]
+    step = np.empty((n_nodes, 2), np.int32)
+    leaf_w = np.zeros((n_nodes, w_dim), np.float64)
+    depth = 0
+    roots = np.empty(len(trees), np.int32)
+    for ti, a in enumerate(arrays):
+        roots[ti] = gid[(ti, 0)]
+        depth = max(depth, int(a["depth"].max()))
+        for nid in range(len(a["party"])):
+            g = gid[(ti, nid)]
+            if a["left"][nid] != -1:
+                step[g, 0] = gid[(ti, int(a["right"][nid]))]
+                step[g, 1] = gid[(ti, int(a["left"][nid]))]
+            else:
+                step[g] = g
+                leaf_w[g] = a["weight"][nid]
+
+    fid = np.empty(len(internal[GUEST]), np.int32)
+    bid = np.empty(len(internal[GUEST]), np.int32)
+    for i, (ti, nid) in enumerate(internal[GUEST]):
+        fid[i] = int(arrays[ti]["fid"][nid])
+        bid[i] = int(arrays[ti]["bid"][nid])
+    p = model.params
+    guest = GuestHalf(
+        step=step, roots=roots,
+        tree_class=np.asarray(model.tree_class, np.int32),
+        leaf_w=leaf_w, depth=depth, k_parties=k_parties,
+        guest=PartySlice(fid=fid, bid=bid),
+        thresholds=np.asarray(model.guest_data.thresholds, np.float32),
+        n_bins=p.n_bins, objective=p.objective, n_classes=p.n_classes,
+        init_score=(np.asarray(model.init_score, np.float64)
+                    if p.objective != "binary"
+                    else float(model.init_score)))
+    return guest, [internal[h] for h in range(n_hosts)]
+
+
+def host_half_from_keys(hid: int, keys: list, tables: dict,
+                        thresholds: np.ndarray, n_bins: int) -> HostHalf:
+    """Build one host's serving half from the guest-published bit-column
+    key order and the host's OWN per-tree (fid, bid) tables
+    (``tables[tree_idx][nid]``).  This runs inside the host's process: the
+    split content never leaves it."""
+    fid = np.empty(len(keys), np.int32)
+    bid = np.empty(len(keys), np.int32)
+    for i, (ti, nid) in enumerate(keys):
+        fid[i], bid[i] = tables[int(ti)][int(nid)]
+    return HostHalf(hid=hid, table=PartySlice(fid=fid, bid=bid),
+                    thresholds=np.asarray(thresholds, np.float32),
+                    n_bins=n_bins)

@@ -1,0 +1,200 @@
+"""Regression tests: checkpoint leaf-name collisions and ResilientLoop's
+lost-final-save / restore-before-first-save paths."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.runtime.fault import ResilientLoop, StragglerPolicy
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: path-join collisions
+# ---------------------------------------------------------------------------
+
+def test_leaf_name_collision_roundtrips(tmp_path):
+    """``{"a__b": x}`` and ``{"a": {"b": y}}`` used to flatten to the SAME
+    .npz name — the later leaf silently overwrote the earlier one and
+    ``restore`` returned y for x.  Deterministic de-collision must round-
+    trip both leaves exactly."""
+    tree = {"a__b": np.arange(4, dtype=np.float32),
+            "a": {"b": np.full(3, 7.5, np.float64)}}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, tree)
+    like = {"a__b": np.zeros(4, np.float32),
+            "a": {"b": np.zeros(3, np.float64)}}
+    out = ckpt.restore(d, 1, like)
+    np.testing.assert_array_equal(np.asarray(out["a__b"]), tree["a__b"])
+    np.testing.assert_array_equal(np.asarray(out["a"]["b"]), tree["a"]["b"])
+    # two distinct files really exist (no silent overwrite)
+    src = os.path.join(d, "step_00000001")
+    npz = [f for f in os.listdir(src) if f.endswith(".npz")]
+    assert len(npz) == 2
+
+
+def test_leaf_name_suffix_cannot_collide_with_real_leaf(tmp_path):
+    """The de-collision suffix must be a fixpoint: a genuine leaf named
+    ``a__b#1`` must not collide with the suffixed rename of a colliding
+    ``a__b`` pair."""
+    tree = {"a": {"b": np.full(2, 1.0)}, "a__b": np.full(2, 2.0),
+            "a__b#1": np.full(2, 3.0)}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, tree)
+    src = os.path.join(d, "step_00000001")
+    assert len([f for f in os.listdir(src) if f.endswith(".npz")]) == 3
+    out = ckpt.restore(d, 1, tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]["b"]), tree["a"]["b"])
+    np.testing.assert_array_equal(np.asarray(out["a__b"]), tree["a__b"])
+    np.testing.assert_array_equal(np.asarray(out["a__b#1"]), tree["a__b#1"])
+
+
+def test_leaf_names_stable_without_collisions(tmp_path):
+    """Non-colliding checkpoints keep their historical names (format
+    compatibility: no suffix unless needed)."""
+    tree = {"w": np.ones(2), "b": np.zeros(2)}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, tree)
+    src = os.path.join(d, "step_00000003")
+    assert sorted(f for f in os.listdir(src) if f.endswith(".npz")) == \
+        ["b.npz", "w.npz"]
+    out = ckpt.restore(d, 3, tree)
+    np.testing.assert_array_equal(np.asarray(out["w"]), tree["w"])
+
+
+# ---------------------------------------------------------------------------
+# ResilientLoop: final save + restore fallback
+# ---------------------------------------------------------------------------
+
+class _Store:
+    """In-memory save/restore with call log."""
+
+    def __init__(self):
+        self.saved = {}
+        self.save_calls = []
+
+    def save(self, step, state):
+        self.saved = {"step": step, "state": state}
+        self.save_calls.append(step)
+
+    def restore(self):
+        if not self.saved:
+            raise FileNotFoundError("no checkpoint on disk")
+        return self.saved["step"], self.saved["state"]
+
+
+def test_final_state_saved_when_n_steps_not_multiple_of_save_every():
+    """7 steps with save_every=5 used to end with only step 5 on disk: a
+    crash after run() returned replayed steps 6-7.  The loop must save on
+    exit."""
+    store = _Store()
+    loop = ResilientLoop(step_fn=lambda s, b: s + 1, save_fn=store.save,
+                         restore_fn=store.restore,
+                         next_batch=lambda i: None, save_every=5)
+    step, state = loop.run(0, 0, 7)
+    assert (step, state) == (7, 7)
+    assert store.save_calls == [5, 7]
+    assert store.saved == {"step": 7, "state": 7}
+
+
+def test_no_double_save_on_aligned_exit():
+    store = _Store()
+    loop = ResilientLoop(step_fn=lambda s, b: s + 1, save_fn=store.save,
+                         restore_fn=store.restore,
+                         next_batch=lambda i: None, save_every=5)
+    loop.run(0, 0, 10)
+    assert store.save_calls == [5, 10]
+
+
+def test_zero_step_run_is_io_free():
+    """Resuming a job already at n_steps must not rewrite (and gc) the
+    existing checkpoint."""
+    store = _Store()
+    loop = ResilientLoop(step_fn=lambda s, b: s + 1, save_fn=store.save,
+                         restore_fn=store.restore,
+                         next_batch=lambda i: None, save_every=5)
+    assert loop.run(42, 7, 7) == (7, 42)
+    assert store.save_calls == []
+
+
+def test_failure_before_first_save_replays_from_initial_state():
+    """A transient failure at step 0 used to call restore_fn() with no
+    checkpoint on disk and crash; it must fall back to the caller's
+    (start_step, initial state) and replay."""
+    store = _Store()
+    boom = {"armed": True}
+
+    def step_fn(state, batch):
+        if boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("transient device error")
+        return state + 1
+
+    loop = ResilientLoop(step_fn=step_fn, save_fn=store.save,
+                         restore_fn=store.restore,
+                         next_batch=lambda i: None, save_every=100,
+                         backoff=0.0)
+    step, state = loop.run(0, 0, 3)
+    assert (step, state) == (3, 3)
+    assert loop.failures == 1
+    assert store.saved["step"] == 3          # final save still happens
+
+
+def test_failure_after_a_save_restores_from_checkpoint():
+    store = _Store()
+    fail_at = {"step": 6, "done": False}
+
+    def step_fn(state, batch):
+        if state == fail_at["step"] and not fail_at["done"]:
+            fail_at["done"] = True
+            raise RuntimeError("transient")
+        return state + 1
+
+    loop = ResilientLoop(step_fn=step_fn, save_fn=store.save,
+                         restore_fn=store.restore,
+                         next_batch=lambda i: None, save_every=5,
+                         backoff=0.0)
+    step, state = loop.run(0, 0, 8)
+    assert (step, state) == (8, 8)
+    assert store.save_calls[0] == 5 and store.save_calls[-1] == 8
+
+
+def test_corrupt_checkpoint_error_surfaces():
+    """Only a MISSING checkpoint falls back to the initial state; a
+    present-but-unreadable one (corruption, I/O hiccup) must raise, not
+    silently restart training from scratch."""
+    store = _Store()
+
+    def bad_restore():
+        raise ValueError("corrupt checkpoint: bad magic")
+
+    boom = {"armed": True}
+
+    def step_fn(state, batch):
+        if boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("transient")
+        return state + 1
+
+    loop = ResilientLoop(step_fn=step_fn, save_fn=store.save,
+                         restore_fn=bad_restore,
+                         next_batch=lambda i: None, save_every=100,
+                         backoff=0.0)
+    with pytest.raises(ValueError, match="corrupt checkpoint"):
+        loop.run(0, 0, 3)
+
+
+def test_persistent_failure_still_raises():
+    store = _Store()
+
+    def step_fn(state, batch):
+        raise RuntimeError("hard fault")
+
+    loop = ResilientLoop(step_fn=step_fn, save_fn=store.save,
+                         restore_fn=store.restore,
+                         next_batch=lambda i: None, save_every=5,
+                         max_retries=2, backoff=0.0,
+                         straggler=StragglerPolicy())
+    with pytest.raises(RuntimeError, match="hard fault"):
+        loop.run(0, 0, 3)

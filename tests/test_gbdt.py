@@ -96,6 +96,31 @@ def test_goss_federated_bit_identical_to_local():
                                   loc.predict_proba(X))
 
 
+def test_goss_zero_other_rate_is_top_only():
+    """Regression: ``other_rate=0`` used to force one rest sample with a
+    (1 - top_rate)/1e-12 ~ 1e12x amplification weight, silently corrupting
+    every g/h sum.  Top-only selection must return exactly the top set
+    with unit weights."""
+    from repro.core.goss import goss_sample
+    rng = np.random.default_rng(0)
+    g = rng.normal(0, 1, 50)
+    idx, w = goss_sample(g, top_rate=0.2, other_rate=0.0,
+                         rng=np.random.default_rng(1))
+    assert len(idx) == 10                       # top 20% of 50, nothing else
+    top = np.argsort(-np.abs(g), kind="stable")[:10]
+    np.testing.assert_array_equal(np.sort(idx), np.sort(top))
+    np.testing.assert_array_equal(w, np.ones(10))
+    # weighted selection sums equal the plain top-set sums (no blow-up)
+    assert np.isclose((g[idx] * w).sum(), g[top].sum())
+    # and training with other_rate=0 stays sane end to end
+    X, y = _data(n=200)
+    m = VerticalBoosting(SBTParams(n_trees=2, max_depth=3, goss=True,
+                                   top_rate=0.5, other_rate=0.0)).fit(
+        X[:, :3], y, [X[:, 3:]])
+    assert np.isfinite(m.train_score_).all()
+    assert _auc(m.predict_proba(X[:, :3], [X[:, 3:]]), y) > 0.6
+
+
 def test_goss_close_to_full():
     X, y = _data(n=800)
     full = VerticalBoosting(SBTParams(n_trees=8, max_depth=3)).fit(
@@ -182,6 +207,23 @@ def test_multiclass_gradients_computed_once_per_round():
     assert len(seen_scores) == 2
     # round-start pin: the first call sees the untouched init scores
     assert np.ptp(seen_scores[0], axis=0).max() == 0
+
+
+def test_refit_replaces_model():
+    """Regression: a second fit() used to APPEND n_trees more trees whose
+    splits were then decoded against the new fit's binning thresholds —
+    a silently doubled, silently wrong ensemble."""
+    X1, y1 = _data(n=200, seed=3)
+    X2, y2 = _data(n=250, seed=4)
+    m = VerticalBoosting(SBTParams(n_trees=2, max_depth=2, n_bins=8))
+    m.fit(X1[:, :3], y1, [X1[:, 3:]])
+    m.fit(X2[:, :3], y2, [X2[:, 3:]])
+    fresh = VerticalBoosting(SBTParams(n_trees=2, max_depth=2, n_bins=8))
+    fresh.fit(X2[:, :3], y2, [X2[:, 3:]])
+    assert len(m.trees) == 2
+    np.testing.assert_array_equal(m.predict_proba(X2[:, :3], [X2[:, 3:]]),
+                                  fresh.predict_proba(X2[:, :3], [X2[:, 3:]]))
+    assert m.channel.summary() == fresh.channel.summary()
 
 
 def test_channel_accounting_nonzero_and_structured():
