@@ -105,7 +105,73 @@ def main(quick: bool = False):
         if run is not None:
             run.close()
 
+    rows += _bench_resilience(params, Xg, Xh, y, ref, quick)
     emit(rows)
+    return rows
+
+
+def _bench_resilience(params, Xg, Xh, y, ref, quick: bool):
+    """Fault-tolerance rows (DESIGN.md §11):
+
+    * ``transport/resilient_overhead`` — the seq/retry/snapshot layer's
+      zero-fault cost: a resilient fit with NO faults injected, compared
+      against the plain fit wall-clock from the same process (must stay
+      within a few percent — the acceptance bound is 5%);
+    * ``transport/crash_recovery`` — wall-clock for a fit that takes one
+      deterministic mid-tree host kill, minus the fault-free fit: the
+      price of detect + respawn + resume, with bit-identity checked.
+    """
+    import os
+
+    from repro.runtime.chaos import RECV, FaultPlan, Kill
+
+    rows = []
+
+    def one_fit(fault: bool, resilient: bool):
+        base = tempfile.mkdtemp()
+        plans = {0: FaultPlan(rules=[Kill(tree=0, layer=1, direction=RECV)],
+                              seed=5)} if fault else None
+        run = MultiHostRun(params, [Xh], transport="socket",
+                           export_dir=os.path.join(base, "export"),
+                           state_dir=os.path.join(base, "state"),
+                           fault_plans=plans, timeout=300.0)
+        try:
+            t0 = time.perf_counter()
+            if resilient:
+                model = run.fit(Xg, y, resilient=True,
+                                ckpt_dir=os.path.join(base, "ckpt"),
+                                max_retries=5)
+            else:
+                model = run.fit(Xg, y)
+            dt = time.perf_counter() - t0
+            ident = bool(np.array_equal(model.train_score_,
+                                        ref.train_score_))
+            return dt, ident, run.restarts
+        finally:
+            run.close()
+
+    try:
+        t_plain, _, _ = one_fit(fault=False, resilient=False)
+        t_resil, ident, _ = one_fit(fault=False, resilient=True)
+        rows.append((
+            "transport/resilient_overhead",
+            t_resil * 1e6,
+            f"plain_us={t_plain * 1e6:.0f};"
+            f"overhead_pct={(t_resil / t_plain - 1) * 100:.1f};"
+            f"bit_identical={ident}"))
+
+        t_crash, ident, restarts = one_fit(fault=True, resilient=True)
+        rows.append((
+            "transport/crash_recovery",
+            t_crash * 1e6,
+            f"faultfree_us={t_resil * 1e6:.0f};"
+            f"recovery_cost_us={(t_crash - t_resil) * 1e6:.0f};"
+            f"restarts={restarts};bit_identical={ident}"))
+    except Exception as e:                       # noqa: BLE001
+        # resilience rows need real process spawning; report instead of
+        # failing the whole benchmark where sockets are unavailable
+        rows.append(("transport/resilient_overhead", 0.0,
+                     f"skipped={type(e).__name__}"))
     return rows
 
 

@@ -124,6 +124,24 @@ def restore(ckpt_dir: str, step: int, like, shardings=None):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def restore_any(ckpt_dir: str, step: int) -> dict:
+    """Structure-free restore: ``{leaf name: numpy array}`` with the
+    exact on-disk bytes.  ``restore`` routes leaves through
+    ``jnp.asarray``, which canonicalizes dtypes (float64 silently
+    truncates to float32 while x64 is off) — callers that need
+    bit-exact HOST-side state, like the resilient trainer's score
+    vector, must read through this instead."""
+    src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+    import ml_dtypes  # noqa: F401  (registers bfloat16 et al.)
+    out = {}
+    for m in manifest["leaves"]:
+        raw = np.load(os.path.join(src, m["name"] + ".npz"))["data"]
+        out[m["name"]] = raw.view(np.dtype(m["dtype"])).reshape(m["shape"])
+    return out
+
+
 def _gc(ckpt_dir: str, keep: int) -> None:
     steps = sorted([d for d in os.listdir(ckpt_dir) if d.startswith("step_")])
     for d in steps[:-keep]:

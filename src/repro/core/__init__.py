@@ -2,3 +2,4 @@
 
 from .boosting import LocalGBDT, SBTParams, VerticalBoosting  # noqa: F401
 from .frontier import CipherFrontier, FrontierState, GuestFrontier  # noqa: F401
+from .party import PartyUnavailable  # noqa: F401

@@ -92,8 +92,23 @@ class VerticalBoosting:
         self.remote_hosts: list | None = None
 
     # ------------------------------------------------------------------
+    # fit = begin_fit + boost_round per round + finish_fit.  The split
+    # exists for the fault-tolerant runtime (runtime/transport.py): each
+    # round is a resume boundary — ``boost_round`` is transactional
+    # (state is only committed once the whole round succeeded), so a
+    # faulted round can be replayed bit-identically from the boundary
+    # after ``rollback_to_round``.
     def fit(self, X_guest: np.ndarray, y: np.ndarray,
             X_hosts: list[np.ndarray]):
+        score = self.begin_fit(X_guest, y, X_hosts)
+        for t in range(self.params.n_trees):
+            score = self.boost_round(t, score)
+        return self.finish_fit(score)
+
+    def begin_fit(self, X_guest: np.ndarray, y: np.ndarray,
+                  X_hosts: list[np.ndarray]) -> np.ndarray:
+        """Reset model state, bin features, init the loss/cipher; returns
+        the initial score vector (the round-0 boundary state)."""
         p = self.params
         # a refit is a fresh model: without these resets a second fit()
         # appended n_trees more trees whose (fid, bid) splits were decoded
@@ -111,6 +126,7 @@ class VerticalBoosting:
                                        use_pallas=p.use_pallas)
                           for Xh in X_hosts]
         y = np.asarray(y, np.float64)
+        self._y = y
         n = len(y)
 
         if p.objective == "binary":
@@ -122,35 +138,73 @@ class VerticalBoosting:
             self.init_score = self._loss.init_score(y)
             score = np.tile(self.init_score, (n, 1))
 
-        cipher = get_cipher(p.cipher, **self._cipher_kwargs())
-        self.cipher = cipher
+        self.cipher = get_cipher(p.cipher, **self._cipher_kwargs())
+        self._n_parties = 1 + (len(self.remote_hosts)
+                               if self.remote_hosts is not None
+                               else len(X_hosts))
+        return score
 
-        n_parties = 1 + (len(self.remote_hosts)
-                         if self.remote_hosts is not None else len(X_hosts))
-        for t in range(p.n_trees):
-            t0 = time.perf_counter()
-            if p.objective == "multiclass":
-                # g/h are computed ONCE per round for all classes (the
-                # paper's default multiclass setting): recomputing inside
-                # the class loop trained class c+1 on scores already
-                # updated by class c's tree this round
-                g, h = self._loss.grad_hess(y, score)
-                for c in range(p.n_classes):
-                    tree, leaf_rows = self._grow(
-                        cipher, g[:, c], h[:, c], t,
-                        mix_party=self._mix_party(t, n_parties))
-                    self.trees.append(tree)
-                    self.tree_class.append(c)
-                    self._apply(score, tree, leaf_rows, cls=c)
-            else:
-                g, h = self._loss.grad_hess(y, score)
+    @property
+    def trees_per_round(self) -> int:
+        """Trees one ``boost_round`` appends (the resume-boundary unit)."""
+        return (self.params.n_classes
+                if self.params.objective == "multiclass" else 1)
+
+    def boost_round(self, t: int, score: np.ndarray) -> np.ndarray:
+        """Grow round ``t``'s tree(s) and return the updated score.
+
+        Transactional against ``score`` and the model: the input score is
+        never mutated and trees are appended only after every tree of the
+        round finished — a mid-round fault leaves both exactly at the
+        round boundary, and the randomness streams (GOSS, host shuffles)
+        are keyed by the ABSOLUTE tree index, so a replay regrows
+        bit-identical trees."""
+        p = self.params
+        if len(self.trees) != t * self.trees_per_round:
+            raise RuntimeError(
+                f"boost_round({t}) expects {t * self.trees_per_round} "
+                f"trees, model has {len(self.trees)} — rollback_to_round "
+                f"first")
+        score = np.array(score, np.float64, copy=True)
+        y = self._y
+        t0 = time.perf_counter()
+        grown = []
+        if p.objective == "multiclass":
+            # g/h are computed ONCE per round for all classes (the
+            # paper's default multiclass setting): recomputing inside
+            # the class loop trained class c+1 on scores already
+            # updated by class c's tree this round
+            g, h = self._loss.grad_hess(y, score)
+            for c in range(p.n_classes):
                 tree, leaf_rows = self._grow(
-                    cipher, g, h, t,
-                    mix_party=self._mix_party(t, n_parties))
-                self.trees.append(tree)
-                self.tree_class.append(-1)
-                self._apply(score, tree, leaf_rows)
-            self.stats.tree_seconds.append(time.perf_counter() - t0)
+                    self.cipher, g[:, c], h[:, c], t,
+                    mix_party=self._mix_party(t, self._n_parties),
+                    tree_idx=t * p.n_classes + c)
+                grown.append((tree, c, leaf_rows))
+        else:
+            g, h = self._loss.grad_hess(y, score)
+            tree, leaf_rows = self._grow(
+                self.cipher, g, h, t,
+                mix_party=self._mix_party(t, self._n_parties),
+                tree_idx=t)
+            grown.append((tree, -1, leaf_rows))
+        for tree, cls, leaf_rows in grown:
+            self.trees.append(tree)
+            self.tree_class.append(cls)
+            self._apply(score, tree, leaf_rows, cls=cls)
+        self.stats.tree_seconds.append(time.perf_counter() - t0)
+        return score
+
+    def rollback_to_round(self, t: int) -> None:
+        """Truncate the model to the round-``t`` boundary (replay)."""
+        keep = t * self.trees_per_round
+        del self.trees[keep:]
+        del self.tree_class[keep:]
+        del self.stats.tree_seconds[t:]
+        self._predictor = None
+        self._predictor_n_trees = -1
+
+    def finish_fit(self, score: np.ndarray):
         self.train_score_ = score
         return self
 
@@ -164,16 +218,22 @@ class VerticalBoosting:
         return cycle % n_parties        # 0 = guest, 1.. = host id + 1
 
     # ------------------------------------------------------------------
-    def _grow(self, cipher, g, h, t: int, mix_party=None) -> tuple:
+    def _grow(self, cipher, g, h, t: int, mix_party=None,
+              tree_idx: int | None = None) -> tuple:
         p = self.params
         n = g.shape[0]
+        # the ABSOLUTE index of the tree being grown.  Passed explicitly
+        # by boost_round because the round commits its trees only at the
+        # end (transactional replay), so len(self.trees) lags mid-round.
+        if tree_idx is None:
+            tree_idx = len(self.trees)
         if p.goss:
             # dedicated per-tree stream keyed by the GLOBAL tree counter:
             # host split-info shuffling must not perturb GOSS sampling (or
             # federated != local under GOSS), and a per-round key would
             # hand every class tree of a multiclass round the identical
             # subsample of the rest set
-            goss_rng = np.random.default_rng((p.seed, len(self.trees), 17))
+            goss_rng = np.random.default_rng((p.seed, tree_idx, 17))
             sel, w = goss_sample(g, p.top_rate, p.other_rate, goss_rng)
             g = g.copy(); h = h.copy()
             if g.ndim == 1:
@@ -196,7 +256,7 @@ class VerticalBoosting:
         ctx = TreeContext(params=p, cipher=cipher, codec=codec,
                           channel=self.channel, stats=self.stats,
                           guest_data=self.guest_data, g=g, h=h, sel_rows=sel,
-                          hosts=hosts, tree_idx=len(self.trees))
+                          hosts=hosts, tree_idx=tree_idx)
         schedule = self._schedule(mix_party, len(hosts))
         return grow_tree(ctx, schedule)
 

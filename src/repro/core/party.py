@@ -18,6 +18,21 @@ import collections
 import dataclasses
 
 
+class PartyUnavailable(RuntimeError):
+    """A remote party failed to answer within its serving deadline.
+
+    Raised per *batch* by the serving path (never a hang, never a
+    partial-bits answer): the caller may retry the batch once the party
+    reconnects.  Defined here — not in ``runtime/`` — because the serving
+    engine must be able to raise/catch it without importing the transport
+    layer (``serving`` has no runtime dependency)."""
+
+    def __init__(self, party: str, reason: str = ""):
+        self.party = party
+        super().__init__(f"party {party} unavailable"
+                         + (f": {reason}" if reason else ""))
+
+
 def ct_wire_bytes(cipher) -> int:
     """Bytes one ciphertext occupies on the wire."""
     if cipher.backend == "limb":
@@ -118,6 +133,29 @@ class Channel:
         self.coll_ledger.append((party, kind, int(nbytes)))
         self.coll_totals[kind] += int(nbytes)
         self.coll_msgs[kind] += 1
+
+    def snapshot(self) -> dict:
+        """Accounting state at a resume boundary (tree/round edge).
+
+        Together with :meth:`restore` this is what lets a faulted run
+        replay a boosting round and still end with a ledger identical to
+        the fault-free oracle: the aborted attempt's entries are rolled
+        back, the replay records them fresh (duplicates counted once)."""
+        return {"n_ledger": len(self.ledger),
+                "totals": self.totals.copy(),
+                "msgs": self.msgs.copy(),
+                "n_coll": len(self.coll_ledger),
+                "coll_totals": self.coll_totals.copy(),
+                "coll_msgs": self.coll_msgs.copy()}
+
+    def restore(self, snap: dict) -> None:
+        """Roll the accounting back to a :meth:`snapshot`."""
+        del self.ledger[snap["n_ledger"]:]
+        self.totals = snap["totals"].copy()
+        self.msgs = snap["msgs"].copy()
+        del self.coll_ledger[snap["n_coll"]:]
+        self.coll_totals = snap["coll_totals"].copy()
+        self.coll_msgs = snap["coll_msgs"].copy()
 
     def reset_accounting(self) -> None:
         """Zero every ledger/counter.  A long-lived channel (the

@@ -196,6 +196,21 @@ class FederatedTree:
         return {"party": party, "left": left, "right": right,
                 "depth": depth, "fid": fid, "bid": bid, "weight": weight}
 
+    def signature(self) -> tuple:
+        """Hashable, exact digest of the tree: structure, guest splits,
+        host shuffled split ids, and the raw float64 leaf-weight bits.
+        Two trees are bit-identical iff their signatures are equal — the
+        equality the fault-tolerant runtime's replay guarantee is stated
+        in (a resumed run must produce THIS tuple, not merely a close
+        one), and what the chaos suite asserts against the fault-free
+        oracle."""
+        return tuple(
+            (nd.nid, nd.depth, nd.party, nd.fid, nd.bid, nd.sid,
+             nd.left, nd.right,
+             None if nd.weight is None else
+             np.asarray(nd.weight, np.float64).tobytes())
+            for nd in self.nodes)
+
 
 @dataclasses.dataclass
 class HostRuntime:

@@ -1,6 +1,9 @@
+from .chaos import (Corrupt, Delay, DropConn, FaultPlan,  # noqa: F401
+                    FaultyEndpoint, Kill, Truncate, Wedge)
 from .fault import (Heartbeat, ResilientLoop, StragglerError,  # noqa: F401
                     StragglerPolicy)
 from .transport import (LoopbackEndpoint, MultiHostRun,  # noqa: F401
-                        PartyProcess, RemoteHostHandle, RemoteServingHost,
-                        SocketEndpoint, TransportChannel, TransportError,
-                        decode_payload, encode_payload, host_main)
+                        PartyProcess, PeerRestarted, RemoteHostHandle,
+                        RemoteServingHost, SocketEndpoint, TransportChannel,
+                        TransportError, decode_payload, encode_payload,
+                        host_main)

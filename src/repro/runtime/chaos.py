@@ -1,0 +1,208 @@
+"""Deterministic fault injection for the party runtime (DESIGN.md §11).
+
+A :class:`FaultPlan` is a seeded, picklable schedule of faults; a
+:class:`FaultyEndpoint` wraps a real endpoint (socket or loopback) and
+applies the plan to the frames flowing through it.  Determinism is the
+point: every fault fires at an exact (direction, tag, nth-occurrence) —
+or (tree, layer) — coordinate, so a chaos test that fails replays
+byte-for-byte under the same plan and seed.
+
+Fault vocabulary (each rule fires ONCE, at its coordinate):
+
+* :class:`Delay` — sleep before forwarding the frame (straggler).
+* :class:`DropConn` — close the underlying transport and raise, as if the
+  TCP connection died mid-protocol.  The host re-dials, the guest
+  re-accepts, and the resilient loop replays the tree.
+* :class:`Corrupt` — flip bytes in the frame body (seeded positions): the
+  receiver's codec must answer with ``TransportError``, never garbage.
+* :class:`Truncate` — forward only a prefix of the frame (framing stays
+  consistent: the length prefix describes the truncated body, so this
+  exercises payload decoding, not a wedged ``_read_exact``).
+* :class:`Kill` — ``os._exit`` the process (host crash).  Coordinates may
+  be (tag, nth) or (tree, layer): trees are counted by ``enc_gh`` frames
+  seen, layers by ``assign_sync`` frames since the last ``enc_gh``.
+* :class:`Wedge` — stop forwarding and sleep forever (a hung peer, NOT a
+  dead one: the process stays alive and stops answering heartbeats —
+  what the liveness supervisor exists to catch).  With
+  ``ignore_sigterm`` the process also traps SIGTERM, which is the
+  zombie-escalation scenario ``MultiHostRun.close`` must SIGKILL out of.
+
+Faults never bypass accounting invariants: they perturb the WIRE, and
+the retry/replay machinery must bring the run back to the fault-free
+fixed point (bit-identical model, converged per-tag ledgers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import random
+import time
+
+from .transport import TransportError, peek_frame_header
+
+SEND, RECV = "send", "recv"
+
+
+@dataclasses.dataclass
+class Rule:
+    """Base coordinate: fire on the ``nth`` (1-based) frame with ``tag``
+    moving in ``direction`` through the endpoint; or, for rules that
+    support it, at a (tree, layer) point."""
+    tag: str = ""
+    nth: int = 1
+    direction: str = RECV
+    tree: int | None = None
+    layer: int | None = None
+
+    def matches(self, direction: str, tag: str, count: int,
+                tree: int, layer: int) -> bool:
+        if self.tree is not None:
+            return (direction == self.direction and tree == self.tree
+                    and (self.layer is None or layer == self.layer)
+                    and (not self.tag or tag == self.tag))
+        return (direction == self.direction and tag == self.tag
+                and count == self.nth)
+
+
+@dataclasses.dataclass
+class Delay(Rule):
+    seconds: float = 0.05
+
+
+@dataclasses.dataclass
+class DropConn(Rule):
+    pass
+
+
+@dataclasses.dataclass
+class Corrupt(Rule):
+    n_flips: int = 4
+
+
+@dataclasses.dataclass
+class Truncate(Rule):
+    keep_fraction: float = 0.5
+
+
+@dataclasses.dataclass
+class Kill(Rule):
+    exit_code: int = 13
+
+
+@dataclasses.dataclass
+class Wedge(Rule):
+    ignore_sigterm: bool = False
+    sleep_seconds: float = 3600.0
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """A seeded list of one-shot fault rules.
+
+    Picklable (it crosses the multiprocessing spawn boundary into host
+    processes) and stateless until :meth:`fresh` is called in the target
+    process — the returned copy owns the runtime counters, so the same
+    plan object can parameterize any number of runs."""
+    rules: list = dataclasses.field(default_factory=list)
+    seed: int = 0
+
+    def fresh(self) -> "FaultPlan":
+        plan = FaultPlan(rules=[dataclasses.replace(r) for r in self.rules],
+                        seed=self.seed)
+        plan._armed = list(plan.rules)
+        plan._rng = random.Random(plan.seed)
+        return plan
+
+    def pick(self, direction: str, tag: str, count: int, tree: int,
+             layer: int):
+        """Pop and return the first armed rule matching this frame."""
+        for i, r in enumerate(getattr(self, "_armed", ())):
+            if r.matches(direction, tag, count, tree, layer):
+                return self._armed.pop(i)
+        return None
+
+
+class FaultyEndpoint:
+    """Endpoint wrapper that applies a :class:`FaultPlan`.
+
+    Tracks per-(direction, tag) occurrence counters and the protocol
+    position (tree = ``enc_gh`` frames seen on recv, layer =
+    ``assign_sync`` frames since) by peeking frame HEADERS only — chaos
+    must not pay a payload decode that changes the very timing it
+    perturbs.  ``dead`` / ``close`` semantics delegate to the wrapped
+    endpoint, so the retry and reconnect machinery sees a FaultyEndpoint
+    exactly as it sees a bare one.
+    """
+
+    def __init__(self, ep, plan: FaultPlan):
+        self.ep = ep
+        self.plan = plan if hasattr(plan, "_armed") else plan.fresh()
+        self.counts: dict = {}          # (direction, tag) -> frames seen
+        self.tree = -1                  # enc_gh frames observed - 1
+        self.layer = -1                 # assign_sync since last enc_gh - 1
+        self.injected: list = []        # (rule class name, tag, count)
+
+    # -- bookkeeping ----------------------------------------------------
+    def _observe(self, direction: str, frame: bytes) -> tuple:
+        try:
+            _, _, _, tag, _ = peek_frame_header(frame)
+        except Exception:               # noqa: BLE001 -- already-corrupt
+            tag = "?"                   # frame: count it, match nothing
+        key = (direction, tag)
+        self.counts[key] = self.counts.get(key, 0) + 1
+        if tag == "enc_gh":
+            self.tree += 1
+            self.layer = -1
+        elif tag == "assign_sync":
+            self.layer += 1
+        return tag, self.counts[key]
+
+    def _apply(self, direction: str, frame: bytes) -> bytes:
+        tag, count = self._observe(direction, frame)
+        rule = self.plan.pick(direction, tag, count, self.tree, self.layer)
+        if rule is None:
+            return frame
+        self.injected.append((type(rule).__name__, tag, count))
+        if isinstance(rule, Delay):
+            time.sleep(rule.seconds)
+            return frame
+        if isinstance(rule, DropConn):
+            self.ep.close()
+            raise TransportError(
+                f"chaos: dropped connection at {direction} {tag}#{count}")
+        if isinstance(rule, Corrupt):
+            body = bytearray(frame)
+            rng = self.plan._rng
+            for _ in range(rule.n_flips):
+                body[rng.randrange(len(body))] ^= 1 << rng.randrange(8)
+            return bytes(body)
+        if isinstance(rule, Truncate):
+            keep = max(1, int(len(frame) * rule.keep_fraction))
+            return frame[:keep]
+        if isinstance(rule, Kill):
+            os._exit(rule.exit_code)    # a crash does not say goodbye
+        if isinstance(rule, Wedge):
+            if rule.ignore_sigterm:
+                import signal
+                signal.signal(signal.SIGTERM, signal.SIG_IGN)
+            time.sleep(rule.sleep_seconds)
+            raise TransportError("chaos: wedge expired")
+        raise TransportError(f"chaos: unknown rule {type(rule).__name__}")
+
+    # -- endpoint surface -----------------------------------------------
+    @property
+    def dead(self) -> bool:
+        return getattr(self.ep, "dead", False)
+
+    def send_bytes(self, frame: bytes) -> None:
+        self.ep.send_bytes(self._apply(SEND, frame))
+
+    def recv_bytes(self, timeout: float | None = None) -> bytes:
+        return self._apply(RECV, self.ep.recv_bytes(timeout))
+
+    def poll(self) -> bool:
+        return self.ep.poll()
+
+    def close(self) -> None:
+        self.ep.close()

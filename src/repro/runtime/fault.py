@@ -87,6 +87,19 @@ class StragglerPolicy:
                 self.strikes = max(0, self.strikes - 1)
         self.times.append(step_seconds)
 
+    def check(self, step_seconds: float) -> bool:
+        """Non-raising :meth:`observe`: True once the peer is degraded.
+
+        The federated runtime's supervisor uses this form — a SLOW host
+        is *marked*, never restarted (restarting loses real tree
+        progress for zero correctness gain; only a WEDGED host, one that
+        stops answering heartbeats entirely, gets restarted)."""
+        try:
+            self.observe(step_seconds)
+            return False
+        except StragglerError:
+            return True
+
 
 class ResilientLoop:
     """step_fn(state, batch) -> state; save_fn(step, state); restore_fn()

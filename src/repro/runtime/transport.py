@@ -38,8 +38,10 @@ with identical per-tag ledgers and round-trip counts (asserted in
 from __future__ import annotations
 
 import os
+import random as _random
 import socket as _socket
 import struct
+import threading
 import time
 from collections import Counter, deque
 
@@ -58,6 +60,27 @@ _F64 = struct.Struct("!d")
 
 class TransportError(RuntimeError):
     pass
+
+
+class PeerRestarted(TransportError):
+    """A lost peer was re-acquired (respawned or re-dialed), but its
+    protocol state for the in-flight unit of work is gone: the caller
+    must replay from the last resume boundary (the per-tree snapshot),
+    not retry the failed frame."""
+
+
+class RemoteError(TransportError):
+    """The peer ANSWERED — with an application-level error frame.  The
+    peer is alive and the connection is fine, so this must bypass both
+    the retry/reconnect ladder (retrying a deterministic protocol error
+    loops forever) and the serving-mode ``PartyUnavailable`` conversion
+    (an answering party is not an unavailable one)."""
+
+
+# one frame may legitimately carry a whole ciphertext batch, but a frame
+# claiming more than this is a corrupt/hostile length prefix — refusing
+# it bounds what a single bad u32 can make us allocate
+MAX_FRAME_BYTES = 1 << 30
 
 
 # ---------------------------------------------------------------------------
@@ -204,13 +227,18 @@ def _decode(r: _Reader):
         return {_decode(r): _decode(r) for _ in range(r.u32())}
     if t == b"a":
         dtype = np.dtype(r.string())
-        shape = tuple(r.i64() for _ in range(r.take(1)[0]))
+        shape = _shape(r)
         n = int(np.prod(shape, dtype=np.int64)) if shape else 1
         arr = np.frombuffer(r.take(n * dtype.itemsize), dtype=dtype)
         return arr.reshape(shape).copy()
     if t == b"O":
-        shape = tuple(r.i64() for _ in range(r.take(1)[0]))
+        shape = _shape(r)
         n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        # each bigint needs >= 6 encoded bytes: bound the object-array
+        # allocation by what the buffer could possibly hold BEFORE
+        # np.empty, or a forged shape header allocates n*8 bytes for free
+        if n * 6 > len(r.buf) - r.pos:
+            raise TransportError("object-array shape exceeds payload")
         arr = np.empty(n, dtype=object)
         for i in range(n):
             arr[i] = r.bigint()
@@ -218,9 +246,26 @@ def _decode(r: _Reader):
     raise TransportError(f"bad payload type byte {t!r}")
 
 
+def _shape(r: _Reader) -> tuple:
+    shape = tuple(r.i64() for _ in range(r.take(1)[0]))
+    if any(d < 0 for d in shape) \
+            or int(np.prod(shape, dtype=np.float64)) > 2 ** 62:
+        raise TransportError(f"bad array shape {shape}")
+    return shape
+
+
 def decode_payload(buf: bytes):
     r = _Reader(buf)
-    obj = _decode(r)
+    try:
+        obj = _decode(r)
+    except TransportError:
+        raise
+    except Exception as e:          # noqa: BLE001 -- fuzz contract: any
+        # malformed byte stream (bad dtype string, non-utf8, numpy/struct
+        # refusals) surfaces as TransportError, never as a random
+        # internal exception the framing layer can't classify
+        raise TransportError(f"malformed payload: "
+                             f"{type(e).__name__}: {e}") from e
     if r.pos != len(buf):
         raise TransportError("trailing bytes in payload")
     return obj
@@ -231,11 +276,13 @@ def decode_payload(buf: bytes):
 # ---------------------------------------------------------------------------
 
 def encode_frame(kind: int, src: str, dst: str, tag: str, nbytes: int,
-                 payload, payload_bytes: bytes | None = None) -> bytes:
+                 payload, payload_bytes: bytes | None = None,
+                 seq: int = 0) -> bytes:
     out = bytearray([kind])
     _enc_str(out, src)
     _enc_str(out, dst)
     _enc_str(out, tag)
+    out += _I64.pack(int(seq))
     out += _I64.pack(int(nbytes))
     out += (payload_bytes if payload_bytes is not None
             else encode_payload(payload))
@@ -244,11 +291,31 @@ def encode_frame(kind: int, src: str, dst: str, tag: str, nbytes: int,
 
 def decode_frame(buf: bytes) -> tuple:
     r = _Reader(buf)
+    try:
+        kind = r.take(1)[0]
+        if kind not in (KIND_PROTO, KIND_CTRL):
+            raise TransportError(f"bad frame kind byte {kind}")
+        src, dst, tag = r.string(), r.string(), r.string()
+        seq = r.i64()
+        nbytes = r.i64()
+    except TransportError:
+        raise
+    except Exception as e:          # noqa: BLE001
+        raise TransportError(f"malformed frame header: "
+                             f"{type(e).__name__}: {e}") from e
+    payload = decode_payload(buf[r.pos:])
+    return kind, src, dst, tag, seq, nbytes, payload
+
+
+def peek_frame_header(buf: bytes) -> tuple:
+    """(kind, src, dst, tag, seq) without touching the payload — what the
+    fault-injection layer matches rules against (decoding a multi-MB
+    ciphertext batch just to learn its tag would make chaos mode alter
+    the timing it is trying to perturb)."""
+    r = _Reader(buf)
     kind = r.take(1)[0]
     src, dst, tag = r.string(), r.string(), r.string()
-    nbytes = r.i64()
-    payload = decode_payload(buf[r.pos:])
-    return kind, src, dst, tag, nbytes, payload
+    return kind, src, dst, tag, r.i64()
 
 
 class SocketEndpoint:
@@ -258,28 +325,59 @@ class SocketEndpoint:
     def __init__(self, sock: _socket.socket):
         sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
         self.sock = sock
+        self.dead = False
 
     def send_bytes(self, frame: bytes) -> None:
-        self.sock.sendall(_U32.pack(len(frame)) + frame)
+        if self.dead:
+            raise TransportError("endpoint is dead (mid-frame timeout): "
+                                 "reconnect before sending")
+        try:
+            self.sock.sendall(_U32.pack(len(frame)) + frame)
+        except OSError as e:
+            raise TransportError(f"send failed: {e}") from e
 
     def _read_exact(self, n: int) -> bytes:
         buf = bytearray(n)
         view = memoryview(buf)
         got = 0
         while got < n:
-            r = self.sock.recv_into(view[got:], n - got)
+            try:
+                r = self.sock.recv_into(view[got:], n - got)
+            except _socket.timeout:
+                raise
+            except OSError as e:
+                raise TransportError(f"recv failed: {e}") from e
             if r == 0:
                 raise TransportError("peer closed the connection")
             got += r
         return bytes(buf)
 
     def recv_bytes(self, timeout: float | None = None) -> bytes:
-        self.sock.settimeout(timeout)
+        if self.dead:
+            raise TransportError("endpoint is dead (mid-frame timeout): "
+                                 "reconnect before receiving")
+        try:
+            self.sock.settimeout(timeout)
+        except OSError as e:        # closed under us (chaos / supervisor)
+            raise TransportError(f"recv failed: {e}") from e
         try:
             n = _U32.unpack(self._read_exact(4))[0]
+            if n > MAX_FRAME_BYTES:
+                self.dead = True            # prefix is garbage: framing lost
+                self.close()
+                raise TransportError(f"frame length {n} exceeds "
+                                     f"{MAX_FRAME_BYTES} (corrupt prefix)")
             return self._read_exact(n)
         except _socket.timeout as e:
-            raise TransportError(f"recv timed out after {timeout}s") from e
+            # the timeout may have fired AFTER the length prefix (or part
+            # of the body) was consumed: the stream is mid-frame, and the
+            # next recv would decode body bytes as a length prefix.  A
+            # timed-out endpoint is dead — callers must reconnect.
+            self.dead = True
+            self.close()
+            raise TransportError(f"recv timed out after {timeout}s "
+                                 f"(endpoint closed: stream may be "
+                                 f"mid-frame)") from e
 
     def poll(self) -> bool:
         import select
@@ -348,27 +446,81 @@ class TransportChannel(Channel):
     transport benchmark reports.
     """
 
-    def __init__(self, party: str, peers: dict, timeout: float = 600.0):
+    def __init__(self, party: str, peers: dict, timeout: float = 600.0,
+                 max_retries: int = 2, retry_backoff: float = 0.05):
         super().__init__()
         self.party = party
         self.peers = peers
         self.timeout = timeout
+        self.max_retries = max_retries
+        self.retry_backoff = retry_backoff
         self.tx_bytes = Counter()       # tag -> framed bytes shipped
         self.rx_bytes = Counter()       # tag -> framed bytes received
         self._enc_memo = (object(), b"")    # one-slot broadcast memo
                                             # (sentinel: matches nothing)
+        # sequence numbers: every PROTOCOL frame carries a per-(peer, tag)
+        # seq so the receiver can count retransmitted/replayed frames in
+        # its mirrored ledger exactly once (DESIGN.md §11)
+        self.send_seq = Counter()       # (dst, tag) -> last seq sent
+        self.last_seen = Counter()      # (src, tag) -> last seq mirrored
+        # reconnect hook: called with the peer name after a failed
+        # send/recv; reestablishes the endpoint (guest: accept+respawn —
+        # raises PeerRestarted to force a tree replay; host: re-dial —
+        # returns, and the retried op resumes against the new socket)
+        self.reconnect = None
+        self.on_rtt = None              # (peer, tag, seconds) per recv
+        self.on_ctrl = None             # skim hook for async control
+                                        # frames (supervisor hb_ack)
+        self.serving_mode = False       # typed PartyUnavailable errors
+        self._send_locks: dict = {}     # per-peer: supervisor thread pings
+                                        # must not interleave frame bytes
+                                        # with training-thread sends
+        self._jitter = _random.Random(len(party) * 2654435761 + 17)
+
+    def _send_lock(self, dst: str):
+        lock = self._send_locks.get(dst)
+        if lock is None:
+            lock = self._send_locks[dst] = threading.Lock()
+        return lock
+
+    # -- retry ----------------------------------------------------------
+    def _with_retry(self, op, peer: str):
+        """Run ``op`` with exponential backoff + jitter; between attempts
+        let the reconnect hook reestablish the peer's endpoint."""
+        delay = self.retry_backoff
+        for attempt in range(self.max_retries + 1):
+            try:
+                return op()
+            except (PeerRestarted, RemoteError):
+                raise               # replay / surface: never blind-retry
+            except TransportError as e:
+                if self.serving_mode and peer.startswith("host"):
+                    from ..core.party import PartyUnavailable
+                    raise PartyUnavailable(peer, str(e)) from e
+                if attempt == self.max_retries:
+                    raise
+                if self.reconnect is not None:
+                    self.reconnect(peer)    # may raise PeerRestarted
+                time.sleep(delay + self._jitter.uniform(0.0, delay / 2))
+                delay *= 2
 
     # -- outgoing -------------------------------------------------------
     def send(self, src: str, dst: str, tag: str, payload, nbytes: int):
         super().send(src, dst, tag, payload, nbytes)
         if dst != self.party:
-            self._ship(KIND_PROTO, src, dst, tag, nbytes, payload)
+            self.send_seq[(dst, tag)] += 1
+            seq = self.send_seq[(dst, tag)]
+            self._with_retry(
+                lambda: self._ship(KIND_PROTO, src, dst, tag, nbytes,
+                                   payload, seq), dst)
         return payload
 
     def control_send(self, dst: str, tag: str, payload) -> None:
-        self._ship(KIND_CTRL, self.party, dst, tag, 0, payload)
+        self._with_retry(
+            lambda: self._ship(KIND_CTRL, self.party, dst, tag, 0, payload),
+            dst)
 
-    def _ship(self, kind, src, dst, tag, nbytes, payload) -> None:
+    def _ship(self, kind, src, dst, tag, nbytes, payload, seq=0) -> None:
         ep = self.peers.get(dst)
         if ep is None:
             raise TransportError(f"{self.party}: no endpoint for {dst!r}")
@@ -381,34 +533,61 @@ class TransportChannel(Channel):
             payload_bytes = encode_payload(payload)
             self._enc_memo = (payload, payload_bytes)
         frame = encode_frame(kind, src, dst, tag, nbytes, None,
-                             payload_bytes=payload_bytes)
+                             payload_bytes=payload_bytes, seq=seq)
+        with self._send_lock(dst):
+            ep.send_bytes(frame)
         self.tx_bytes[tag] += len(frame) + 4        # + length prefix
-        ep.send_bytes(frame)
+        # a retried send re-enters here through peers[dst] (possibly a
+        # fresh endpoint) with the SAME seq: the receiver dedupes
 
     # -- incoming -------------------------------------------------------
     def _read(self, src: str, timeout: float | None = None):
-        ep = self.peers.get(src)
-        if ep is None:
-            raise TransportError(f"{self.party}: no endpoint for {src!r}")
-        frame = ep.recv_bytes(self.timeout if timeout is None else timeout)
-        kind, fsrc, fdst, tag, nbytes, payload = decode_frame(frame)
-        self.rx_bytes[tag] += len(frame) + 4
-        if kind == KIND_CTRL and tag == "error":
-            # a peer's dying words: surface its actual failure instead of
-            # a tag mismatch now / 'peer closed' later
-            raise TransportError(f"peer {fsrc} failed: {payload}")
-        if kind == KIND_PROTO:
-            # mirror the sender's ledger entry (analytic nbytes travels in
-            # the frame header) so each side's per-tag totals converge to
-            # the in-process shared ledger
-            Channel.send(self, fsrc, fdst, tag, payload, nbytes)
-        return kind, fsrc, fdst, tag, payload
+        def op():
+            return self._read_once(src, timeout)
+        return self._with_retry(op, src)
 
-    def recv(self, src: str, tag: str):
+    def _read_once(self, src: str, timeout: float | None = None):
+        while True:
+            ep = self.peers.get(src)
+            if ep is None:
+                raise TransportError(f"{self.party}: no endpoint for "
+                                     f"{src!r}")
+            t0 = time.perf_counter()
+            frame = ep.recv_bytes(self.timeout if timeout is None
+                                  else timeout)
+            kind, fsrc, fdst, tag, seq, nbytes, payload = \
+                decode_frame(frame)
+            self.rx_bytes[tag] += len(frame) + 4
+            if self.on_rtt is not None and kind == KIND_PROTO:
+                self.on_rtt(fsrc, tag, time.perf_counter() - t0)
+            if kind == KIND_CTRL and tag == "error":
+                # a peer's dying words: surface its actual failure instead
+                # of a tag mismatch now / 'peer closed' later
+                raise RemoteError(f"peer {fsrc} failed: {payload}")
+            if kind == KIND_CTRL and self.on_ctrl is not None \
+                    and self.on_ctrl(fsrc, tag, payload):
+                continue            # skimmed (liveness ack): not ours
+            if kind == KIND_PROTO:
+                if seq <= self.last_seen[(fsrc, tag)]:
+                    # retransmission of a frame already mirrored.  Counted
+                    # once; and — except for enc_gh, the idempotent tree
+                    # replay anchor — not re-delivered either, or a
+                    # duplicated chosen_sid would corrupt the frontier.
+                    if tag != "enc_gh":
+                        continue
+                else:
+                    self.last_seen[(fsrc, tag)] = seq
+                    # mirror the sender's ledger entry (analytic nbytes
+                    # travels in the frame header) so each side's per-tag
+                    # totals converge to the in-process shared ledger
+                    Channel.send(self, fsrc, fdst, tag, payload, nbytes)
+            return kind, fsrc, fdst, tag, payload
+
+    def recv(self, src: str, tag: str, timeout: float | None = None):
         """Blocking receive of one PROTOCOL frame from ``src``; the tag
         must match (the protocol is strict request/reply — anything else
         is a desync worth crashing on)."""
-        kind, _, _, ftag, payload = self._read(src)
+        kind, _, _, ftag, payload = self._read(src, timeout)
         if kind != KIND_PROTO or ftag != tag:
             raise TransportError(f"{self.party}: expected protocol frame "
                                  f"{tag!r} from {src}, got "
@@ -435,11 +614,77 @@ class TransportChannel(Channel):
             return None
         return self.recv_any(src)
 
+    # -- resume boundaries ---------------------------------------------
+    def snapshot(self) -> dict:
+        """Accounting + sequence state at a tree boundary.  Restoring
+        rolls BOTH back, so a replayed tree re-sends frames with the same
+        seqs (the peer, also rolled back, counts them fresh) — ledgers
+        converge to the fault-free oracle.  ``tx_bytes``/``rx_bytes`` are
+        deliberately NOT rolled back: they count what the socket really
+        moved, retries included (that gap IS the cost of the fault)."""
+        snap = super().snapshot()
+        snap["send_seq"] = self.send_seq.copy()
+        snap["last_seen"] = self.last_seen.copy()
+        return snap
+
+    def restore(self, snap: dict) -> None:
+        super().restore(snap)
+        self.send_seq = snap["send_seq"].copy()
+        self.last_seen = snap["last_seen"].copy()
+
+    def state_dump(self) -> dict:
+        """The channel state a party must persist to rejoin a run after
+        a process death: full ledger + seq counters, codec-serializable
+        (tuple keys survive the payload codec round-trip)."""
+        return {"ledger": [tuple(e) for e in self.ledger],
+                "totals": dict(self.totals), "msgs": dict(self.msgs),
+                "coll_ledger": [tuple(e) for e in self.coll_ledger],
+                "coll_totals": dict(self.coll_totals),
+                "coll_msgs": dict(self.coll_msgs),
+                "send_seq": dict(self.send_seq),
+                "last_seen": dict(self.last_seen)}
+
+    def state_load(self, d: dict) -> None:
+        self.ledger = [tuple(e) for e in d["ledger"]]
+        self.totals = Counter(d["totals"])
+        self.msgs = Counter(d["msgs"])
+        self.coll_ledger = [tuple(e) for e in d["coll_ledger"]]
+        self.coll_totals = Counter(d["coll_totals"])
+        self.coll_msgs = Counter(d["coll_msgs"])
+        self.send_seq = Counter(d["send_seq"])
+        self.last_seen = Counter(d["last_seen"])
+
+    def drain(self, src: str, until_ctrl: str | None = None,
+              timeout: float = 1.0) -> int:
+        """Discard pending frames from ``src`` WITHOUT mirroring them —
+        the aborted attempt's in-flight replies; the rolled-back snapshot
+        already forgot their sends.  With ``until_ctrl``, block (up to
+        ``timeout`` per frame) until that control tag arrives — the
+        resync barrier: a host answers ``resync`` only after flushing
+        every previous reply into the stream, so everything drained
+        before the ack is provably stale."""
+        ep = self.peers.get(src)
+        n = 0
+        while ep is not None:
+            if until_ctrl is None and not ep.poll():
+                break
+            frame = ep.recv_bytes(timeout)
+            kind, _, _, tag, _, _, payload = decode_frame(frame)
+            self.rx_bytes[tag] += len(frame) + 4
+            if kind == KIND_CTRL and tag == "error":
+                raise TransportError(f"peer {src} failed: {payload}")
+            if kind == KIND_CTRL and tag == until_ctrl:
+                break
+            n += 1
+        return n
+
     # -- socket accounting ---------------------------------------------
     def reset_accounting(self) -> None:
         super().reset_accounting()
         self.tx_bytes.clear()
         self.rx_bytes.clear()
+        self.send_seq.clear()
+        self.last_seen.clear()
 
     @property
     def total_tx_bytes(self) -> int:
@@ -489,15 +734,24 @@ class RemoteHostHandle:
 
 class RemoteServingHost:
     """Serving-side handle: the host's PartyProcess computes its packed
-    decision bits and answers the guest's ``predict_req``."""
+    decision bits and answers the guest's ``predict_req``.
 
-    def __init__(self, channel: TransportChannel, hid: int, k: int):
+    ``serve_timeout`` bounds the reply wait: with ``serving_mode`` set on
+    the channel, a down/late host surfaces as a typed
+    :class:`~repro.core.party.PartyUnavailable` for THIS batch — never a
+    hang, and never a partial-bits answer (the engine discards the whole
+    batch on any party failure)."""
+
+    def __init__(self, channel: TransportChannel, hid: int, k: int,
+                 serve_timeout: float | None = None):
         self.channel = channel
         self.hid = hid
         self.k = int(k)
+        self.serve_timeout = serve_timeout
 
     def predict_bits(self):
-        return self.channel.recv(f"host{self.hid}", "predict_bits")
+        return self.channel.recv(f"host{self.hid}", "predict_bits",
+                                 self.serve_timeout)
 
 
 # ---------------------------------------------------------------------------
@@ -538,12 +792,14 @@ class PartyProcess:
     """
 
     def __init__(self, hid: int, params, X_host, channel: TransportChannel,
-                 export_dir: str | None = None):
+                 export_dir: str | None = None,
+                 state_dir: str | None = None):
         from ..core.binning import bin_features
         self.hid = hid
         self.params = params
         self.channel = channel
         self.export_dir = export_dir
+        self.state_dir = state_dir
         self.stats = Stats()
         self.data = bin_features(np.asarray(X_host), params.n_bins,
                                  sparse=params.sparse,
@@ -554,6 +810,62 @@ class PartyProcess:
         self.tables: dict = {}      # tree_idx -> {nid: (fid, bid)}
         self.server = None          # PartyBits after serve_setup
         self._serve_k = 0
+        self._current_tree = None   # in-flight (possibly partial) tree
+        self._complete: set = set()    # trees whose table is final
+        self._tree_snaps: dict = {}    # tree -> channel snapshot at its
+                                       # enc_gh boundary (replay rollback)
+        self._load_state()
+
+    # -- durable state (what a party persists to rejoin, DESIGN.md §11) -
+    def _state_path(self) -> str | None:
+        return (os.path.join(self.state_dir, f"host{self.hid}.state")
+                if self.state_dir else None)
+
+    def _persist_state(self) -> None:
+        """Written at every enc_gh boundary: completed split tables +
+        the channel's accounting/seq state AS OF that boundary.  A
+        respawned process reloads this, the guest replays the one
+        in-flight tree, and both ledgers converge — without it a crashed
+        host would have to replay the whole run."""
+        path = self._state_path()
+        if path is None:
+            return
+        state = {"complete": sorted(self._complete),
+                 "tables": {int(t): {int(nid): (int(f), int(b))
+                                     for nid, (f, b) in
+                                     self.tables[t].items()}
+                            for t in self._complete},
+                 "channel": self.channel.state_dump(),
+                 "stats": self.stats.as_dict()}
+        tmp = path + ".tmp"
+        os.makedirs(os.path.dirname(tmp) or ".", exist_ok=True)
+        with open(tmp, "wb") as f:
+            f.write(encode_payload(state))
+        os.replace(tmp, path)       # atomic: a crash mid-write keeps the
+                                    # previous boundary's state
+
+    def _load_state(self) -> None:
+        path = self._state_path()
+        if path is None or not os.path.exists(path):
+            return
+        with open(path, "rb") as f:
+            state = decode_payload(f.read())
+        self._complete = set(int(t) for t in state["complete"])
+        self.tables = {int(t): {int(nid): (int(f), int(b))
+                                for nid, (f, b) in tbl.items()}
+                       for t, tbl in state["tables"].items()}
+        self.channel.state_load(state["channel"])
+        self.stats = Stats()
+        self.stats.merge_counts(state["stats"])
+
+    def resume_info(self) -> dict:
+        """Handshake payload: how far this party's durable state reaches
+        (the guest resumes from the MINIMUM across parties)."""
+        return {"n_complete": len(self._complete),
+                "last_seen": {f"{s}|{t}": int(v) for (s, t), v
+                              in self.channel.last_seen.items()},
+                "send_seq": {f"{d}|{t}": int(v) for (d, t), v
+                             in self.channel.send_seq.items()}}
 
     # -- frame dispatch -------------------------------------------------
     def serve_forever(self) -> None:
@@ -602,6 +914,20 @@ class PartyProcess:
     def _begin_tree(self, payload) -> None:
         from ..core.histogram import CipherHistogram
         from ..core.tree import HostRuntime
+        tree = int(payload["tree"])
+        if self._current_tree is not None and self._current_tree != tree:
+            # the previous tree's table saw its last update: it is now
+            # part of the durable floor a respawn can resume from
+            self._complete.add(self._current_tree)
+        if tree in self._tree_snaps:
+            # a REPLAYED tree (the guest rolled back to this boundary
+            # after a fault): roll our accounting and seq counters back
+            # too, so the replay's frames are counted fresh, exactly once
+            self.channel.restore(self._tree_snaps[tree])
+            self._complete.discard(tree)
+        self._current_tree = tree
+        self._persist_state()       # durable state AS OF this boundary
+        self._tree_snaps[tree] = self.channel.snapshot()
         if self.cipher is None:
             from ..core.boosting import cipher_kwargs
             from ..core.he import get_cipher
@@ -615,7 +941,7 @@ class PartyProcess:
         self.hr = HostRuntime(hid=self.hid, data=self.data, engine=engine)
         self.hr.bind(self.params, self.cipher, self.channel, self.stats)
         self.hr.deliver("enc_gh", payload)
-        self.tables[int(payload["tree"])] = self.hr.table
+        self.tables[tree] = self.hr.table
 
     # -- serving --------------------------------------------------------
     def _serve_setup(self, payload) -> None:
@@ -623,6 +949,12 @@ class PartyProcess:
         from ..serving.engine import PartyBits
         from ..serving.export import export_host, load_host
         from ..serving.packed import host_half_from_keys
+        if self._current_tree is not None:
+            # training is over: the in-flight tree's table is final —
+            # make it durable before serving depends on it
+            self._complete.add(self._current_tree)
+            self._current_tree = None
+            self._persist_state()
         keys = [(int(ti), int(nid)) for ti, nid in payload["keys"]]
         half = host_half_from_keys(self.hid, keys, self.tables,
                                    self.data.thresholds, self.params.n_bins)
@@ -647,7 +979,10 @@ class PartyProcess:
         n = len(ids)
         n_pad = int(req["n_pad"])
         if n and int(ids.max()) >= len(self.X_serve):
-            raise TransportError(
+            # application-level rejection (RemoteError): the party is
+            # alive and answering, so serving must NOT type this as
+            # PartyUnavailable or burn reconnect retries on it
+            raise RemoteError(
                 f"host{self.hid}: predict_req references row "
                 f"{int(ids.max())} but only {len(self.X_serve)} rows are "
                 f"staged — ship this batch's host rows first "
@@ -683,6 +1018,17 @@ class PartyProcess:
                  "socket": self.channel.socket_summary()})
         elif tag == "ping":
             self.channel.control_send("guest", "pong", payload)
+        elif tag == "hb":
+            # liveness probe from the guest's supervisor thread: the ack
+            # is skimmed by the guest's recv loop, never blocking the
+            # protocol (a wedged host simply never reaches this branch)
+            self.channel.control_send("guest", "hb_ack", payload)
+        elif tag == "resync":
+            # reconnect barrier: by the time this frame is processed,
+            # every reply this host owed for earlier frames has already
+            # been written to the stream (frames are handled in order) —
+            # the guest drains until this ack and the stream is clean
+            self.channel.control_send("guest", "resync_ack", payload)
         elif tag == "bye":
             return False
         else:
@@ -691,19 +1037,69 @@ class PartyProcess:
         return True
 
 
+def _wrap_fault(ep, fault_plan):
+    if fault_plan is None:
+        return ep
+    from .chaos import FaultyEndpoint
+    return FaultyEndpoint(ep, fault_plan)
+
+
 def host_main(port: int, hid: int, params, X_host,
-              export_dir: str | None = None) -> None:
+              export_dir: str | None = None,
+              state_dir: str | None = None, run_id: str = "",
+              fault_plan=None, timeout: float = 600.0,
+              max_redials: int = 8, redial_backoff: float = 0.1) -> None:
     """Entry point of a spawned host process: connect to the guest's
-    listener, introduce ourselves, serve frames until ``bye``."""
-    sock = _socket.create_connection(("127.0.0.1", port))
-    ep = SocketEndpoint(sock)
-    channel = TransportChannel(f"host{hid}", {"guest": ep})
-    channel.control_send("guest", "hello", {"hid": hid})
-    try:
-        PartyProcess(hid, params, X_host, channel,
-                     export_dir=export_dir).serve_forever()
-    finally:
-        ep.close()
+    listener, perform the session handshake (run id, party id, resume
+    floor), serve frames until ``bye``.  On connection loss the process
+    RE-DIALS with exponential backoff + jitter and carries on — its
+    in-memory state (tables, ledger, seq counters) survives, and the
+    guest's tree replay brings the protocol back in step.  Only a process
+    death loses memory state, which is what ``state_dir`` is for."""
+    jitter = _random.Random((hid + 1) * 7919)
+    pp = None
+    channel = None
+    redials = 0
+    fault_plan = fault_plan.fresh() if fault_plan is not None else None
+    while True:
+        try:
+            sock = _socket.create_connection(("127.0.0.1", port),
+                                             timeout=timeout)
+            ep = _wrap_fault(SocketEndpoint(sock), fault_plan)
+        except OSError as e:
+            redials += 1
+            if redials > max_redials:
+                raise TransportError(
+                    f"host{hid}: guest unreachable after "
+                    f"{max_redials} dials: {e}") from e
+            time.sleep(redial_backoff * (2 ** (redials - 1))
+                       + jitter.uniform(0, redial_backoff))
+            continue
+        if pp is None:
+            channel = TransportChannel(f"host{hid}", {"guest": ep},
+                                       timeout)
+            pp = PartyProcess(hid, params, X_host, channel,
+                              export_dir=export_dir, state_dir=state_dir)
+        else:
+            channel.peers["guest"] = ep
+        channel.control_send(
+            "guest", "hello",
+            {"hid": hid, "run_id": run_id, "resume": pp.resume_info()})
+        try:
+            pp.serve_forever()
+            ep.close()
+            return
+        except TransportError:
+            # connection-level failure (drop, mid-frame timeout, corrupt
+            # frame): close, back off, re-dial, resume.  Anything else is
+            # a real host-side crash and must kill the process — the
+            # guest respawns it from durable state.
+            ep.close()
+            redials += 1
+            if redials > max_redials:
+                raise
+            time.sleep(redial_backoff * (2 ** (redials - 1))
+                       + jitter.uniform(0, redial_backoff))
 
 
 # ---------------------------------------------------------------------------
@@ -729,62 +1125,61 @@ class MultiHostRun:
     """
 
     def __init__(self, params, X_hosts: list, transport: str = "socket",
-                 export_dir: str | None = None, timeout: float = 600.0):
+                 export_dir: str | None = None, timeout: float = 600.0,
+                 state_dir: str | None = None, fault_plans: dict | None = None,
+                 liveness_interval: float | None = None,
+                 liveness_timeout: float = 10.0,
+                 serve_timeout: float | None = None):
         if getattr(params, "mesh", None) is not None:
             raise ValueError("multi-host runtime: params.mesh must be None "
                              "(per-process meshes are per-party state)")
         self.params = params
         self.n_hosts = len(X_hosts)
         self.export_dir = export_dir
+        self.state_dir = state_dir
+        self.fault_plans = fault_plans or {}
         self.transport = transport
+        self.timeout = timeout
+        self.liveness_interval = liveness_interval
+        self.liveness_timeout = liveness_timeout
+        self.serve_timeout = serve_timeout
         self.procs: list = []
         self.parties: list = []         # loopback PartyProcess objects
         self._listener = None
+        self._port = None
         self.model = None
         self.predictor = None
+        self.run_id = f"run-{os.getpid()}-{os.urandom(4).hex()}"
+        self.restarts = 0               # host processes respawned
+        self.redials = 0                # connections re-accepted (host
+                                        # process survived, socket didn't)
+        self.wedged_restarts = 0        # supervisor-initiated restarts
+        self.slow_hosts: set = set()    # straggling, NOT restarted
+        self._degraded: set = set()     # serving: hosts awaiting rejoin
+        self._host_resume: dict = {}    # hid -> last hello resume info
+        self._host_keys = None          # serve_setup keys (for re-setup)
+        self._round_snaps: dict = {}    # round -> guest channel snapshot
+        self._mp_ctx = None
+        self._X_hosts = [np.asarray(X) for X in X_hosts]
+        self._supervisor = None
+        self._straggler = {}
 
-        peers: dict = {}
+        self.channel = TransportChannel("guest", {}, timeout)
         if transport == "socket":
             import multiprocessing as mp
-            ctx = mp.get_context("spawn")
+            self._mp_ctx = mp.get_context("spawn")
             self._listener = _socket.socket()
             try:
                 self._listener.bind(("127.0.0.1", 0))
-                self._listener.listen(self.n_hosts)
-                port = self._listener.getsockname()[1]
-                for hid, X in enumerate(X_hosts):
-                    p = ctx.Process(target=host_main,
-                                    args=(port, hid, params, np.asarray(X),
-                                          export_dir),
-                                    daemon=True)
-                    p.start()
-                    self.procs.append(p)
-                self._listener.settimeout(timeout)
-                hello_rx = 0        # read before the channel exists;
-                                    # credited to rx_bytes below so each
-                                    # side's framed-byte totals reconcile
-                for _ in range(self.n_hosts):
-                    try:
-                        sock, _ = self._listener.accept()
-                    except _socket.timeout as e:
-                        dead = [p.pid for p in self.procs
-                                if not p.is_alive()]
-                        raise TransportError(
-                            f"host process(es) never connected within "
-                            f"{timeout}s (exited early: {dead or 'none'})"
-                            ) from e
-                    ep = SocketEndpoint(sock)
-                    frame = ep.recv_bytes(timeout)
-                    _, _, _, tag, _, hello = decode_frame(frame)
-                    if tag != "hello":
-                        raise TransportError(
-                            f"expected hello, got {tag!r}")
-                    hello_rx += len(frame) + 4
-                    peers[f"host{int(hello['hid'])}"] = ep
+                self._listener.listen(self.n_hosts + 2)
+                self._port = self._listener.getsockname()[1]
+                for hid in range(self.n_hosts):
+                    self.procs.append(self._spawn(hid, first=True))
+                self._accept_hosts(set(range(self.n_hosts)), timeout)
             except BaseException:
                 # __init__ failed: the caller never gets an object to
                 # close(), so reap children and sockets here
-                for ep in peers.values():
+                for ep in self.channel.peers.values():
                     ep.close()
                 for p in self.procs:
                     if p.is_alive():
@@ -792,27 +1187,161 @@ class MultiHostRun:
                 self._listener.close()
                 raise
         elif transport == "loopback":
-            for hid, X in enumerate(X_hosts):
+            for hid, X in enumerate(self._X_hosts):
                 guest_end, host_end = LoopbackEndpoint.pair()
                 hch = TransportChannel(f"host{hid}", {"guest": host_end},
                                        timeout)
                 pp = PartyProcess(hid, params, X, hch,
-                                  export_dir=export_dir)
+                                  export_dir=export_dir,
+                                  state_dir=state_dir)
                 host_end.on_deliver = pp.pump
-                peers[f"host{hid}"] = guest_end
+                self.channel.peers[f"host{hid}"] = guest_end
                 self.parties.append(pp)
         else:
             raise ValueError(f"unknown transport {transport!r}")
-        self.channel = TransportChannel("guest", peers, timeout)
-        if transport == "socket":
-            self.channel.rx_bytes["hello"] += hello_rx
+
+    # -- spawn / accept / reacquire -------------------------------------
+    def _spawn(self, hid: int, first: bool = False):
+        """Start (or restart) host ``hid``.  Fault plans are injected
+        only into the FIRST generation: a respawned process runs clean,
+        or a deterministic kill-at-(tree, layer) rule would re-fire on
+        every replay and the run could never converge."""
+        plan = self.fault_plans.get(hid) if first else None
+        p = self._mp_ctx.Process(
+            target=host_main,
+            args=(self._port, hid, self.params, self._X_hosts[hid],
+                  self.export_dir, self.state_dir, self.run_id, plan,
+                  self.timeout),
+            daemon=True)
+        p.start()
+        return p
+
+    def _accept_hosts(self, want: set, deadline_s: float) -> None:
+        """Accept re-/connections until every hid in ``want`` has a live
+        endpoint.  Any host may dial in (a re-dialing survivor arrives
+        interleaved with the respawn we are waiting for) — each hello is
+        routed to its own hid slot and the freshest connection wins."""
+        deadline = time.monotonic() + deadline_s
+        while want:
+            budget = deadline - time.monotonic()
+            if budget <= 0:
+                dead = [p.pid for p in self.procs if not p.is_alive()]
+                raise TransportError(
+                    f"host(s) {sorted(want)} never (re)connected within "
+                    f"{deadline_s}s (dead processes: {dead or 'none'})")
+            self._listener.settimeout(min(budget, 1.0))
+            try:
+                sock, _ = self._listener.accept()
+            except _socket.timeout:
+                for hid in sorted(want):    # crashed before connecting?
+                    if hid < len(self.procs) \
+                            and not self.procs[hid].is_alive():
+                        self.procs[hid] = self._spawn(hid)
+                        self.restarts += 1
+                continue
+            ep = SocketEndpoint(sock)
+            try:
+                frame = ep.recv_bytes(min(max(budget, 1.0), 10.0))
+                _, _, _, tag, _, _, hello = decode_frame(frame)
+            except TransportError:
+                ep.close()
+                continue
+            if tag != "hello" or hello.get("run_id") != self.run_id:
+                ep.close()          # stale dialer from a previous run
+                continue
+            hid = int(hello["hid"])
+            old = self.channel.peers.get(f"host{hid}")
+            if old is not None:
+                old.close()
+            self.channel.peers[f"host{hid}"] = ep
+            self.channel.rx_bytes["hello"] += len(frame) + 4
+            self._host_resume[hid] = hello.get("resume") or {}
+            want.discard(hid)
+
+    def _reacquire(self, peer: str) -> None:
+        """Reconnect hook: a send/recv to ``peer`` failed.  Respawn the
+        process if it died, re-accept its dial-in, then raise
+        :class:`PeerRestarted` — the peer's in-flight tree state is gone
+        (or unsynchronized), so the resilient loop must replay from the
+        last boundary rather than retry the failed frame."""
+        if self.transport != "socket" or not peer.startswith("host"):
+            return
+        hid = int(peer[4:])
+        respawned = False
+        if not self.procs[hid].is_alive():
+            self.procs[hid].join(timeout=1)
+            self.procs[hid] = self._spawn(hid)
+            self.restarts += 1
+            respawned = True
+        else:
+            self.redials += 1
+        self._accept_hosts({hid}, self.timeout)
+        raise PeerRestarted(
+            f"{peer} {'respawned' if respawned else 'reconnected'}: "
+            f"replay from the last tree boundary")
+
+    def _recover_and_resync(self) -> None:
+        """Bring every peer to a known-clean stream state before a
+        replay: respawn/reaccept anything broken, then run the resync
+        barrier against every host — stale in-flight replies from the
+        aborted attempt are drained unmirrored (the rolled-back snapshot
+        already forgot their requests)."""
+        hook, self.channel.reconnect = self.channel.reconnect, None
+        try:
+            if self.transport == "socket":
+                broken = {hid for hid in range(self.n_hosts)
+                          if not self.procs[hid].is_alive()
+                          or getattr(self.channel.peers.get(f"host{hid}"),
+                                     "dead", False)}
+                for hid in sorted(broken):
+                    if not self.procs[hid].is_alive():
+                        self.procs[hid].join(timeout=1)
+                        self.procs[hid] = self._spawn(hid)
+                        self.restarts += 1
+                if broken:
+                    self._accept_hosts(broken, self.timeout)
+            for hid in range(self.n_hosts):
+                for attempt in (0, 1):
+                    try:
+                        self.channel.control_send(f"host{hid}", "resync",
+                                                  {"run": self.run_id})
+                        self.channel.drain(f"host{hid}",
+                                           until_ctrl="resync_ack",
+                                           timeout=self.timeout)
+                        break
+                    except TransportError:
+                        if attempt or self.transport != "socket":
+                            raise
+                        # connection died between the hook firing and
+                        # now: one more respawn/accept round, then give
+                        # up to the outer retry budget
+                        if not self.procs[hid].is_alive():
+                            self.procs[hid].join(timeout=1)
+                            self.procs[hid] = self._spawn(hid)
+                            self.restarts += 1
+                        self._accept_hosts({hid}, self.timeout)
+        finally:
+            self.channel.reconnect = hook
+
+    def _resume_floor(self) -> int | None:
+        """Lowest boosting round any reconnected party can resume from,
+        in ROUND units (None: nobody reported resume info)."""
+        if not self._host_resume or self.model is None:
+            return None
+        tpr = self.model.trees_per_round
+        floors = [int(r.get("n_complete", 0)) // tpr
+                  for r in self._host_resume.values() if r is not None]
+        return min(floors) if floors else None
 
     # -- training -------------------------------------------------------
-    def fit(self, X_guest, y):
+    def fit(self, X_guest, y, *, resilient: bool = False,
+            ckpt_dir: str | None = None, save_every: int = 1,
+            max_retries: int = 3, retry_backoff: float = 0.05):
         from ..core.boosting import VerticalBoosting
         # per-fit accounting on BOTH sides of the wire: the model's Stats
         # are fresh, so the channel ledgers and host Stats must be too,
         # or a refit on a long-lived run double-counts
+        self.channel.serving_mode = False
         self.channel.reset_accounting()
         for hid in range(self.n_hosts):
             self.channel.control_send(f"host{hid}", "reset_stats", None)
@@ -820,10 +1349,153 @@ class MultiHostRun:
         model.channel = self.channel
         model.remote_hosts = [RemoteHostHandle(self.channel, hid)
                               for hid in range(self.n_hosts)]
-        model.fit(X_guest, y, [])
         self.model = model
         self.predictor = None           # stale after refit
+        if not resilient:
+            model.fit(X_guest, y, [])
+            return model
+        if ckpt_dir is None:
+            raise ValueError("resilient fit needs ckpt_dir: the per-round "
+                             "score is restored through the checkpoint "
+                             "machinery on replay")
+        self._fit_resilient(model, X_guest, y, ckpt_dir, save_every,
+                            max_retries, retry_backoff)
         return model
+
+    def _fit_resilient(self, model, X_guest, y, ckpt_dir: str,
+                       save_every: int, max_retries: int,
+                       retry_backoff: float) -> None:
+        """The per-tree resume boundary: each boosting round runs inside
+        a :class:`~repro.runtime.fault.ResilientLoop` step.  On any
+        failure the loop restores the last round boundary — score from
+        the checkpoint, trees truncated in memory, ledger/seq state from
+        the round snapshot — re-syncs every peer, and replays.  The
+        replayed round is bit-identical (GOSS/shuffle streams are keyed
+        by absolute tree index; the affine/Paillier pipelines decrypt
+        identically) and the converged ledgers match the fault-free
+        oracle (duplicates deduped by seq, aborted attempts rolled back)."""
+        from ..checkpoint import checkpoint as _ckpt
+        from .fault import ResilientLoop
+        score0 = model.begin_fit(X_guest, y, [])
+        shape, dtype = score0.shape, score0.dtype
+        self._round_snaps = {0: self.channel.snapshot()}
+        self._host_resume = {}
+        self._start_supervisor()
+        try:
+            self.channel.reconnect = self._reacquire
+            self.channel.on_rtt = self._observe_rtt
+
+            def step_fn(score, t):
+                self._round_snaps[t] = self.channel.snapshot()
+                return model.boost_round(t, score)
+
+            def save_fn(step, score):
+                _ckpt.save(ckpt_dir, step, {"score": np.asarray(score)})
+
+            def restore_fn():
+                self._recover_and_resync()
+                avail = _ckpt.latest_step(ckpt_dir)
+                step = avail if avail is not None else 0
+                floor = self._resume_floor()
+                if floor is not None:
+                    step = min(step, floor)
+                self._host_resume = {}
+                if avail is not None and step > 0:
+                    # restore_any, not restore: the jax path would
+                    # canonicalize the float64 score to float32 and the
+                    # replayed rounds would drift off bit-identity
+                    score = np.asarray(
+                        _ckpt.restore_any(ckpt_dir, step)["score"])
+                    assert score.shape == shape and score.dtype == dtype
+                else:
+                    step, score = 0, score0.copy()
+                model.rollback_to_round(step)
+                self.channel.restore(self._round_snaps[step])
+                return step, score
+
+            loop = ResilientLoop(step_fn, save_fn, restore_fn,
+                                 next_batch=lambda t: t,
+                                 save_every=save_every,
+                                 max_retries=max_retries,
+                                 backoff=retry_backoff)
+            self.failures = 0
+            _, score = loop.run(score0, 0, self.params.n_trees)
+            self.failures = loop.failures
+            model.finish_fit(score)
+        finally:
+            self.channel.reconnect = None
+            self.channel.on_rtt = None
+            self._stop_supervisor()
+
+    def _observe_rtt(self, src: str, tag: str, seconds: float) -> None:
+        """Per-layer round-trip times feed the straggler policy: a SLOW
+        host is marked (``slow_hosts``) but never restarted — restarting
+        it would lose real progress for no correctness gain.  Only the
+        liveness supervisor (no hb_ack at all) restarts a host."""
+        if tag != "split_infos":
+            return
+        from .fault import StragglerPolicy
+        pol = self._straggler.get(src)
+        if pol is None:
+            pol = self._straggler[src] = StragglerPolicy()
+        if pol.check(seconds):
+            self.slow_hosts.add(src)
+
+    # -- liveness supervisor --------------------------------------------
+    def _start_supervisor(self) -> None:
+        if self.liveness_interval is None or self.transport != "socket":
+            return
+        self._last_ack = {hid: time.monotonic()
+                          for hid in range(self.n_hosts)}
+        self.channel.on_ctrl = self._skim_ctrl
+        self._sup_stop = threading.Event()
+        self._supervisor = threading.Thread(target=self._supervise,
+                                            daemon=True)
+        self._supervisor.start()
+
+    def _stop_supervisor(self) -> None:
+        if self._supervisor is not None:
+            self._sup_stop.set()
+            self._supervisor.join(timeout=5)
+            self._supervisor = None
+        self.channel.on_ctrl = None
+
+    def _skim_ctrl(self, src: str, tag: str, payload) -> bool:
+        """Recv-loop hook: heartbeat acks arrive interleaved with
+        protocol replies (the supervisor pings while the training thread
+        owns the socket reads) — record and swallow them."""
+        if tag == "hb_ack":
+            try:
+                self._last_ack[int(src[4:])] = time.monotonic()
+            except (ValueError, AttributeError):
+                pass
+            return True
+        return False
+
+    def _supervise(self) -> None:
+        """Wedged-vs-slow triage.  A SLOW host still answers heartbeats
+        (and shows up in ``slow_hosts`` via the straggler policy on
+        per-layer RTTs): left alone.  A WEDGED host answers nothing for
+        ``liveness_timeout``: kill it — the training thread's blocked
+        recv fails over the closed socket, the reconnect hook respawns
+        from durable state, and the resilient loop replays the tree."""
+        while not self._sup_stop.wait(self.liveness_interval):
+            now = time.monotonic()
+            for hid in range(self.n_hosts):
+                try:
+                    self.channel.control_send(f"host{hid}", "hb",
+                                              {"t": now})
+                except Exception:                        # noqa: BLE001
+                    continue        # training thread handles reconnects
+                if now - self._last_ack[hid] > self.liveness_timeout:
+                    p = self.procs[hid]
+                    if p.is_alive():
+                        p.kill()
+                    ep = self.channel.peers.get(f"host{hid}")
+                    if ep is not None:
+                        ep.close()
+                    self.wedged_restarts += 1
+                    self._last_ack[hid] = now   # one kill per silence
 
     # -- serving --------------------------------------------------------
     def serve(self, out_dir: str | None = None):
@@ -837,24 +1509,84 @@ class MultiHostRun:
             raise RuntimeError("serve() needs a fitted model: call fit()")
         out_dir = out_dir or self.export_dir
         guest_half, host_keys = pack_guest(self.model)
+        self._host_keys = host_keys
+        self._serve_out_dir = out_dir
         if out_dir:
             gdir = export_guest(guest_half,
                                 os.path.join(out_dir, "guest"))
             guest_half = load_guest(gdir)   # serve from the reloaded half
         for hid in range(self.n_hosts):
-            self.channel.control_send(
-                f"host{hid}", "serve_setup",
-                {"keys": [list(k) for k in host_keys[hid]],
-                 "export_dir": out_dir})
+            self._serve_setup_host(hid)
         remote = []
         for hid in range(self.n_hosts):
             ack = self.channel.control_recv(f"host{hid}", "serve_ready")
             remote.append(RemoteServingHost(self.channel, hid,
-                                            int(ack["k"])))
+                                            int(ack["k"]),
+                                            self.serve_timeout))
         self.predictor = FederatedPredictor(
             guest_half, remote, channel=self.channel,
             stats=self.model.stats)
+        # from here on a transport failure on a host is a per-batch,
+        # typed PartyUnavailable — never a hang, never partial bits
+        self.channel.serving_mode = True
         return self.predictor
+
+    def _serve_setup_host(self, hid: int) -> None:
+        self.channel.control_send(
+            f"host{hid}", "serve_setup",
+            {"keys": [list(k) for k in self._host_keys[hid]],
+             "export_dir": self._serve_out_dir})
+
+    def _heal_serving(self) -> None:
+        """Rejoin degraded hosts before the next batch: accept the
+        re-dial (respawning first if the process died), replay the
+        serving setup, and clear the mark.  If a host is still down the
+        typed error surfaces again — per batch, never a hang."""
+        from ..core.party import PartyUnavailable
+        for hid in sorted(self._degraded):
+            peer = f"host{hid}"
+            try:
+                if not self.procs[hid].is_alive():
+                    self.procs[hid].join(timeout=1)
+                    self.procs[hid] = self._spawn(hid)
+                    self.restarts += 1
+                self._accept_hosts({hid}, self.timeout)
+                self._align_seqs(hid)
+                self._serve_setup_host(hid)
+                ack = self.channel.control_recv(peer, "serve_ready")
+            except PartyUnavailable:
+                raise
+            except (TransportError, OSError) as e:
+                raise PartyUnavailable(peer, f"rejoin failed: {e}") from e
+            if int(ack["k"]) != self.predictor.hosts[hid].k:
+                raise PartyUnavailable(
+                    peer, f"rejoined with {int(ack['k'])} serving nodes, "
+                          f"expected {self.predictor.hosts[hid].k}")
+            self._degraded.discard(hid)
+
+    def _align_seqs(self, hid: int) -> None:
+        """Converge per-tag seq counters with a rejoined party.  Its
+        stream state restarts from the persisted floor (which has no
+        serving tags at all), while the guest's counters are wherever
+        the dead generation left them — without alignment the fresh
+        host's first ``predict_bits`` (seq 1) looks like a replayed
+        duplicate and is silently discarded, wedging the batch."""
+        peer = f"host{hid}"
+        resume = self._host_resume.get(hid) or {}
+        for key in [k for k in self.channel.send_seq if k[0] == peer]:
+            del self.channel.send_seq[key]
+        for key in [k for k in self.channel.last_seen if k[0] == peer]:
+            del self.channel.last_seen[key]
+        # our next send must be numbered one past what the host has seen
+        for st, v in (resume.get("last_seen") or {}).items():
+            src, tag = st.split("|", 1)
+            if src == self.channel.party:
+                self.channel.send_seq[(peer, tag)] = int(v)
+        # and its next send will be numbered one past what it has sent
+        for dt, v in (resume.get("send_seq") or {}).items():
+            dst, tag = dt.split("|", 1)
+            if dst == self.channel.party:
+                self.channel.last_seen[(peer, tag)] = int(v)
 
     def stage_host_data(self, X_hosts: list) -> None:
         """Ship each host its OWN feature rows for the upcoming batch —
@@ -872,17 +1604,28 @@ class MultiHostRun:
         hold the right rows (initially their training matrices).  With
         neither, raise: a guest batch silently scored against stale host
         rows mixes features from different instances with no error."""
+        from ..core.party import PartyUnavailable
         if self.predictor is None:
             self.serve()
-        if X_hosts is not None:
-            self.stage_host_data(X_hosts)
-        elif not staged:
-            raise ValueError(
-                "host rows for this batch are not staged: pass X_hosts "
-                "(ships each host its rows) or staged=True (the hosts' "
-                "currently staged matrices ARE this batch's rows)")
-        return self.predictor.predict_score(X_guest,
-                                            [None] * self.n_hosts)
+        if self._degraded:
+            self._heal_serving()        # raises PartyUnavailable if a
+                                        # marked host has not rejoined
+        try:
+            if X_hosts is not None:
+                self.stage_host_data(X_hosts)
+            elif not staged:
+                raise ValueError(
+                    "host rows for this batch are not staged: pass X_hosts "
+                    "(ships each host its rows) or staged=True (the hosts' "
+                    "currently staged matrices ARE this batch's rows)")
+            return self.predictor.predict_score(X_guest,
+                                                [None] * self.n_hosts)
+        except PartyUnavailable as e:
+            # this batch is lost (typed, whole-batch — the engine already
+            # consumed every healthy host's reply, so the streams stay
+            # clean); the NEXT batch triggers the rejoin path above
+            self._degraded.add(int(e.party[4:]))
+            raise
 
     # -- diagnostics ----------------------------------------------------
     def host_stats(self) -> list:
@@ -909,16 +1652,30 @@ class MultiHostRun:
         self.channel.control_recv(f"host{hid}", "pong")
         return time.perf_counter() - t0
 
-    def close(self) -> None:
+    def close(self, join_timeout: float = 30.0) -> None:
+        self._stop_supervisor()
+        self.channel.serving_mode = False   # byes must not come back as
+                                            # typed PartyUnavailable
         for hid in range(self.n_hosts):
             try:
                 self.channel.control_send(f"host{hid}", "bye", None)
             except (TransportError, OSError):
                 pass        # peer already dead (crashed host, reset pipe)
+        # join -> terminate -> join -> kill: a host wedged in a blocking
+        # recv (or one that traps SIGTERM) must not outlive the run —
+        # SIGKILL is the floor of the escalation, and the final join
+        # reaps the zombie so the process table stays clean
         for p in self.procs:
-            p.join(timeout=30)
+            p.join(timeout=join_timeout)
+        for p in self.procs:
             if p.is_alive():
                 p.terminate()
+        for p in self.procs:
+            if p.is_alive():
+                p.join(timeout=5)
+                if p.is_alive():
+                    p.kill()
+                    p.join(timeout=5)
         self.channel.close()
         if self._listener is not None:
             self._listener.close()

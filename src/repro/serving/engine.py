@@ -42,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.binning import BinnedData, apply_binning
-from ..core.party import Channel, Stats
+from ..core.party import Channel, PartyUnavailable, Stats
 
 
 @jax.jit
@@ -241,6 +241,7 @@ class FederatedPredictor:
         # concurrently (latency = max over hosts, not the sum) — the same
         # dispatch-then-collect shape as the training layer batch.
         pending = []                        # (block slot, party, i)
+        down: list = []                     # typed per-party failures
         # ONE request object for all hosts: the transport's broadcast
         # memo then encodes the id vector once, not once per host
         req = {"ids": np.arange(n, dtype=np.int32), "n_pad": int(n_pad)}
@@ -248,8 +249,16 @@ class FederatedPredictor:
             party = self._bits[1 + i]
             if party is None:
                 continue                    # party owns no internal nodes
-            self.channel.send("guest", f"host{h.hid}", "predict_req",
-                              req, n * 4)
+            try:
+                self.channel.send("guest", f"host{h.hid}", "predict_req",
+                                  req, n * 4)
+            except PartyUnavailable as e:
+                # keep dispatching: every HEALTHY host must still get its
+                # request so the collect pass below consumes its reply —
+                # otherwise a stale bit block would sit in the stream and
+                # poison the NEXT batch's collect
+                down.append(e)
+                continue
             if isinstance(party, PartyBits):
                 # in-process half: compute (async jax dispatch) and record
                 # the reply send here, exactly the oracle accounting
@@ -263,10 +272,19 @@ class FederatedPredictor:
             else:
                 pending.append(party)       # remote: collect below
         for item in pending:
-            pb = item.predict_bits() if hasattr(item, "predict_bits") \
-                else item
+            try:
+                pb = item.predict_bits() if hasattr(item, "predict_bits") \
+                    else item
+            except PartyUnavailable as e:
+                down.append(e)
+                continue
             self.stats.n_predict_roundtrips += 1
             blocks.append(pb)
+        if down:
+            # the whole batch fails, typed, after every live host's reply
+            # was consumed: never a hang, never an answer scored from a
+            # subset of the parties' bits
+            raise down[0]
 
         if blocks and g.depth > 0:
             bits = (blocks[0] if len(blocks) == 1

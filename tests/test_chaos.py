@@ -1,0 +1,345 @@
+"""Chaos suite (DESIGN.md §11): seeded fault injection against the
+multi-host party runtime.
+
+Every test drives REAL protocol traffic through a :class:`FaultPlan` —
+dropped connections, mid-tree host kills, delayed/truncated frames,
+wedged processes — and asserts the recovery invariants:
+
+* training under faults completes BIT-IDENTICAL to the fault-free
+  in-process oracle (tree signatures, scores, per-tag ledgers);
+* a slow host is marked, never restarted; a wedged host is restarted;
+* serving degrades to a typed :class:`PartyUnavailable` per batch and
+  recovers after the party rejoins;
+* ``close()`` escalates SIGTERM -> SIGKILL for a SIGTERM-ignoring zombie.
+
+All plans are seeded and rules fire at exact (direction, tag, nth) or
+(tree, layer) coordinates, so a failing run replays deterministically.
+"""
+
+import os
+import socket as _socket
+import struct
+import tempfile
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import PartyUnavailable, SBTParams, VerticalBoosting
+from repro.runtime.chaos import (RECV, SEND, Delay, DropConn, FaultPlan,
+                                 FaultyEndpoint, Kill, Truncate, Wedge)
+from repro.runtime.fault import StragglerPolicy
+from repro.runtime.transport import (KIND_CTRL, LoopbackEndpoint,
+                                     MultiHostRun, SocketEndpoint,
+                                     TransportError, encode_frame)
+
+
+def _data(n=200, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(0, 1, (n, d)).astype(np.float32)
+    w = rng.normal(0, 1, d)
+    y = (X @ w + 0.3 * rng.normal(0, 1, n) > 0).astype(np.float64)
+    return X, y
+
+
+def _signatures(model):
+    return [t.signature() for t in model.trees]
+
+
+def _dirs():
+    base = tempfile.mkdtemp()
+    return (os.path.join(base, "export"), os.path.join(base, "state"),
+            os.path.join(base, "ckpt"))
+
+
+# ---------------------------------------------------------------------------
+# the acceptance scenario: delays + dropped connection + mid-tree crash
+# ---------------------------------------------------------------------------
+
+def test_socket_chaos_parity_bit_identical():
+    """Seeded plan: a delayed enc_gh and a dropped connection on host0,
+    host1 killed mid-tree (tree 1, layer 0).  The resilient socket run
+    must complete bit-identically to the fault-free in-process oracle —
+    same tree signatures, same train scores, same converged per-tag
+    ledger — with the faults actually having fired."""
+    X, y = _data(n=200)
+    params = SBTParams(n_trees=3, max_depth=3, n_bins=8, cipher="plain",
+                       seed=7)
+    Xg = X[:, :2]
+    Xh = [X[:, 2:4], X[:, 4:]]
+    ref = VerticalBoosting(params).fit(Xg, y, [h.copy() for h in Xh])
+
+    export_dir, state_dir, ckpt_dir = _dirs()
+    plans = {
+        0: FaultPlan(rules=[
+            Delay(tag="enc_gh", nth=1, direction=RECV, seconds=0.05),
+            DropConn(tag="assign_sync", nth=5, direction=RECV),
+        ], seed=41),
+        1: FaultPlan(rules=[
+            Kill(tree=1, layer=0, direction=RECV),
+        ], seed=42),
+    }
+    run = MultiHostRun(params, Xh, transport="socket",
+                       export_dir=export_dir, state_dir=state_dir,
+                       fault_plans=plans, timeout=120.0)
+    try:
+        model = run.fit(Xg, y, resilient=True, ckpt_dir=ckpt_dir,
+                        save_every=1, max_retries=6, retry_backoff=0.05)
+        # the faults fired: at least one crash-respawn and one re-dial
+        assert run.restarts >= 1
+        assert run.redials >= 1
+        assert run.failures >= 1
+        # bit-identity despite replays: GOSS/shuffle streams are keyed by
+        # absolute tree index, so a replayed tree IS the original tree
+        np.testing.assert_array_equal(model.train_score_, ref.train_score_)
+        assert _signatures(model) == _signatures(ref)
+        # converged ledger: replayed duplicates deduped by seq, aborted
+        # attempts rolled back on both sides — the per-tag summary equals
+        # the fault-free oracle's exactly
+        assert run.channel.summary() == ref.channel.summary()
+    finally:
+        run.close()
+
+
+def test_loopback_resilient_replay_truncated_frame():
+    """Deterministic single-process variant: a truncated split_infos
+    frame desyncs the stream mid-tree; the resilient loop resyncs and
+    replays the round to the oracle fixed point."""
+    X, y = _data(n=150, seed=3)
+    params = SBTParams(n_trees=2, max_depth=2, n_bins=8, seed=5)
+    Xg, Xh = X[:, :3], [X[:, 3:]]
+    ref = VerticalBoosting(params).fit(Xg, y, [Xh[0].copy()])
+
+    _, state_dir, ckpt_dir = _dirs()
+    run = MultiHostRun(params, Xh, transport="loopback",
+                       state_dir=state_dir)
+    try:
+        plan = FaultPlan(rules=[
+            Truncate(tag="split_infos", nth=2, direction=RECV,
+                     keep_fraction=0.5),
+        ], seed=9)
+        run.channel.peers["host0"] = FaultyEndpoint(
+            run.channel.peers["host0"], plan)
+        model = run.fit(Xg, y, resilient=True, ckpt_dir=ckpt_dir,
+                        max_retries=4, retry_backoff=0.01)
+        assert run.failures >= 1
+        np.testing.assert_array_equal(model.train_score_, ref.train_score_)
+        assert _signatures(model) == _signatures(ref)
+        assert run.channel.summary() == ref.channel.summary()
+    finally:
+        run.close()
+
+
+def test_fault_plan_replay_is_deterministic():
+    """Two FaultyEndpoints under the same seeded plan inject the same
+    faults at the same coordinates — chaos runs are replayable."""
+    def drive(plan):
+        a, b = LoopbackEndpoint.pair()
+        fe = FaultyEndpoint(b, plan.fresh())
+        for i in range(6):
+            a.send_bytes(encode_frame(KIND_CTRL, "guest", "host0",
+                                      "ping", 0, {"i": i}, seq=i))
+        out = []
+        for _ in range(6):
+            try:
+                out.append(len(fe.recv_bytes()))
+            except TransportError as e:
+                out.append(str(e))
+        return out, list(fe.injected)
+
+    plan = FaultPlan(rules=[
+        Truncate(tag="ping", nth=2, direction=RECV, keep_fraction=0.3),
+        DropConn(tag="ping", nth=5, direction=RECV),
+    ], seed=123)
+    r1, inj1 = drive(plan)
+    r2, inj2 = drive(plan)
+    assert r1 == r2
+    assert inj1 == inj2 == [("Truncate", "ping", 2), ("DropConn", "ping", 5)]
+
+
+# ---------------------------------------------------------------------------
+# satellite: mid-frame timeout must poison (and close) the endpoint
+# ---------------------------------------------------------------------------
+
+def test_socket_recv_timeout_marks_endpoint_dead():
+    """A recv timeout can fire after the length prefix (or part of the
+    body) was consumed: the stream is mid-frame and the next recv would
+    decode body bytes as a length prefix.  The endpoint must mark itself
+    dead and close, so every later call fails fast instead of silently
+    desyncing the protocol."""
+    lst = _socket.socket()
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(1)
+    cli = _socket.socket()
+    cli.connect(lst.getsockname())
+    srv, _ = lst.accept()
+    ep = SocketEndpoint(srv)
+    try:
+        # length prefix promises 100 bytes; only 10 ever arrive
+        cli.sendall(struct.pack("!I", 100) + b"x" * 10)
+        t0 = time.monotonic()
+        with pytest.raises(TransportError, match="timed out"):
+            ep.recv_bytes(timeout=0.3)
+        assert time.monotonic() - t0 < 5.0
+        assert ep.dead
+        # the poisoned endpoint fails fast on BOTH directions
+        with pytest.raises(TransportError, match="dead"):
+            ep.recv_bytes(timeout=0.3)
+        with pytest.raises(TransportError, match="dead"):
+            ep.send_bytes(b"frame")
+        # and it really closed the socket: the peer sees EOF, not a hang
+        cli.settimeout(2.0)
+        assert cli.recv(1) == b""
+    finally:
+        for s in (cli, srv, lst):
+            s.close()
+
+
+def test_socket_recv_rejects_absurd_length_prefix():
+    """A corrupt length prefix must not trigger a giant allocation or a
+    wait-for-a-terabyte hang: refuse, die, close."""
+    lst = _socket.socket()
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(1)
+    cli = _socket.socket()
+    cli.connect(lst.getsockname())
+    srv, _ = lst.accept()
+    ep = SocketEndpoint(srv)
+    try:
+        cli.sendall(struct.pack("!I", 0xFFFFFFFF))
+        with pytest.raises(TransportError, match="exceeds"):
+            ep.recv_bytes(timeout=2.0)
+        assert ep.dead
+    finally:
+        for s in (cli, srv, lst):
+            s.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: close() must escalate join -> SIGTERM -> SIGKILL
+# ---------------------------------------------------------------------------
+
+def test_close_escalates_to_sigkill_for_wedged_host():
+    """A host that wedges AND ignores SIGTERM (the worst zombie) must
+    still be reaped by close(): join times out, terminate() is ignored,
+    kill() is not."""
+    X, _ = _data(n=60, seed=2)
+    params = SBTParams(n_trees=1, max_depth=2, n_bins=8)
+    plans = {0: FaultPlan(rules=[
+        Wedge(tag="hb", nth=1, direction=RECV, ignore_sigterm=True),
+    ], seed=1)}
+    run = MultiHostRun(params, [X[:, 3:]], transport="socket",
+                       fault_plans=plans, timeout=60.0)
+    p = run.procs[0]
+    # trip the wedge: the host installs SIG_IGN and sleeps inside recv
+    run.channel.control_send("host0", "hb", {"t": 0.0})
+    time.sleep(1.0)
+    assert p.is_alive()
+    run.close(join_timeout=1.0)
+    assert not p.is_alive()
+    # SIGTERM was ignored, so only SIGKILL can have ended it
+    assert p.exitcode == -9
+
+
+# ---------------------------------------------------------------------------
+# liveness: slow is marked, wedged is restarted
+# ---------------------------------------------------------------------------
+
+def test_straggler_marked_never_restarted():
+    """A host whose split_infos round-trips blow past the trailing
+    median is MARKED slow — restarting it would burn real progress for
+    zero correctness gain — and training still matches the oracle."""
+    X, y = _data(n=150, seed=4)
+    params = SBTParams(n_trees=2, max_depth=2, n_bins=8, seed=11)
+    Xg, Xh = X[:, :3], [X[:, 3:]]
+    ref = VerticalBoosting(params).fit(Xg, y, [Xh[0].copy()])
+
+    export_dir, state_dir, ckpt_dir = _dirs()
+    plans = {0: FaultPlan(rules=[
+        Delay(tag="split_infos", nth=2, direction=SEND, seconds=0.6),
+    ], seed=21)}
+    run = MultiHostRun(params, Xh, transport="socket", state_dir=state_dir,
+                       fault_plans=plans, timeout=120.0)
+    try:
+        # pre-seeded baseline so one fat outlier is enough to classify
+        pol = StragglerPolicy(factor=3.0, tolerance=1)
+        pol.times.extend([0.02] * 10)
+        run._straggler["host0"] = pol
+        model = run.fit(Xg, y, resilient=True, ckpt_dir=ckpt_dir)
+        assert "host0" in run.slow_hosts
+        assert run.restarts == 0 and run.wedged_restarts == 0
+        np.testing.assert_array_equal(model.train_score_, ref.train_score_)
+        assert run.channel.summary() == ref.channel.summary()
+    finally:
+        run.close()
+
+
+def test_wedged_host_restarted_by_liveness_supervisor():
+    """A host that stops answering heartbeats entirely (wedged, not
+    slow) is killed and respawned by the supervisor; the resilient loop
+    replays the tree and the run still matches the oracle."""
+    X, y = _data(n=120, seed=6)
+    params = SBTParams(n_trees=2, max_depth=2, n_bins=8, seed=13)
+    Xg, Xh = X[:, :3], [X[:, 3:]]
+    ref = VerticalBoosting(params).fit(Xg, y, [Xh[0].copy()])
+
+    export_dir, state_dir, ckpt_dir = _dirs()
+    # wedge on the SECOND tree's enc_gh: the host goes silent mid-run
+    plans = {0: FaultPlan(rules=[
+        Wedge(tag="enc_gh", nth=2, direction=RECV, sleep_seconds=120.0),
+    ], seed=31)}
+    run = MultiHostRun(params, Xh, transport="socket", state_dir=state_dir,
+                       fault_plans=plans, timeout=120.0,
+                       liveness_interval=0.25, liveness_timeout=2.0)
+    try:
+        model = run.fit(Xg, y, resilient=True, ckpt_dir=ckpt_dir,
+                        max_retries=5)
+        assert run.wedged_restarts >= 1
+        assert run.restarts >= 1          # the kill forced a respawn
+        np.testing.assert_array_equal(model.train_score_, ref.train_score_)
+        assert _signatures(model) == _signatures(ref)
+        assert run.channel.summary() == ref.channel.summary()
+    finally:
+        run.close()
+
+
+# ---------------------------------------------------------------------------
+# serving: typed degradation per batch, recovery after rejoin
+# ---------------------------------------------------------------------------
+
+def test_serving_degrades_typed_and_recovers():
+    """Killing one host mid-serving yields a typed PartyUnavailable for
+    the batch — never a hang, never partial bits — while the healthy
+    host's replies are still consumed (no stream poisoning).  The next
+    batch heals the party and serves bit-identically."""
+    X, y = _data(n=150, d=8, seed=8)
+    params = SBTParams(n_trees=2, max_depth=2, n_bins=8, seed=17)
+    Xg = X[:, :2]
+    Xh = [X[:, 2:5], X[:, 5:]]
+    ref = VerticalBoosting(params).fit(Xg, y, [h.copy() for h in Xh])
+
+    export_dir, state_dir, _ = _dirs()
+    run = MultiHostRun(params, Xh, transport="socket",
+                       export_dir=export_dir, state_dir=state_dir,
+                       timeout=60.0, serve_timeout=5.0)
+    try:
+        run.fit(Xg, y)
+        run.serve()
+        Xe, _ = _data(n=40, d=8, seed=9)
+        eg, eh = Xe[:, :2], [Xe[:, 2:5], Xe[:, 5:]]
+        s_ref = ref.predict_score(eg, eh)
+        np.testing.assert_array_equal(run.predict_score(eg, eh), s_ref)
+
+        run.procs[1].kill()
+        run.procs[1].join(5)
+        t0 = time.monotonic()
+        with pytest.raises(PartyUnavailable) as ei:
+            run.predict_score(eg, eh)
+        assert ei.value.party == "host1"
+        assert time.monotonic() - t0 < 30.0     # typed failure, not a hang
+        # next batch: the degraded party is respawned, re-setup from its
+        # export, and the batch serves bit-identically again
+        np.testing.assert_array_equal(run.predict_score(eg, eh), s_ref)
+        assert run.restarts >= 1
+    finally:
+        run.close()

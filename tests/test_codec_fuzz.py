@@ -1,0 +1,228 @@
+"""Fuzzing the wire codec and framing layer (DESIGN.md §11).
+
+Contract under fuzz: for ANY byte string — truncated, bit-flipped,
+adversarial length prefixes, garbage type bytes — ``decode_payload`` and
+``decode_frame`` either return a value or raise :class:`TransportError`.
+Never a different exception type, never a hang, never an allocation
+proportional to a forged length field rather than to the actual buffer.
+
+Runs in two modes: seeded-random fuzz loops always run (no external
+dependency); property-based tests additionally run wherever `hypothesis`
+is installed (the CI chaos job), and are skipped cleanly where it is not.
+"""
+
+import struct
+import time
+
+import numpy as np
+import pytest
+
+from repro.runtime.transport import (KIND_CTRL, KIND_PROTO, TransportError,
+                                     decode_frame, decode_payload,
+                                     encode_frame, encode_payload)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+_U32 = struct.Struct("!I")
+
+SAMPLE_PAYLOADS = [
+    None, True, -7, 2 ** 100, 1.5, "tag", b"\x00\xffraw",
+    (1, "two", None), [1, [2, [3]]], {"a": 1, "b": (None, 2.5)},
+    np.arange(12, dtype=np.int32).reshape(3, 4),
+    np.asarray([10 ** 40, -3], dtype=object),
+    {"ids": np.arange(5), "k": 2, "blob": b"\x01" * 33},
+]
+
+
+def _contract(fn, buf):
+    """Decode must return or raise TransportError — nothing else."""
+    try:
+        fn(buf)
+    except TransportError:
+        pass
+    except Exception as e:          # noqa: BLE001
+        pytest.fail(f"{fn.__name__} raised {type(e).__name__} ({e!r}) on "
+                    f"{buf[:40]!r}... — fuzz contract is TransportError only")
+
+
+# ---------------------------------------------------------------------------
+# always-on seeded fuzz (no external deps)
+# ---------------------------------------------------------------------------
+
+def test_random_bytes_decode_contract():
+    rng = np.random.default_rng(0xC0DEC)
+    for _ in range(400):
+        n = int(rng.integers(0, 200))
+        buf = rng.integers(0, 256, n).astype(np.uint8).tobytes()
+        _contract(decode_payload, buf)
+        _contract(decode_frame, buf)
+
+
+def test_every_truncation_raises_not_crashes():
+    """A strict prefix of a valid encoding can never decode cleanly: the
+    parse is deterministic and consumes the exact encoding, so every cut
+    lands mid-value and must surface as TransportError."""
+    for obj in SAMPLE_PAYLOADS:
+        buf = encode_payload(obj)
+        cuts = range(len(buf)) if len(buf) < 64 else \
+            sorted({0, 1, len(buf) // 2, len(buf) - 1}
+                   | set(int(i) for i in
+                         np.random.default_rng(7).integers(0, len(buf), 16)))
+        for cut in cuts:
+            with pytest.raises(TransportError):
+                decode_payload(buf[:cut])
+
+
+def test_truncated_frames_raise():
+    for obj in SAMPLE_PAYLOADS:
+        frame = encode_frame(KIND_PROTO, "guest", "host0", "enc_gh", 64,
+                             obj, seq=3)
+        for cut in (0, 1, 5, len(frame) // 2, len(frame) - 1):
+            with pytest.raises(TransportError):
+                decode_frame(frame[:cut])
+
+
+def test_byte_flip_fuzz_frames():
+    """Flipped bits anywhere in a frame either still decode (a flip in
+    payload VALUE bytes yields a different value, which is the ledger /
+    dedup layer's problem) or raise TransportError — never an internal
+    numpy/struct/unicode error, never a hang."""
+    rng = np.random.default_rng(0xF11B)
+    frames = [encode_frame(KIND_PROTO, "guest", "host0", "assign_sync",
+                           128, obj, seq=9) for obj in SAMPLE_PAYLOADS]
+    t0 = time.monotonic()
+    for _ in range(300):
+        frame = bytearray(frames[int(rng.integers(len(frames)))])
+        for _ in range(int(rng.integers(1, 5))):
+            frame[int(rng.integers(len(frame)))] ^= \
+                1 << int(rng.integers(8))
+        _contract(decode_frame, bytes(frame))
+    assert time.monotonic() - t0 < 30.0
+
+
+def test_bad_kind_and_type_bytes():
+    frame = bytearray(encode_frame(KIND_CTRL, "a", "b", "t", 0, None))
+    frame[0] = 0x7F
+    with pytest.raises(TransportError, match="kind"):
+        decode_frame(bytes(frame))
+    for t in (b"Z", b"\x00", b"\xff"):
+        with pytest.raises(TransportError, match="type byte|malformed"):
+            decode_payload(t + b"\x00" * 16)
+
+
+def test_absurd_length_prefixes_bounded():
+    """Forged length/count/shape fields must be answered with a raise in
+    bounded time and bounded memory — the decoder may only allocate in
+    proportion to the bytes actually present."""
+    adversarial = [
+        b"l" + _U32.pack(0xFFFFFFFF),                       # 4B-element list
+        b"u" + _U32.pack(0xFFFFFFFF),
+        b"d" + _U32.pack(0xFFFFFFFF),
+        b"s" + _U32.pack(0xFFFFFFFF) + b"x" * 8,            # 4GB string
+        b"b" + _U32.pack(0x7FFFFFFF),
+        b"I\x00" + _U32.pack(0xFFFFFFFF),                   # 4GB bigint
+        # float64 array claiming 2^60 elements in 8 header bytes
+        encode_payload("x")[:0] + b"a" + _U32.pack(3) + b"<f8"
+        + bytes([1]) + struct.pack("!q", 1 << 60),
+        # object array with a forged 10^6-element shape over a 2-byte body
+        b"O" + bytes([1]) + struct.pack("!q", 10 ** 6) + b"\x00\x00",
+        # negative dimension
+        b"a" + _U32.pack(3) + b"<f8" + bytes([2])
+        + struct.pack("!qq", 4, -4),
+    ]
+    for buf in adversarial:
+        t0 = time.monotonic()
+        with pytest.raises(TransportError):
+            decode_payload(buf)
+        assert time.monotonic() - t0 < 2.0, buf[:16]
+
+
+def test_roundtrip_seeded_random_payloads():
+    """Structured roundtrip fuzz: random nested payloads survive
+    encode -> decode exactly."""
+    rng = np.random.default_rng(0x5EED)
+
+    def gen(depth):
+        kind = int(rng.integers(0, 10 if depth < 3 else 7))
+        if kind == 0:
+            return None
+        if kind == 1:
+            return bool(rng.integers(2))
+        if kind == 2:
+            return int(rng.integers(-2 ** 62, 2 ** 62))
+        if kind == 3:
+            return int(rng.integers(-2 ** 40, 2 ** 40)) ** 5    # bigint
+        if kind == 4:
+            return float(rng.normal())
+        if kind == 5:
+            return "".join(chr(int(c)) for c in
+                           rng.integers(32, 0x2FF, rng.integers(0, 12)))
+        if kind == 6:
+            return rng.integers(0, 256, int(rng.integers(0, 20))) \
+                .astype(np.uint8).tobytes()
+        if kind == 7:
+            return [gen(depth + 1) for _ in range(int(rng.integers(0, 4)))]
+        if kind == 8:
+            return tuple(gen(depth + 1)
+                         for _ in range(int(rng.integers(0, 4))))
+        return {f"k{i}": gen(depth + 1)
+                for i in range(int(rng.integers(0, 4)))}
+
+    for _ in range(200):
+        obj = gen(0)
+        assert decode_payload(encode_payload(obj)) == obj
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (run where hypothesis is installed; CI chaos job)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.binary(max_size=512))
+    @settings(max_examples=300, deadline=2000)
+    def test_hyp_arbitrary_bytes_decode_contract(buf):
+        _contract(decode_payload, buf)
+        _contract(decode_frame, buf)
+
+    _payloads = st.recursive(
+        st.none() | st.booleans() | st.integers() |
+        st.floats(allow_nan=False) |
+        st.text(max_size=20) | st.binary(max_size=20),
+        lambda inner: st.lists(inner, max_size=4)
+        | st.dictionaries(st.text(max_size=8), inner, max_size=4),
+        max_leaves=12)
+
+    @given(_payloads)
+    @settings(max_examples=200, deadline=2000)
+    def test_hyp_payload_roundtrip(obj):
+        assert decode_payload(encode_payload(obj)) == obj
+
+    @given(_payloads, st.integers(min_value=0, max_value=10 ** 6))
+    @settings(max_examples=150, deadline=2000)
+    def test_hyp_truncation_always_raises(obj, cut_seed):
+        buf = encode_payload(obj)
+        if len(buf) < 2:
+            return
+        with pytest.raises(TransportError):
+            decode_payload(buf[:cut_seed % (len(buf) - 1)])
+
+    @given(_payloads, st.data())
+    @settings(max_examples=150, deadline=2000)
+    def test_hyp_frame_flip_contract(obj, data):
+        frame = bytearray(encode_frame(KIND_PROTO, "guest", "host0",
+                                       "enc_gh", 7, obj, seq=1))
+        for _ in range(data.draw(st.integers(1, 4))):
+            i = data.draw(st.integers(0, len(frame) - 1))
+            frame[i] ^= 1 << data.draw(st.integers(0, 7))
+        _contract(decode_frame, bytes(frame))
+
+else:
+    def test_hypothesis_unavailable_marker():
+        pytest.skip("hypothesis not installed: property-based variants "
+                    "skipped (seeded fuzz loops above still ran)")

@@ -100,10 +100,10 @@ def test_codec_rejects_trailing_garbage():
 def test_frame_roundtrip():
     payload = {"data": np.arange(8, dtype=np.int32), "m": 4}
     frame = encode_frame(KIND_PROTO, "host0", "guest", "split_infos", 1234,
-                         payload)
-    kind, src, dst, tag, nbytes, out = decode_frame(frame)
-    assert (kind, src, dst, tag, nbytes) == (KIND_PROTO, "host0", "guest",
-                                             "split_infos", 1234)
+                         payload, seq=42)
+    kind, src, dst, tag, seq, nbytes, out = decode_frame(frame)
+    assert (kind, src, dst, tag, seq, nbytes) == (
+        KIND_PROTO, "host0", "guest", "split_infos", 42, 1234)
     np.testing.assert_array_equal(out["data"], payload["data"])
     ctrl = encode_frame(KIND_CTRL, "guest", "host0", "bye", 0, None)
     assert decode_frame(ctrl)[0] == KIND_CTRL
