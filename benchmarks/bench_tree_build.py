@@ -113,6 +113,41 @@ def run_scale():
             f";encrypt_s_per_tree={st1.encrypt_seconds / n_trees:.3f}"
             f";overlap_frac={st1.overlap_fraction:.3f}"))
 
+        if cname == "affine":
+            # pipelined boosting (DESIGN.md §12): encrypt+ship overlapped
+            # with compute.  Bit-identical to the sequential run by
+            # construction — the row asserts it — so the s/tree delta is
+            # pure overlap, not a different model.
+            pipe = VerticalBoosting(dataclasses.replace(base,
+                                                        pipeline=True))
+            _, tp = timed(lambda: pipe.fit(Xg, y, [Xh]))
+            identp = bool(np.array_equal(pipe.predict_proba(Xg, [Xh]),
+                                         single.predict_proba(Xg, [Xh])))
+            stp = pipe.stats
+            rows.append((
+                f"scale/{s['n']}x{s['d']}/{cname}/pipelined",
+                tp / n_trees * 1e6,
+                f"speedup_vs_seq={t1 / tp:.2f}x;bit_identical={identp}"
+                f";encrypt_s_per_tree={stp.encrypt_seconds / n_trees:.3f}"
+                f";wire_overlap_frac={stp.wire_overlap_frac:.3f}"))
+
+            # round-forests (forest_size=k): k bagged member trees per
+            # round share ONE enc_gh round-trip, so encrypt seconds
+            # amortize across the round's members
+            fk = 4
+            forest = VerticalBoosting(dataclasses.replace(
+                base, forest_size=fk, pipeline=True))
+            _, tf = timed(lambda: forest.fit(Xg, y, [Xh]))
+            n_member = n_trees * fk
+            stf = forest.stats
+            rows.append((
+                f"scale/{s['n']}x{s['d']}/{cname}/forest{fk}",
+                tf / n_member * 1e6,
+                f"members={n_member}"
+                f";auc={auc(forest.predict_proba(Xg, [Xh]), y):.3f}"
+                f";encrypt_s_per_tree={stf.encrypt_seconds / n_member:.3f}"
+                f";wire_overlap_frac={stf.wire_overlap_frac:.3f}"))
+
         if mesh is None:
             rows.append((f"scale/{s['n']}x{s['d']}/{cname}/sharded", 0.0,
                          "SKIP:single-device (set XLA_FLAGS="

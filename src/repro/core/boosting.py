@@ -29,7 +29,8 @@ from .histogram import CipherHistogram
 from .loss import LogLoss, SoftmaxLoss
 from .party import Channel, Stats
 from .tree import (GUEST, FederatedTree, HostRuntime, MOCodec, NoPackCodec,
-                   PackedCodec, TreeContext, grow_tree, predict_tree)
+                   PackedCodec, TreeContext, _EncryptPump, _encrypt_all,
+                   grow_forest, grow_tree, predict_tree)
 
 
 @dataclasses.dataclass
@@ -58,6 +59,17 @@ class SBTParams:
     host_depth: int = 3
     trees_per_party: int = 1           # mix mode
     use_pallas: bool = True
+    pipeline: bool = False             # pipelined boosting (DESIGN.md §12):
+                                       # encrypt+broadcast of the next
+                                       # tree's enc_gh overlaps the current
+                                       # tree's growth; bit-identical to
+                                       # sequential for forest_size=1
+    forest_size: int = 1               # round-forest width (FedGBF-style):
+                                       # k bagged shallow trees per round
+                                       # share ONE enc_gh round-trip;
+                                       # binary objective only
+    forest_subsample: float = 0.8      # per-member bag fraction of the
+                                       # (GOSS-)selected rows
     seed: int = 0
     mesh: object = None                # optional (data, model) jax Mesh: the
                                        # frontier engine shards instances
@@ -114,6 +126,11 @@ class VerticalBoosting:
         # appended n_trees more trees whose (fid, bid) splits were decoded
         # against the NEW fit's binning thresholds — silently wrong
         # scores — and stats/ledger accumulated across fits
+        if p.forest_size > 1 and p.objective != "binary":
+            raise ValueError(
+                "forest_size > 1 (round-forests) requires objective="
+                "'binary': multiclass rounds already batch one tree per "
+                "class and MO packs classes into slots")
         self.trees = []
         self.tree_class = []
         self.stats = Stats()
@@ -147,8 +164,9 @@ class VerticalBoosting:
     @property
     def trees_per_round(self) -> int:
         """Trees one ``boost_round`` appends (the resume-boundary unit)."""
-        return (self.params.n_classes
-                if self.params.objective == "multiclass" else 1)
+        if self.params.objective == "multiclass":
+            return self.params.n_classes
+        return max(1, self.params.forest_size)
 
     def boost_round(self, t: int, score: np.ndarray) -> np.ndarray:
         """Grow round ``t``'s tree(s) and return the updated score.
@@ -175,12 +193,43 @@ class VerticalBoosting:
             # the class loop trained class c+1 on scores already
             # updated by class c's tree this round
             g, h = self._loss.grad_hess(y, score)
+            mix_party = self._mix_party(t, self._n_parties)
+            ctxs, scheds = [], []
             for c in range(p.n_classes):
-                tree, leaf_rows = self._grow(
-                    self.cipher, g[:, c], h[:, c], t,
-                    mix_party=self._mix_party(t, self._n_parties),
+                ctx, sched = self._tree_ctx(
+                    self.cipher, g[:, c], h[:, c], t, mix_party=mix_party,
                     tree_idx=t * p.n_classes + c)
+                ctxs.append(ctx)
+                scheds.append(sched)
+            # cross-class prefetch (DESIGN.md §12): all class g/h of the
+            # round are known up front, so class c+1's enc_gh encrypts and
+            # ships on a pump thread WHILE class c grows.  One pump in
+            # flight at a time: class c's broadcast always completes
+            # before c+1's dispatches, keeping wire order sequential (and
+            # the protocol bit-identical — only wall-clock overlap moves).
+            pump = None
+            for c in range(p.n_classes):
+                ctx = ctxs[c]
+                if pump is not None:
+                    pump.join()
+                    pump = None
+                if p.pipeline:
+                    if not ctx.enc_shipped and \
+                            self._sched_has_host(scheds[c], len(ctx.hosts)):
+                        _encrypt_all(ctx, ctx.g[ctx.sel_rows],
+                                     ctx.h[ctx.sel_rows])
+                    if c + 1 < p.n_classes and self._sched_has_host(
+                            scheds[c + 1], len(ctxs[c + 1].hosts)):
+                        nxt = ctxs[c + 1]
+                        pump = _EncryptPump(nxt, nxt.g[nxt.sel_rows],
+                                            nxt.h[nxt.sel_rows])
+                tree, leaf_rows = grow_tree(ctx, scheds[c])
                 grown.append((tree, c, leaf_rows))
+            if pump is not None:      # defensive: last class never pumps
+                pump.join()
+        elif p.forest_size > 1:
+            g, h = self._loss.grad_hess(y, score)
+            grown.extend(self._grow_forest(self.cipher, g, h, t))
         else:
             g, h = self._loss.grad_hess(y, score)
             tree, leaf_rows = self._grow(
@@ -218,8 +267,29 @@ class VerticalBoosting:
         return cycle % n_parties        # 0 = guest, 1.. = host id + 1
 
     # ------------------------------------------------------------------
-    def _grow(self, cipher, g, h, t: int, mix_party=None,
-              tree_idx: int | None = None) -> tuple:
+    def _make_hosts(self, cipher) -> list:
+        if self.remote_hosts is not None:
+            return self.remote_hosts    # one party per process (transport)
+        p = self.params
+        engines = [CipherHistogram(cipher, p.n_bins, sparse=p.sparse,
+                                   use_pallas=p.use_pallas,
+                                   stats=self.stats, mesh=p.mesh)
+                   for _ in self.host_data]
+        return [HostRuntime(hid=i, data=d, engine=e)
+                for i, (d, e) in enumerate(zip(self.host_data, engines))]
+
+    def _sched_has_host(self, sched, n_hosts: int) -> bool:
+        if n_hosts == 0:
+            return False
+        if sched is None:
+            return True
+        return any(sched(d)[1] for d in range(self.params.max_depth))
+
+    def _tree_ctx(self, cipher, g, h, t: int, mix_party=None,
+                  tree_idx: int | None = None) -> tuple:
+        """Build one tree's (TreeContext, schedule) without growing it —
+        the pipelined driver needs the context early so the next tree's
+        enc_gh can encrypt + ship while the current tree still splits."""
         p = self.params
         n = g.shape[0]
         # the ABSOLUTE index of the tree being grown.  Passed explicitly
@@ -244,21 +314,58 @@ class VerticalBoosting:
             sel = np.arange(n)
 
         codec = self._make_codec(cipher, g[sel], h[sel])
-        if self.remote_hosts is not None:
-            hosts = self.remote_hosts   # one party per process (transport)
-        else:
-            engines = [CipherHistogram(cipher, p.n_bins, sparse=p.sparse,
-                                       use_pallas=p.use_pallas,
-                                       stats=self.stats, mesh=p.mesh)
-                       for _ in self.host_data]
-            hosts = [HostRuntime(hid=i, data=d, engine=e)
-                     for i, (d, e) in enumerate(zip(self.host_data, engines))]
+        hosts = self._make_hosts(cipher)
         ctx = TreeContext(params=p, cipher=cipher, codec=codec,
                           channel=self.channel, stats=self.stats,
                           guest_data=self.guest_data, g=g, h=h, sel_rows=sel,
                           hosts=hosts, tree_idx=tree_idx)
-        schedule = self._schedule(mix_party, len(hosts))
+        return ctx, self._schedule(mix_party, len(hosts))
+
+    def _grow(self, cipher, g, h, t: int, mix_party=None,
+              tree_idx: int | None = None) -> tuple:
+        ctx, schedule = self._tree_ctx(cipher, g, h, t, mix_party=mix_party,
+                                       tree_idx=tree_idx)
         return grow_tree(ctx, schedule)
+
+    def _grow_forest(self, cipher, g, h, t: int) -> list:
+        """One round-forest (FedGBF-style): ``forest_size`` bagged member
+        trees sharing ONE enc_gh round-trip (``core/tree.py grow_forest``).
+        Leaf weights grow with learning_rate / k so the round's additive
+        update averages the members instead of k-times overshooting.
+        Returns ``[(tree, -1, leaf_rows), ...]``."""
+        p = self.params
+        k = p.forest_size
+        base = t * k                    # absolute index of the first member
+        n = g.shape[0]
+        if p.goss:
+            # ONE GOSS pass per round, keyed by the round's base index:
+            # members share the encrypted batch, so they must share the
+            # selection it was built from — bags re-subsample within it
+            goss_rng = np.random.default_rng((p.seed, base, 17))
+            sel, w = goss_sample(g, p.top_rate, p.other_rate, goss_rng)
+            g = g.copy(); h = h.copy()
+            g[sel] *= w; h[sel] *= w
+        else:
+            sel = np.arange(n)
+        bag_rng = np.random.default_rng((p.seed, base, 29))
+        if p.forest_subsample >= 1.0:
+            bags = [np.arange(len(sel)) for _ in range(k)]
+        else:
+            size = max(1, int(round(p.forest_subsample * len(sel))))
+            bags = [np.sort(bag_rng.choice(len(sel), size, replace=False))
+                    for _ in range(k)]
+
+        codec = self._make_codec(cipher, g[sel], h[sel])
+        hosts = self._make_hosts(cipher)
+        fp = dataclasses.replace(p, learning_rate=p.learning_rate / k)
+        ctx = TreeContext(params=fp, cipher=cipher, codec=codec,
+                          channel=self.channel, stats=self.stats,
+                          guest_data=self.guest_data, g=g, h=h, sel_rows=sel,
+                          hosts=hosts, tree_idx=base, forest_k=k)
+        schedule = self._schedule(self._mix_party(t, self._n_parties),
+                                  len(hosts))
+        members = grow_forest(ctx, bags, schedule)
+        return [(tree, -1, leaf_rows) for tree, leaf_rows in members]
 
     def _schedule(self, mix_party, n_hosts: int):
         p = self.params

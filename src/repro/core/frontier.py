@@ -193,11 +193,38 @@ class CipherFrontier:
             node_slot[node_rows[nid]] = k
         return node_slot
 
+    def layer_slots_forest(self, node_rows: dict, direct: list, k: int,
+                           stride: int):
+        """Member-batched slot assignment for one round-forest layer.
+
+        ``direct`` holds global node ids ``gid = member * stride + nid``; a
+        row can sit in at most one direct node *per member tree*, so the
+        assignment is a (n, k) matrix of member-local slots.  Returns
+        ``(slot_mat, member_local, n_local)`` where ``member_local`` maps
+        each gid to ``(member, local_slot)`` (local slots are assigned in
+        ``direct`` order within each member) and ``n_local`` is the widest
+        member's direct count — the kernel's shared node extent.
+        """
+        slot_mat = np.full((self._n_rows_dev, k), -1, np.int32)
+        member_local: dict = {}
+        counts = [0] * k
+        for gid in direct:
+            m = int(gid) // stride
+            member_local[gid] = (m, counts[m])
+            slot_mat[node_rows[gid], m] = counts[m]
+            counts[m] += 1
+        return slot_mat, member_local, max(counts) if counts else 0
+
     def layer_histograms(self, node_rows: dict, direct: list,
-                         subtract: list) -> dict:
+                         subtract: list, forest: int = 0) -> dict:
         """All frontier histograms of one layer; caches the results for the
-        next layer's subtraction.  Returns {nid: (hist, counts)}."""
-        out = self.engine.layer_histograms(self, node_rows, direct, subtract)
+        next layer's subtraction.  Returns {nid: (hist, counts)}.
+
+        ``forest > 0`` selects the round-forest dispatch: node ids in
+        ``direct``/``subtract`` are global gids and the layer launch batches
+        over (member tree, node)."""
+        out = self.engine.layer_histograms(self, node_rows, direct, subtract,
+                                           forest=forest)
         for nid, (h, c) in out.items():
             self.store(nid, h, c)
         return out
@@ -212,6 +239,47 @@ class CipherFrontier:
             stats.n_collectives += 1
         if self.channel is not None:
             self.channel.collective(self.party, kind, nbytes)
+
+
+class FrontierBuffer:
+    """Dual-buffer holder for pipelined training (DESIGN.md §12).
+
+    A pipelined guest ships tree t+1's ``enc_gh`` while tree t is still
+    splitting.  The receiving party builds the next tree's
+    :class:`CipherFrontier` (and whatever runtime wraps it) *eagerly* on
+    arrival — ciphertexts land device-resident, encrypt/wire time hidden
+    behind tree t's compute — but must not disturb the active tree's state.
+    This buffer keeps the active entry and the staged next entry separate;
+    ``activate`` swaps the staged entry in at the first protocol message
+    that references the new tree.  Thread-safe under the broker reader
+    thread: staging and activation touch disjoint slots.
+    """
+
+    def __init__(self):
+        self.key = None          # active tree id
+        self.value = None        # active frontier-bearing runtime
+        self._staged: dict = {}  # tree id -> staged runtime
+
+    def stage(self, key, value) -> None:
+        self._staged[key] = value
+
+    def staged(self, key) -> bool:
+        return key in self._staged
+
+    def activate(self, key):
+        """Promote the staged entry for ``key`` to active and return it."""
+        self.value = self._staged.pop(key)
+        self.key = key
+        return self.value
+
+    def set_active(self, key, value) -> None:
+        self.key = key
+        self.value = value
+
+    def clear(self) -> None:
+        self.key = None
+        self.value = None
+        self._staged.clear()
 
 
 class GuestFrontier:

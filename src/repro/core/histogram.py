@@ -36,11 +36,17 @@ from __future__ import annotations
 import numpy as np
 
 from ..kernels.histogram import (allgather_wire_bytes, ciphertext_histogram,
-                                 count_histogram,
+                                 count_histogram, forest_ciphertext_histogram,
                                  layer_ciphertext_histogram,
                                  layer_count_histogram, psum_wire_bytes,
+                                 sharded_forest_ciphertext_histogram,
                                  sharded_layer_ciphertext_histogram)
 from .binning import BinnedData
+
+# Round-forest global node ids: gid = member * GID_STRIDE + member-local nid.
+# Host-side dicts (histogram cache, shuffle perms, split tables) key on the
+# opaque gid; k = 1 degenerates to gid == nid, i.e. the classic layer path.
+GID_STRIDE = 1 << 20
 
 
 class PlainHistogram:
@@ -217,7 +223,7 @@ class CipherHistogram:
 
     # -- layer-batched accumulation (DESIGN.md §6/§7) ---------------------
     def layer_histograms(self, frontier, node_rows: dict, direct: list,
-                         subtract: list) -> dict:
+                         subtract: list, forest: int = 0) -> dict:
         """All frontier histograms of one tree layer in one batch.
 
         frontier:  a ``core.frontier.CipherFrontier`` — the device-resident
@@ -235,6 +241,14 @@ class CipherHistogram:
                    limb domain (``cipher.lazy_sub``) so a SINGLE
                    ``cipher.reduce`` canonicalizes direct and subtracted
                    nodes together.
+        forest:    0 for the classic layer path; k > 0 means ``direct`` /
+                   ``subtract`` hold gids of a k-member round-forest layer
+                   (``gid = member * GID_STRIDE + nid``) and a row may sit
+                   in one direct node *per member* — the accumulation runs
+                   the (tree, node)-batched kernel, then the member-major
+                   result is gathered back into ``direct`` order so every
+                   downstream step (lazy subtraction, the single reduce,
+                   cumsum, shuffle, compress) is unchanged.
         Returns {nid: (hist, counts)}; the frontier owns cache writes.
         """
         if self.cipher.backend != "limb":
@@ -243,13 +257,42 @@ class CipherHistogram:
         n_f, n_b = frontier.data.n_features, self.n_bins
         sparse = frontier.sparse
         slot_of = {nid: k for k, nid in enumerate(direct)}
-        node_slot = frontier.layer_slots(node_rows, direct)
 
         out = {}
         n_d = len(direct)
         counts = np.zeros((n_d, n_f, n_b), np.int64)
         lazy = None
-        if n_d:
+        node_slot = None
+        if n_d and forest:
+            slot_mat, member_local, n_local = frontier.layer_slots_forest(
+                node_rows, direct, forest, GID_STRIDE)
+            nh = frontier.bins_np.shape[0]
+            cnts_m = [np.asarray(layer_count_histogram(
+                frontier.bins_np, slot_mat[:nh, m], n_local,
+                n_b)).astype(np.int64) for m in range(forest)]
+            for kk, gid in enumerate(direct):
+                m, loc = member_local[gid]
+                counts[kk] = cnts_m[m][loc]
+            lazy_f = self._forest_dispatch(frontier, slot_mat, n_local,
+                                           forest)
+            n, n_slots, width = frontier.state.cts.shape
+            lazy_f = lazy_f.reshape(forest, n_local, n_f, n_b, n_slots,
+                                    width)
+            # gather member-major blocks back into flat ``direct`` order
+            t_idx = jnp.asarray(np.array(
+                [member_local[gid][0] for gid in direct], np.int32))
+            s_idx = jnp.asarray(np.array(
+                [member_local[gid][1] for gid in direct], np.int32))
+            lazy = lazy_f[t_idx, s_idx]      # (n_d, n_f, n_b, slots, width)
+            if sparse:
+                # global-slot matrix for the zero-bin recovery scatter: one
+                # column per member, entries index into ``direct``
+                node_slot = np.full((frontier._n_rows_dev, forest), -1,
+                                    np.int32)
+                for kk, gid in enumerate(direct):
+                    node_slot[node_rows[gid], member_local[gid][0]] = kk
+        elif n_d:
+            node_slot = frontier.layer_slots(node_rows, direct)
             # node_slot is aligned with the (possibly mesh-padded) device
             # bins; the plaintext counts run on the unpadded host mirror
             counts = np.asarray(layer_count_histogram(
@@ -301,6 +344,39 @@ class CipherHistogram:
             out[nid] = (canon[n_d + j],
                         frontier.count(par) - counts[slot_of[sib]])
         return out
+
+    def _forest_dispatch(self, frontier, slot_mat: np.ndarray, n_local: int,
+                         k: int):
+        """One (tree, node)-batched accumulation dispatch for a round-forest
+        layer: the member axis rides through the kernel grid while the
+        member-local node axis keeps the layer dispatch's "model" blocking.
+        Returns (k, n_local, n_f, n_b, L) lazy limb sums."""
+        state = frontier.state
+        n_slots, width = state.cts.shape[1:]
+        flat = frontier.cts_flat
+        n_pad = 1 << max(n_local - 1, 0).bit_length()
+        if self._mesh_devices() > 1:
+            lazy = sharded_forest_ciphertext_histogram(
+                state.bins, slot_mat, flat, n_pad, self.n_bins, self.mesh,
+                use_pallas=self.use_pallas)[:, :n_local]
+            sizes = dict(self.mesh.shape)
+            mm = sizes.get("model", 1)
+            npm = -(-n_pad // mm)
+            shard_bytes = (k * npm * frontier.data.n_features * self.n_bins
+                           * n_slots * width * 4)
+            if sizes.get("data", 1) > 1:
+                frontier.collective("hist_psum",
+                                    psum_wire_bytes(self.mesh, shard_bytes))
+            if mm > 1:
+                frontier.collective(
+                    "hist_allgather",
+                    allgather_wire_bytes(self.mesh, shard_bytes * mm))
+        else:
+            lazy = forest_ciphertext_histogram(
+                state.bins, slot_mat, flat, n_pad, self.n_bins,
+                use_pallas=self.use_pallas)[:, :n_local]
+        self._count_launch()
+        return lazy
 
     def _layer_dispatch(self, frontier, node_slot: np.ndarray, n_d: int):
         """One accumulation dispatch for the layer's direct nodes: the
@@ -355,16 +431,21 @@ class CipherHistogram:
         """Batched §6.2 recovery: per node, zero-bin += total - sum(bins).
 
         hist: (n_d, n_f, n_b, n_slots, L) canonical; cts_wide: (n, n_slots,
-        width) padded limbs aligned with node_slot."""
+        width) padded limbs aligned with node_slot.  A 2-D node_slot is the
+        round-forest global-slot matrix (one column per member: a row
+        contributes its ciphertext to up to one node per member tree)."""
         import jax
         import jax.numpy as jnp
         from .he import limbs
         n_d = hist.shape[0]
         width = self.cipher.hist_width
-        # per-node ciphertext totals: one scatter-add + one reduce
+        # per-node ciphertext totals: one scatter-add (per member column in
+        # forest mode) + one reduce
         slot = np.where(node_slot < 0, n_d, node_slot)
         tot_lazy = jnp.zeros((n_d + 1,) + tuple(cts_wide.shape[1:]),
-                             jnp.int32).at[jnp.asarray(slot)].add(cts_wide)
+                             jnp.int32)
+        for col in (slot.T if slot.ndim == 2 else [slot]):
+            tot_lazy = tot_lazy.at[jnp.asarray(col)].add(cts_wide)
         if self._mesh_devices() > 1:
             # cts live mesh-sharded; land the small per-node totals next to
             # the (single-device) gathered histograms before mixing
@@ -425,6 +506,59 @@ class CipherHistogram:
         ch, cc = child
         return self.cipher.sub(ph, ch), pc - cc
 
+    def _sharded_cumsum(self, wide, bin_axis: int):
+        """Mesh-sharded ciphertext-domain prefix sum over the bin axis.
+
+        The leading (node, feature) axes flatten into one embarrassingly
+        parallel row axis sharded over "data": each shard cumsums and
+        carry-fixes its rows with NO collective — cumsum and reduce are
+        per-row — so the result is bit-identical to the single-device path.
+        This closes the last single-device remainder of the layer pipeline
+        (accumulate and decrypt were sharded in PRs 2-3; the layer cumsum
+        between them still serialized on one device).
+
+        Gated exactly like ``_decrypt_ints``: shard only when every data
+        shard gets at least one full kernel row block (shallow layers are
+        sub-millisecond and would pay a shard_map compile per pow2 bucket).
+        Returns None below the gate; the caller falls back to the
+        single-device reduce."""
+        if self._mesh_devices() <= 1 or bin_axis < 1:
+            return None
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from ..kernels.modmul.modmul import BLOCK_N
+        from ..parallel.sharding import data_pad, gbdt_sharding
+        mesh = self.mesh
+        dd = dict(mesh.shape).get("data", 1)
+        lead = tuple(wide.shape[:bin_axis])
+        G = int(np.prod(lead))
+        if dd <= 1 or G < BLOCK_N * dd:
+            return None
+        tail = tuple(wide.shape[bin_axis:])       # (n_b, slots, width)
+        x = wide.reshape((G,) + tail)
+        # pow2 bucketing caps distinct compilations at O(log max_G), same
+        # rationale as the decrypt stack's candidate padding
+        bucket = 1 << max(G - 1, 0).bit_length()
+        bucket += data_pad(mesh, bucket)
+        if bucket > G:
+            x = jnp.pad(x, [(0, bucket - G)] + [(0, 0)] * (x.ndim - 1))
+        x = jax.device_put(
+            x, gbdt_sharding(mesh, "split_infos", ndim=x.ndim))
+        out = shard_map(
+            lambda xs: self.cipher.reduce(jnp.cumsum(xs, axis=1)),
+            mesh=mesh,
+            in_specs=P("data", None, None, None),
+            out_specs=P("data", None, None, None),
+            check_rep=False)(x)
+        # land on one device (jax-0.4.37 eager-mixing caveat, see
+        # kernels/histogram/ops.py) before the shuffle/compress consumers
+        out = jax.device_put(out[:G], jax.devices()[0])
+        # reduce canonicalizes the limb axis (hist width -> Ln)
+        return out.reshape(lead + tuple(out.shape[1:]))
+
     def cumsum(self, hist):
         """Prefix-sum over the bin axis in the ciphertext domain.  Accepts a
         single histogram (n_f, n_b, slots[, L]) or a layer-batched stack with
@@ -434,7 +568,11 @@ class CipherHistogram:
             from .he import limbs
             hist = jnp.asarray(hist)
             wide = limbs.pad_limbs(hist, self.cipher.hist_width)
-            return self.cipher.reduce(jnp.cumsum(wide, axis=hist.ndim - 3))
+            bin_axis = hist.ndim - 3
+            out = self._sharded_cumsum(wide, bin_axis)
+            if out is not None:
+                return out
+            return self.cipher.reduce(jnp.cumsum(wide, axis=bin_axis))
         flat = hist.reshape((-1,) + hist.shape[-2:])   # (G, n_b, slots)
         out = np.empty(flat.shape, dtype=object)
         for i in range(flat.shape[0]):

@@ -16,6 +16,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
+import threading
 
 
 class PartyUnavailable(RuntimeError):
@@ -55,6 +57,9 @@ class Stats:
     n_cts_placements: int = 0   # host->device ciphertext re-placements the
                                 # frontier performed (0 = born sharded, §8)
     encrypt_seconds: float = 0.0  # guest encrypt wall time (blocked once/tree)
+    prefetch_seconds: float = 0.0  # encrypt+ship wall time hidden behind
+                                   # other useful work by the pipelined
+                                   # prefetch pump (subset of encrypt time)
     guest_hist_seconds: float = 0.0   # guest plaintext candidate time that
                                       # ran while host cipher work was in
                                       # flight (the overlapped window)
@@ -73,11 +78,15 @@ class Stats:
     # UPPER bound on true concurrency: the host pipeline may drain before
     # the guest window ends (measuring the drain would require a sync probe
     # that serializes the very overlap being measured)
+    wire_overlap: list = dataclasses.field(default_factory=list)
+    # per tree: fraction of the encrypt+ship window that ran concurrently
+    # with other work (0.0 for sequential runs, where the guest blocks)
 
     def as_dict(self):
         d = dataclasses.asdict(self)
         d["tree_seconds"] = list(self.tree_seconds)
         d["layer_overlap"] = list(self.layer_overlap)
+        d["wire_overlap"] = list(self.wire_overlap)
         return d
 
     # gauge fields are maxima, not counters: merging across parties must
@@ -102,9 +111,28 @@ class Stats:
     def overlap_fraction(self) -> float:
         """Mean per-layer fraction of candidate wall time spent in the
         guest's plaintext-histogram window while the host cipher pipeline
-        was dispatched (upper bound on true concurrency, see above)."""
-        return (float(sum(self.layer_overlap)) / len(self.layer_overlap)
-                if self.layer_overlap else 0.0)
+        was dispatched (upper bound on true concurrency, see above).
+
+        Plain-cipher runs record no cipher work (``encrypt_seconds == 0``)
+        and may log degenerate per-layer entries; non-finite entries are
+        dropped and an empty list clamps to 0.0 so the property never
+        returns NaN or raises ZeroDivisionError."""
+        vals = [v for v in self.layer_overlap if math.isfinite(v)]
+        if not vals:
+            return 0.0
+        return float(sum(vals)) / len(vals)
+
+    @property
+    def wire_overlap_frac(self) -> float:
+        """Fraction of total encrypt+ship wall time hidden behind other
+        work by the pipelined prefetch pump (PR 3's ``overlap_fraction``
+        analogue for the wire).  Clamped to [0, 1]; 0.0 when no encrypt
+        time was recorded at all (plain runs), never NaN."""
+        denom = float(self.encrypt_seconds)
+        if not math.isfinite(denom) or denom <= 0.0:
+            return 0.0
+        frac = float(self.prefetch_seconds) / denom
+        return max(0.0, min(1.0, frac))
 
 
 class Channel:
@@ -121,18 +149,25 @@ class Channel:
         self.coll_ledger = []
         self.coll_totals = collections.Counter()
         self.coll_msgs = collections.Counter()
+        # the pipelined encrypt pump (core/tree.py) records its enc_gh
+        # send from a worker thread while the training thread records the
+        # layer protocol: Counter += is read-modify-write, so ledger
+        # mutation takes this lock (uncontended in sequential runs)
+        self._lock = threading.Lock()
 
     def send(self, src: str, dst: str, tag: str, payload, nbytes: int):
-        self.ledger.append((src, dst, tag, int(nbytes)))
-        self.totals[tag] += int(nbytes)
-        self.msgs[tag] += 1
+        with self._lock:
+            self.ledger.append((src, dst, tag, int(nbytes)))
+            self.totals[tag] += int(nbytes)
+            self.msgs[tag] += 1
         return payload
 
     def collective(self, party: str, kind: str, nbytes: int) -> None:
         """Record an intra-party device collective (analytic byte count)."""
-        self.coll_ledger.append((party, kind, int(nbytes)))
-        self.coll_totals[kind] += int(nbytes)
-        self.coll_msgs[kind] += 1
+        with self._lock:
+            self.coll_ledger.append((party, kind, int(nbytes)))
+            self.coll_totals[kind] += int(nbytes)
+            self.coll_msgs[kind] += 1
 
     def snapshot(self) -> dict:
         """Accounting state at a resume boundary (tree/round edge).

@@ -57,7 +57,7 @@ from . import encoding, mo_encoding
 from .binning import BinnedData
 from .frontier import CipherFrontier, GuestFrontier
 from .he import limbs
-from .histogram import CipherHistogram, PlainHistogram
+from .histogram import GID_STRIDE, CipherHistogram, PlainHistogram
 from .party import Channel, Stats, ct_wire_bytes
 from .split import (BestSplit, SplitCandidates, candidates_from_cumsum,
                     decode_sid, find_best_split, leaf_weight)
@@ -241,6 +241,10 @@ class HostRuntime:
     stats: Stats | None = None
     codec: object = None         # packing view from the enc_gh payload
     shuffle_rng: object = None   # host-PRIVATE split-id shuffle stream
+    table_sinks: dict | None = None   # round-forest demux: member ->
+                                 # per-member split table mirror (wired by a
+                                 # PartyProcess so serving export sees local
+                                 # nids per member tree; None in-process)
     _outbox: dict = dataclasses.field(default_factory=dict)
 
     # -- wiring ---------------------------------------------------------
@@ -299,6 +303,7 @@ class HostRuntime:
         physical."""
         p = self.params
         splittable = [int(nid) for nid in plan["splittable"]]
+        forest = int(plan.get("forest", 0) or 0)
 
         # prune the parent-histogram cache to exactly this layer's
         # subtract parents — BEFORE the empty-layer return, so an
@@ -332,8 +337,15 @@ class HostRuntime:
         direct, subtract = _resolve_modes(splittable, hist_mode,
                                           self.frontier,
                                           p.histogram_subtraction)
-        node_rows = {nid: np.where(node_of == nid)[0] for nid in splittable}
-        hists = self.frontier.layer_histograms(node_rows, direct, subtract)
+        if forest:
+            # round-forest plan: node_of is (n_sel, k) and node ids are gids
+            node_rows = {nid: np.where(node_of[:, nid // GID_STRIDE]
+                                       == nid)[0] for nid in splittable}
+        else:
+            node_rows = {nid: np.where(node_of == nid)[0]
+                         for nid in splittable}
+        hists = self.frontier.layer_histograms(node_rows, direct, subtract,
+                                               forest=forest)
         for nid in direct:
             self.stats.n_hom_add += int(hists[nid][1].sum()) * n_slots
         self.stats.n_hom_add += len(subtract) * n_f * n_b * n_slots
@@ -406,6 +418,11 @@ class HostRuntime:
         real_sid = int(self.perms[nid][sid])
         fid, bid = decode_sid(real_sid, self.params.n_bins)
         self.table[nid] = (fid, bid)
+        if self.table_sinks is not None:
+            # round-forest gids demux into per-member tables with LOCAL
+            # nids, so the serving export sees one table per member tree
+            m, loc = divmod(nid, GID_STRIDE)
+            self.table_sinks.setdefault(m, {})[loc] = (fid, bid)
         go_left = self.data.bins[rows, fid] <= bid
         self._reply("assign_mask", go_left, (len(go_left) + 7) // 8)
 
@@ -423,6 +440,9 @@ class TreeContext:
     sel_rows: np.ndarray         # GOSS-selected row ids (into full set)
     hosts: list = dataclasses.field(default_factory=list)
     tree_idx: int = 0            # global tree counter (host shuffle seeds)
+    forest_k: int = 1            # round-forest width sharing ONE enc_gh
+    enc_shipped: bool = False    # enc_gh already broadcast (pipelined pump
+                                 # ran before the grower, DESIGN.md §12)
 
 
 def _crypto_mesh(params, cipher):
@@ -494,12 +514,62 @@ def _encrypt_all(ctx: TreeContext, g_sel: np.ndarray,
                   "eta_s": int(getattr(ctx.codec, "eta_s", 0)),
                   "b_slot": int(getattr(ctx.codec, "b_slot", 0))}
     payload = {"tree": int(ctx.tree_idx), "seed": int(p.seed),
-               "sel_rows": ctx.sel_rows, "codec": codec_view, "cts": cts}
+               "forest": int(ctx.forest_k), "sel_rows": ctx.sel_rows,
+               "codec": codec_view, "cts": cts}
     for host in ctx.hosts:
         host.bind(ctx.params, ctx.cipher, ctx.channel, ctx.stats)
         ctx.channel.send("guest", f"host{host.hid}", "enc_gh", payload,
                          nbytes)
         host.deliver("enc_gh", payload)
+    ctx.enc_shipped = True
+
+
+class _EncryptPump:
+    """Background encrypt-and-ship of one tree's ``enc_gh`` (DESIGN.md §12).
+
+    Pipelined mode runs :func:`_encrypt_all` on a worker thread so the
+    guest's plaintext work (layer-0 histogram candidates, or the previous
+    round's remaining layers in the boosting driver's cross-round prefetch)
+    overlaps the encrypt + broadcast.  The payload is byte-identical to the
+    synchronous call — only wall-clock ordering changes — so pipelined runs
+    stay bit-identical to sequential ones.
+
+    ``join`` settles the overlap accounting: the encrypt wall time that
+    elapsed before the joiner arrived was *hidden* behind useful work and
+    accrues to ``Stats.prefetch_seconds`` (a subset of ``encrypt_seconds``,
+    which :func:`_encrypt_all` still tallies in full); the per-tree hidden
+    fraction lands in ``Stats.wire_overlap``.
+    """
+
+    def __init__(self, ctx: TreeContext, g_sel: np.ndarray,
+                 h_sel: np.ndarray):
+        import threading
+        self.ctx = ctx
+        self._err: BaseException | None = None
+        self._done_t: float | None = None
+        self._t0 = time.perf_counter()
+        self._thread = threading.Thread(
+            target=self._run, args=(g_sel, h_sel), daemon=True)
+        self._thread.start()
+
+    def _run(self, g_sel, h_sel) -> None:
+        try:
+            _encrypt_all(self.ctx, g_sel, h_sel)
+        except BaseException as e:          # surfaced at join()
+            self._err = e
+        finally:
+            self._done_t = time.perf_counter()
+
+    def join(self) -> None:
+        t_join = time.perf_counter()
+        self._thread.join()
+        if self._err is not None:
+            raise self._err
+        enc = max(self._done_t - self._t0, 0.0)
+        hidden = max(0.0, min(self._done_t, t_join) - self._t0)
+        stats = self.ctx.stats
+        stats.prefetch_seconds += hidden
+        stats.wire_overlap.append(hidden / enc if enc > 0 else 0.0)
 
 
 def _resolve_modes(splittable: list, hist_mode: dict, cache,
@@ -646,9 +716,16 @@ def grow_tree(ctx: TreeContext,
     g_sel = ctx.g[ctx.sel_rows]
     h_sel = ctx.h[ctx.sel_rows]
 
+    pump = None
     any_host = any(feature_parties(d)[1] for d in range(p.max_depth))
-    if any_host:
-        _encrypt_all(ctx, g_sel, h_sel)
+    if any_host and not ctx.enc_shipped:
+        if getattr(p, "pipeline", False):
+            # pipelined: encrypt + broadcast on a worker thread; the guest's
+            # layer-0 plaintext candidates run concurrently and the pump is
+            # joined right before the first assign_sync (DESIGN.md §12)
+            pump = _EncryptPump(ctx, g_sel, h_sel)
+        else:
+            _encrypt_all(ctx, g_sel, h_sel)
 
     plain_engine = PlainHistogram(p.n_bins, sparse=p.sparse)
     guest_frontier = GuestFrontier(plain_engine, ctx.guest_data, ctx.g, ctx.h)
@@ -696,11 +773,24 @@ def grow_tree(ctx: TreeContext,
         # work is in flight, and only then does the guest block on the
         # batched decrypt — the two sides are independent until
         # find_best_split (DESIGN.md §8).
+        # pipelined: the guest's plaintext layer candidates are the useful
+        # work that hides the pump's encrypt + broadcast; compute them
+        # BEFORE joining, then join so the assign_sync below never races
+        # ahead of the enc_gh it depends on
+        pre_cands = None
+        if pump is not None:
+            if splittable and use_guest and ctx.guest_data.n_features > 0:
+                pre_cands = _guest_layer_candidates(
+                    ctx, guest_frontier, splittable, rows_sel, hist_mode)
+            pump.join()
+            pump = None
+
         guest_cands: dict = {}
         host_cands: dict = {}
         t0 = time.perf_counter()
         if active_hosts:
-            plan = {"node_of": node_of,
+            plan = {"tree": int(ctx.tree_idx),
+                    "node_of": node_of,
                     "splittable": list(splittable),
                     "modes": [(nid,) + tuple(hist_mode[nid])
                               for nid in splittable]}
@@ -710,7 +800,9 @@ def grow_tree(ctx: TreeContext,
                 h.deliver("assign_sync", plan)
         if splittable:
             t1 = time.perf_counter()
-            if use_guest and ctx.guest_data.n_features > 0:
+            if pre_cands is not None:
+                guest_cands = pre_cands
+            elif use_guest and ctx.guest_data.n_features > 0:
                 guest_cands = _guest_layer_candidates(
                     ctx, guest_frontier, splittable, rows_sel, hist_mode)
             t2 = time.perf_counter()
@@ -807,6 +899,9 @@ def grow_tree(ctx: TreeContext,
         ctx.stats.peak_frontier = max(ctx.stats.peak_frontier, len(frontier))
         frontier = next_frontier
 
+    if pump is not None:        # degenerate: no layer ever joined it
+        pump.join()
+
     # finalize leaves at max depth
     for node in nodes:
         if node.left == -1 and node.weight is None:
@@ -821,6 +916,224 @@ def grow_tree(ctx: TreeContext,
     tree = FederatedTree(nodes=nodes,
                          host_tables=[h.table for h in ctx.hosts])
     return tree, leaf_rows
+
+
+def grow_forest(ctx: TreeContext, bags: list,
+                feature_parties: Callable[[int], tuple] | None = None
+                ) -> list:
+    """Grow one round-forest: ``k = len(bags)`` bagged member trees that
+    share ONE ``enc_gh`` broadcast (FedGBF-style round bagging, DESIGN.md
+    §12).  ``bags[m]`` holds member m's row subset as positions into
+    ``ctx.sel_rows``; bags restrict only which rows *contribute* g/h to
+    split finding — every training row still routes through every member
+    for the score update, so ``rows_all`` starts at the full set per member.
+
+    All members grow in lockstep, layer by layer.  Each layer is still ONE
+    ``assign_sync`` -> ONE ``split_infos`` -> ONE batched decrypt per host:
+    the assignment matrix gains a member column, the histogram launch
+    batches over (member, node) via the forest kernel, and node ids on the
+    wire are globals ``gid = member * GID_STRIDE + local_nid`` (host dicts
+    key on the opaque gid; the guest demuxes tables per member on
+    finalize).  Amortization is the point: k trees cost one encrypt
+    round-trip and O(depth) — not O(k * depth) — protocol round trips.
+
+    Returns ``[(tree, leaf_rows), ...]`` per member, the same pair
+    :func:`grow_tree` returns.
+    """
+    p = ctx.params
+    k = len(bags)
+    if feature_parties is None:
+        feature_parties = lambda d: (True, [h.hid for h in ctx.hosts])
+
+    g_sel = ctx.g[ctx.sel_rows]
+    h_sel = ctx.h[ctx.sel_rows]
+
+    pump = None
+    any_host = any(feature_parties(d)[1] for d in range(p.max_depth))
+    if any_host and not ctx.enc_shipped:
+        if getattr(p, "pipeline", False):
+            pump = _EncryptPump(ctx, g_sel, h_sel)
+        else:
+            _encrypt_all(ctx, g_sel, h_sel)
+
+    plain_engine = PlainHistogram(p.n_bins, sparse=p.sparse)
+    guest_frontier = GuestFrontier(plain_engine, ctx.guest_data, ctx.g, ctx.h)
+
+    n_all = ctx.guest_data.n_instances
+    # per-member node lists carry LOCAL nids; all protocol/guest dict state
+    # (rows, modes, caches, host tables) keys on the global gid
+    nodes = [[Node(nid=0, depth=0, n_rows=n_all)] for _ in range(k)]
+    rows_all: dict = {}
+    rows_sel: dict = {}
+    hist_mode: dict = {}
+    frontier: list = []
+    for m in range(k):
+        gid0 = m * GID_STRIDE
+        rows_all[gid0] = np.arange(n_all)
+        rows_sel[gid0] = np.asarray(bags[m])
+        hist_mode[gid0] = ("direct", -1, -1)
+        frontier.append(gid0)
+
+    for depth in range(p.max_depth):
+        use_guest, host_ids = feature_parties(depth)
+        active_hosts = [h for h in ctx.hosts if h.hid in host_ids]
+        next_frontier = []
+        ordered = [n for n in frontier if hist_mode[n][0] == "direct"] + \
+                  [n for n in frontier if hist_mode[n][0] == "subtract"]
+        if active_hosts:
+            # one assignment column per member: a row sits in at most one
+            # frontier node per member tree
+            node_of = np.full((len(ctx.sel_rows), k), -1, np.int32)
+            for gid in frontier:
+                node_of[rows_sel[gid], gid // GID_STRIDE] = gid
+
+        splittable = []
+        for gid in ordered:
+            rs = rows_sel[gid]
+            node = nodes[gid // GID_STRIDE][gid % GID_STRIDE]
+            if len(rs) < 2 * p.min_leaf or len(rs) == 0:
+                node.weight = leaf_weight(
+                    g_sel[rs].sum(axis=0), h_sel[rs].sum(axis=0),
+                    p.lam, p.learning_rate)
+            else:
+                splittable.append(gid)
+
+        pre_cands = None
+        if pump is not None:
+            if splittable and use_guest and ctx.guest_data.n_features > 0:
+                pre_cands = _guest_layer_candidates(
+                    ctx, guest_frontier, splittable, rows_sel, hist_mode)
+            pump.join()
+            pump = None
+
+        guest_cands: dict = {}
+        host_cands: dict = {}
+        t0 = time.perf_counter()
+        if active_hosts:
+            plan = {"tree": int(ctx.tree_idx), "forest": k,
+                    "node_of": node_of,
+                    "splittable": list(splittable),
+                    "modes": [(gid,) + tuple(hist_mode[gid])
+                              for gid in splittable]}
+            for h in active_hosts:
+                ctx.channel.send("guest", f"host{h.hid}", "assign_sync",
+                                 plan, node_of.size * 4)
+                h.deliver("assign_sync", plan)
+        if splittable:
+            t1 = time.perf_counter()
+            if pre_cands is not None:
+                guest_cands = pre_cands
+            elif use_guest and ctx.guest_data.n_features > 0:
+                guest_cands = _guest_layer_candidates(
+                    ctx, guest_frontier, splittable, rows_sel, hist_mode)
+            t2 = time.perf_counter()
+            for h in active_hosts:
+                pend = h.collect("split_infos")
+                ctx.stats.n_split_roundtrips += 1
+                host_cands[h.hid] = _host_layer_finish(ctx, h.hid,
+                                                       splittable, pend)
+            t3 = time.perf_counter()
+            if active_hosts:
+                ctx.stats.host_dispatch_seconds += t1 - t0
+                ctx.stats.guest_hist_seconds += t2 - t1
+                ctx.stats.host_wait_seconds += t3 - t2
+                if guest_cands and ctx.cipher.backend == "limb":
+                    denom = t3 - t0
+                    ctx.stats.layer_overlap.append(
+                        (t2 - t1) / denom if denom > 0 else 0.0)
+
+        for gid in splittable:
+            m = gid // GID_STRIDE
+            node = nodes[m][gid % GID_STRIDE]
+            rs = rows_sel[gid]
+            G_tot = g_sel[rs].sum(axis=0)
+            H_tot = h_sel[rs].sum(axis=0)
+
+            cands = []
+            if gid in guest_cands:
+                cands.append(guest_cands[gid])
+            for h in active_hosts:
+                cands.append(host_cands[h.hid][gid])
+
+            best = find_best_split(cands, G_tot, H_tot, len(rs), p.lam,
+                                   p.min_leaf, p.min_gain)
+            if best is None:
+                node.weight = leaf_weight(G_tot, H_tot, p.lam,
+                                          p.learning_rate)
+                continue
+
+            ra = rows_all[gid]
+            fsel = ctx.sel_rows[rs]
+            if best.party == GUEST:
+                fid, bid = decode_sid(best.sid, p.n_bins)
+                go_left = ctx.guest_data.bins[ra, fid] <= bid
+                go_left_sel = ctx.guest_data.bins[fsel, fid] <= bid
+                node.party, node.fid, node.bid = GUEST, fid, bid
+            else:
+                host = next(h for h in ctx.hosts if h.hid == best.party)
+                msg = {"nid": gid, "sid": best.sid, "rows": ra}
+                ctx.channel.send("guest", f"host{host.hid}", "chosen_sid",
+                                 msg, 8 + 4 * len(ra))
+                host.deliver("chosen_sid", msg)
+                go_left = np.asarray(host.collect("assign_mask"), bool)
+                go_left_sel = go_left[np.searchsorted(ra, fsel)]
+                node.party, node.sid = host.hid, best.sid
+            node.gain = best.gain
+
+            lid, rid = len(nodes[m]), len(nodes[m]) + 1
+            gl, gr = m * GID_STRIDE + lid, m * GID_STRIDE + rid
+            node.left, node.right = lid, rid
+            rows_all[gl], rows_all[gr] = ra[go_left], ra[~go_left]
+            rows_sel[gl], rows_sel[gr] = rs[go_left_sel], rs[~go_left_sel]
+            nodes[m].append(Node(nid=lid, depth=depth + 1,
+                                 n_rows=len(rows_all[gl])))
+            nodes[m].append(Node(nid=rid, depth=depth + 1,
+                                 n_rows=len(rows_all[gr])))
+            if len(rows_sel[gl]) <= len(rows_sel[gr]):
+                hist_mode[gl] = ("direct", -1, -1)
+                hist_mode[gr] = ("subtract", gid, gl)
+            else:
+                hist_mode[gr] = ("direct", -1, -1)
+                hist_mode[gl] = ("subtract", gid, gr)
+            next_frontier += [gl, gr]
+
+        keep = ({hist_mode[c][1] for c in next_frontier
+                 if hist_mode[c][0] == "subtract"}
+                if p.histogram_subtraction else set())
+        sizes = [guest_frontier.evict_except(keep)]
+        for h in ctx.hosts:
+            if getattr(h, "frontier", None) is not None:
+                sizes.append(h.frontier.evict_except(keep))
+        ctx.stats.peak_hist_cache = max(ctx.stats.peak_hist_cache,
+                                        max(sizes))
+        ctx.stats.peak_frontier = max(ctx.stats.peak_frontier, len(frontier))
+        frontier = next_frontier
+
+    if pump is not None:
+        pump.join()
+
+    # finalize: leaves at max depth, per-member host-table demux (gid ->
+    # local nid; remote handles hold no table — their PartyProcess demuxes
+    # via ``table_sinks`` into its own per-member export tables)
+    tables_by_member = [[{} for _ in ctx.hosts] for _ in range(k)]
+    for j, h in enumerate(ctx.hosts):
+        for gid, fb in getattr(h, "table", {}).items():
+            mm, loc = divmod(int(gid), GID_STRIDE)
+            tables_by_member[mm][j][loc] = fb
+    out = []
+    for m in range(k):
+        for node in nodes[m]:
+            if node.left == -1 and node.weight is None:
+                rs = rows_sel[m * GID_STRIDE + node.nid]
+                node.weight = leaf_weight(g_sel[rs].sum(axis=0),
+                                          h_sel[rs].sum(axis=0),
+                                          p.lam, p.learning_rate)
+        leaf_rows = {nd.nid: rows_all[m * GID_STRIDE + nd.nid]
+                     for nd in nodes[m] if nd.left == -1}
+        out.append((FederatedTree(nodes=nodes[m],
+                                  host_tables=tables_by_member[m]),
+                    leaf_rows))
+    return out
 
 
 def predict_tree(tree: FederatedTree, guest_bins: np.ndarray,

@@ -153,3 +153,79 @@ def layer_hist_pallas(bins: jnp.ndarray, node_slot: jnp.ndarray,
         interpret=interpret,
     )(bins_p, node_p, cts_p)
     return out[:n_f, :n_nodes].transpose(1, 0, 2, 3)
+
+
+def _forest_hist_kernel(bins_ref, slot_ref, cts_ref, out_ref, *, n_bins: int,
+                        block_n: int):
+    # grid (member, node_blocks, feature_blocks, instance_blocks); the
+    # member axis selects one column of the (n_i, k) slot matrix via the
+    # BlockSpec, so the body is the layer kernel verbatim.
+    n_blk = pl.program_id(1)
+    i_blk = pl.program_id(3)
+
+    @pl.when(i_blk == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bins = bins_ref[...]                       # (BI, BF) int32
+    local = slot_ref[...][:, 0] - n_blk * block_n   # (BI,) slot within block
+    in_blk = (local >= 0) & (local < block_n)
+    comp = jnp.where(in_blk[:, None] & (bins >= 0),
+                     local[:, None] * n_bins + bins, -1)
+    oh = (comp[:, :, None] == jnp.arange(block_n * n_bins)[None, None, :])
+    oh = oh.astype(jnp.float32).reshape(bins.shape[0], -1)  # (BI, BF*BN*n_b)
+    cts = cts_ref[...].astype(jnp.float32)     # (BI, L)
+    part = jax.lax.dot_general(oh, cts, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    out_ref[...] += part.astype(jnp.int32).reshape(out_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "interpret",
+                                             "block_i", "block_f", "block_n"))
+def forest_hist_pallas(bins: jnp.ndarray, node_slot: jnp.ndarray,
+                       cts: jnp.ndarray, n_nodes: int, n_bins: int,
+                       interpret: bool | None = None,
+                       block_i: int = BLOCK_I, block_f: int = BLOCK_F,
+                       block_n: int = BLOCK_N) -> jnp.ndarray:
+    """(tree, node)-batched ciphertext histogram: see ref.forest_hist_ref.
+
+    One launch accumulates every direct-mode frontier node of every member
+    tree of a round-forest layer.  The grid gains a leading member axis; the
+    slot BlockSpec carves out member t's column of the (n_i, k) slot matrix,
+    and each (t, f, n) output block is visited contiguously over the
+    innermost instance axis.
+
+    bins: (n_i, n_f) int32 (negative = masked), node_slot: (n_i, k) int32
+    member-local slots (negative = row not in any direct node of that
+    member), cts: (n_i, L) int32.
+    Returns (k, n_nodes, n_f, n_bins, L) int32 lazy limb sums.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n_i, n_f = bins.shape
+    k = node_slot.shape[1]
+    L = cts.shape[-1]
+    block_n = min(block_n, round_up(max(n_nodes, 1), 2))
+    pi = round_up(max(n_i, 1), block_i)
+    pf = round_up(max(n_f, 1), block_f)
+    pn = round_up(max(n_nodes, 1), block_n)
+    bins_p = jnp.full((pi, pf), -1, jnp.int32).at[:n_i, :n_f].set(bins)
+    slot_p = jnp.full((pi, k), -1, jnp.int32).at[:n_i].set(node_slot)
+    cts_p = jnp.zeros((pi, L), jnp.int32).at[:n_i].set(cts)
+
+    grid = (k, pn // block_n, pf // block_f, pi // block_i)
+    out = pl.pallas_call(
+        functools.partial(_forest_hist_kernel, n_bins=n_bins,
+                          block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_i, block_f), lambda t, n, f, i: (i, f)),
+            pl.BlockSpec((block_i, 1), lambda t, n, f, i: (i, t)),
+            pl.BlockSpec((block_i, L), lambda t, n, f, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_f, block_n, n_bins, L),
+                               lambda t, n, f, i: (t, f, n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, pf, pn, n_bins, L), jnp.int32),
+        interpret=interpret,
+    )(bins_p, slot_p, cts_p)
+    return out[:, :n_f, :n_nodes].transpose(0, 2, 1, 3, 4)

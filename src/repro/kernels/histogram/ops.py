@@ -21,8 +21,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from ..common import cdiv, default_interpret, round_up
-from .histogram import hist_pallas, layer_hist_pallas
-from .ref import hist_ref, layer_hist_ref
+from .histogram import forest_hist_pallas, hist_pallas, layer_hist_pallas
+from .ref import forest_hist_ref, hist_ref, layer_hist_ref
 
 
 def ciphertext_histogram(bins, cts, n_bins: int, use_pallas: bool = True,
@@ -61,6 +61,24 @@ def layer_ciphertext_histogram(bins, node_slot, cts, n_nodes: int,
         return layer_hist_pallas(bins, node_slot, cts, n_nodes, n_bins,
                                  interpret=interpret)
     return layer_hist_ref(bins, node_slot, cts, n_nodes, n_bins)
+
+
+def forest_ciphertext_histogram(bins, node_slot, cts, n_nodes: int,
+                                n_bins: int, use_pallas: bool = True,
+                                interpret: bool | None = None) -> jnp.ndarray:
+    """(tree, node)-batched histogram for one round-forest layer:
+    (n_i, n_f) bins x (n_i, k) member-local node slots x (n_i, L) limb
+    ciphertexts -> (k, n_nodes, n_f, n_b, L) lazy sums.  One launch covers
+    every direct-mode frontier node of every member tree; masking rules
+    match :func:`layer_ciphertext_histogram` per member column.
+    """
+    bins = jnp.asarray(bins, jnp.int32)
+    node_slot = jnp.asarray(node_slot, jnp.int32)
+    cts = jnp.asarray(cts, jnp.int32)
+    if use_pallas:
+        return forest_hist_pallas(bins, node_slot, cts, n_nodes, n_bins,
+                                  interpret=interpret)
+    return forest_hist_ref(bins, node_slot, cts, n_nodes, n_bins)
 
 
 @functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "mesh",
@@ -127,6 +145,63 @@ def sharded_layer_ciphertext_histogram(bins, node_slot, cts, n_nodes: int,
     # mixing a partially-replicated shard_map output with unsharded operands
     # sum the replicas (observed with jnp.concatenate: values silently
     # multiply by the data-axis extent).
+    return jax.device_put(out, jax.devices()[0])
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "mesh",
+                                             "use_pallas", "interpret"))
+def _sharded_forest_hist(bins, node_slot, cts, n_nodes: int, n_bins: int,
+                         mesh, use_pallas: bool, interpret: bool):
+    sizes = dict(mesh.shape)
+    dd, mm = sizes.get("data", 1), sizes.get("model", 1)
+    n_i, n_f = bins.shape
+    k = node_slot.shape[1]
+    L = cts.shape[-1]
+    npm = cdiv(n_nodes, mm)              # member-local node block per shard
+    pi = round_up(max(n_i, 1), dd)
+    bins_p = jnp.full((pi, n_f), -1, jnp.int32).at[:n_i].set(bins)
+    slot_p = jnp.full((pi, k), -1, jnp.int32).at[:n_i].set(node_slot)
+    cts_p = jnp.zeros((pi, L), jnp.int32).at[:n_i].set(cts)
+
+    def local(b, s, c):
+        m_idx = jax.lax.axis_index("model")
+        ls = s - m_idx * npm             # member-local slot within this block
+        ls = jnp.where((ls >= 0) & (ls < npm), ls, -1)
+        if use_pallas:
+            h = forest_hist_pallas(b, ls, c, npm, n_bins, interpret=interpret)
+        else:
+            h = forest_hist_ref(b, ls, c, npm, n_bins)
+        h = jax.lax.psum(h, "data")
+        # gather the member-local node blocks over "model" (axis 1 of the
+        # (k, npm, n_f, n_b, L) local result)
+        return jax.lax.all_gather(h, "model", axis=1, tiled=True)
+
+    out = shard_map(local, mesh=mesh,
+                    in_specs=(P("data", None), P("data", None),
+                              P("data", None)),
+                    out_specs=P(None, None, None, None, None),
+                    check_rep=False)(bins_p, slot_p, cts_p)
+    return out[:, :n_nodes]
+
+
+def sharded_forest_ciphertext_histogram(bins, node_slot, cts, n_nodes: int,
+                                        n_bins: int, mesh,
+                                        use_pallas: bool = True,
+                                        interpret: bool | None = None
+                                        ) -> jnp.ndarray:
+    """Mesh-sharded :func:`forest_ciphertext_histogram`: the forest kernel's
+    member axis rides along unchanged while instance tiles shard over "data"
+    and member-local node blocks over "model".  Bit-identical to the
+    single-device dispatch.  Returns the (k, n_nodes, n_f, n_bins, L) global
+    array landed on one device (same jax-0.4.37 workaround as the layer
+    variant)."""
+    if interpret is None:
+        interpret = default_interpret()
+    bins = jnp.asarray(bins, jnp.int32)
+    node_slot = jnp.asarray(node_slot, jnp.int32)
+    cts = jnp.asarray(cts, jnp.int32)
+    out = _sharded_forest_hist(bins, node_slot, cts, n_nodes, n_bins, mesh,
+                               use_pallas, interpret)
     return jax.device_put(out, jax.devices()[0])
 
 

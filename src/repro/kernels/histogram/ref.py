@@ -39,3 +39,29 @@ def layer_hist_ref(bins: jnp.ndarray, node_slot: jnp.ndarray,
                      cts.astype(jnp.float32))
     out = out.reshape(bins.shape[1], n_nodes, n_bins, cts.shape[-1])
     return out.transpose(1, 0, 2, 3).astype(jnp.int32)
+
+
+def forest_hist_ref(bins: jnp.ndarray, node_slot: jnp.ndarray,
+                    cts: jnp.ndarray, n_nodes: int,
+                    n_bins: int) -> jnp.ndarray:
+    """Reference (tree, node)-batched histogram (one round-forest layer).
+
+    Round-forest mode grows k bagged trees per boosting round off ONE shared
+    ``enc_gh``; a row can sit in up to one direct frontier node *per member
+    tree*, so the slot input gains a member axis.
+
+    bins:      (n_i, n_f) int32 bin per (instance, feature); negative = masked.
+    node_slot: (n_i, k) int32 member-local frontier slot of each instance in
+               [0, n_nodes) for each of the k member trees; negative =
+               instance not in any direct node of that member.
+    cts:       (n_i, L) int32 limb vectors.
+    returns (k, n_nodes, n_f, n_b, L) int32 lazy (un-carried) limb sums.
+    """
+    comp = jnp.where((node_slot[:, :, None] >= 0) & (bins[:, None, :] >= 0),
+                     node_slot[:, :, None] * n_bins + bins[:, None, :], -1)
+    oh = (comp[..., None] == jnp.arange(n_nodes * n_bins)[None, None, None, :])
+    out = jnp.einsum("ikfc,il->kfcl", oh.astype(jnp.float32),
+                     cts.astype(jnp.float32))
+    k = node_slot.shape[1]
+    out = out.reshape(k, bins.shape[1], n_nodes, n_bins, cts.shape[-1])
+    return out.transpose(0, 2, 1, 3, 4).astype(jnp.int32)

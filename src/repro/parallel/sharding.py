@@ -167,6 +167,13 @@ GBDT_RULES = {
     "layer_hist": ("model", None, None, None, None),
     #                                  (node, feature, bin, slot, limb)
     "layer_counts": ("model", None, None),   # (node, feature, bin) plaintext
+    # round-forest mode (forest_size=k): the slot assignment gains a member
+    # (tree) axis — one column per bagged member tree — and the histogram
+    # batch gains a leading member axis while its member-local node axis
+    # keeps the "model" block-sharding of the layer variant.
+    "forest_slot": ("data", None),    # (instance, member) frontier slots
+    "forest_hist": (None, "model", None, None, None, None),
+    #                          (member, node, feature, bin, slot, limb)
     # crypto endpoints (DESIGN.md §8): both are embarrassingly parallel over
     # rows, so the encrypt input's instance axis and the per-layer decrypt
     # stack's candidate axis shard over "data" with no collective.

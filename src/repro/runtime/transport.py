@@ -432,6 +432,100 @@ class LoopbackEndpoint:
 # the channel over a transport
 # ---------------------------------------------------------------------------
 
+class _BrokerInbox:
+    """Async receive queue for one peer (DESIGN.md §12).
+
+    A broker thread drains the peer's endpoint continuously — every frame
+    is read off the socket, decoded, mirrored into the ledger and deduped
+    by seq the moment it ARRIVES, then parked in a per-tag inbox.  The
+    protocol thread consumes from the inboxes instead of the socket, so a
+    pipelined guest's ``enc_gh`` for round r+1 is accepted (bytes moved,
+    payload decoded) while the party is still deep in round r's histogram
+    compute.  Consumption is arrival-ordered by default (``pop()``); a
+    caller that knows its tag may pull past queued frames of other tags
+    (``pop(tag=...)``) — ledger convergence is unaffected because the
+    mirror happens at ingest, not at consumption.
+
+    A transport failure poisons the inbox: the pending error re-raises on
+    every subsequent pop until :meth:`TransportChannel.start_broker` is
+    called again over a fresh endpoint (the host re-dial loop does this).
+    """
+
+    def __init__(self, channel: "TransportChannel", src: str):
+        self.channel = channel
+        self.src = src
+        self.cond = threading.Condition()
+        self.inbox: dict = {}       # tag -> deque of ingested frames
+        self.order: deque = deque()  # tags in arrival order
+        self.err: BaseException | None = None
+        self.stop = False
+        self.thread = threading.Thread(
+            target=self._run, daemon=True,
+            name=f"broker-{channel.party}-{src}")
+
+    def _run(self) -> None:
+        ch = self.channel
+        while not self.stop:
+            try:
+                ep = ch.peers.get(self.src)
+                if ep is None:
+                    raise TransportError(f"{ch.party}: no endpoint for "
+                                         f"{self.src!r}")
+                t0 = time.perf_counter()
+                frame = ep.recv_bytes(ch.timeout)
+                got = ch._ingest(frame, t0)
+            except BaseException as e:          # noqa: BLE001 -- poison:
+                # the protocol thread re-raises this from its next pop
+                with self.cond:
+                    if not self.stop:
+                        self.err = e
+                    self.cond.notify_all()
+                return
+            if got is None:
+                continue                        # skimmed / deduped
+            with self.cond:
+                self.inbox.setdefault(got[3], deque()).append(got)
+                self.order.append(got[3])
+                self.cond.notify_all()
+
+    def pop(self, tag: str | None = None, timeout: float | None = None):
+        """Next ingested frame — arrival order, or first frame of ``tag``."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        with self.cond:
+            while True:
+                if tag is None:
+                    if self.order:
+                        return self.inbox[self.order.popleft()].popleft()
+                else:
+                    q = self.inbox.get(tag)
+                    if q:
+                        self.order.remove(tag)   # earliest entry of tag
+                        return q.popleft()
+                if self.err is not None:
+                    raise self.err
+                budget = (None if deadline is None
+                          else deadline - time.monotonic())
+                if budget is not None and budget <= 0:
+                    raise TransportError(
+                        f"{self.channel.party}: broker recv of "
+                        f"{tag or 'any'!r} from {self.src} timed out "
+                        f"after {timeout}s")
+                self.cond.wait(budget)
+
+    def try_pop(self):
+        with self.cond:
+            if self.order:
+                return self.inbox[self.order.popleft()].popleft()
+            if self.err is not None:
+                raise self.err
+            return None
+
+    def pending(self, tag: str) -> int:
+        with self.cond:
+            return len(self.inbox.get(tag, ()))
+
+
 class TransportChannel(Channel):
     """The Channel contract over real endpoints.
 
@@ -475,6 +569,9 @@ class TransportChannel(Channel):
         self._send_locks: dict = {}     # per-peer: supervisor thread pings
                                         # must not interleave frame bytes
                                         # with training-thread sends
+        self._brokers: dict = {}        # src -> _BrokerInbox (async recv)
+        self._mirror_lock = threading.Lock()    # rx/tx byte counters are
+                                        # touched by broker + send threads
         self._jitter = _random.Random(len(party) * 2654435761 + 17)
 
     def _send_lock(self, dst: str):
@@ -536,12 +633,52 @@ class TransportChannel(Channel):
                              payload_bytes=payload_bytes, seq=seq)
         with self._send_lock(dst):
             ep.send_bytes(frame)
-        self.tx_bytes[tag] += len(frame) + 4        # + length prefix
+        with self._mirror_lock:
+            self.tx_bytes[tag] += len(frame) + 4    # + length prefix
         # a retried send re-enters here through peers[dst] (possibly a
         # fresh endpoint) with the SAME seq: the receiver dedupes
 
     # -- incoming -------------------------------------------------------
+    def _ingest(self, frame: bytes, t0: float):
+        """Decode, account, dedup and mirror ONE incoming frame.  Returns
+        the ``(kind, src, dst, tag, payload)`` tuple, or None when the
+        frame was swallowed (skimmed control ack, deduped retransmission).
+        Shared by the synchronous read path and the broker thread — both
+        must apply identical mirror/dedup semantics or the converged
+        per-tag ledgers drift between brokered and unbrokered parties."""
+        kind, fsrc, fdst, tag, seq, nbytes, payload = decode_frame(frame)
+        with self._mirror_lock:
+            self.rx_bytes[tag] += len(frame) + 4
+        if self.on_rtt is not None and kind == KIND_PROTO:
+            self.on_rtt(fsrc, tag, time.perf_counter() - t0)
+        if kind == KIND_CTRL and tag == "error":
+            # a peer's dying words: surface its actual failure instead
+            # of a tag mismatch now / 'peer closed' later
+            raise RemoteError(f"peer {fsrc} failed: {payload}")
+        if kind == KIND_CTRL and self.on_ctrl is not None \
+                and self.on_ctrl(fsrc, tag, payload):
+            return None             # skimmed (liveness ack): not ours
+        if kind == KIND_PROTO:
+            if seq <= self.last_seen[(fsrc, tag)]:
+                # retransmission of a frame already mirrored.  Counted
+                # once; and — except for enc_gh, the idempotent tree
+                # replay anchor — not re-delivered either, or a
+                # duplicated chosen_sid would corrupt the frontier.
+                if tag != "enc_gh":
+                    return None
+            else:
+                self.last_seen[(fsrc, tag)] = seq
+                # mirror the sender's ledger entry (analytic nbytes
+                # travels in the frame header) so each side's per-tag
+                # totals converge to the in-process shared ledger
+                Channel.send(self, fsrc, fdst, tag, payload, nbytes)
+        return kind, fsrc, fdst, tag, payload
+
     def _read(self, src: str, timeout: float | None = None):
+        br = self._brokers.get(src)
+        if br is not None:
+            return br.pop(timeout=self.timeout if timeout is None
+                          else timeout)
         def op():
             return self._read_once(src, timeout)
         return self._with_retry(op, src)
@@ -555,39 +692,51 @@ class TransportChannel(Channel):
             t0 = time.perf_counter()
             frame = ep.recv_bytes(self.timeout if timeout is None
                                   else timeout)
-            kind, fsrc, fdst, tag, seq, nbytes, payload = \
-                decode_frame(frame)
-            self.rx_bytes[tag] += len(frame) + 4
-            if self.on_rtt is not None and kind == KIND_PROTO:
-                self.on_rtt(fsrc, tag, time.perf_counter() - t0)
-            if kind == KIND_CTRL and tag == "error":
-                # a peer's dying words: surface its actual failure instead
-                # of a tag mismatch now / 'peer closed' later
-                raise RemoteError(f"peer {fsrc} failed: {payload}")
-            if kind == KIND_CTRL and self.on_ctrl is not None \
-                    and self.on_ctrl(fsrc, tag, payload):
-                continue            # skimmed (liveness ack): not ours
-            if kind == KIND_PROTO:
-                if seq <= self.last_seen[(fsrc, tag)]:
-                    # retransmission of a frame already mirrored.  Counted
-                    # once; and — except for enc_gh, the idempotent tree
-                    # replay anchor — not re-delivered either, or a
-                    # duplicated chosen_sid would corrupt the frontier.
-                    if tag != "enc_gh":
-                        continue
-                else:
-                    self.last_seen[(fsrc, tag)] = seq
-                    # mirror the sender's ledger entry (analytic nbytes
-                    # travels in the frame header) so each side's per-tag
-                    # totals converge to the in-process shared ledger
-                    Channel.send(self, fsrc, fdst, tag, payload, nbytes)
-            return kind, fsrc, fdst, tag, payload
+            got = self._ingest(frame, t0)
+            if got is not None:
+                return got
+
+    # -- async broker (pipelined mode, DESIGN.md §12) -------------------
+    def start_broker(self, src: str) -> None:
+        """Switch receives from ``src`` to an async broker: a reader
+        thread drains the endpoint continuously into per-tag inboxes so
+        frames are accepted the moment they arrive — a pipelined guest's
+        next-round ``enc_gh`` no longer waits in kernel buffers behind
+        the current round's compute.  Idempotent per connection: calling
+        it again (after a re-dial swapped ``peers[src]``) replaces the
+        poisoned broker with a fresh one."""
+        old = self._brokers.pop(src, None)
+        if old is not None:
+            old.stop = True
+        br = _BrokerInbox(self, src)
+        self._brokers[src] = br
+        br.thread.start()
+
+    def stop_broker(self, src: str | None = None) -> None:
+        for key in ([src] if src is not None else list(self._brokers)):
+            br = self._brokers.pop(key, None)
+            if br is not None:
+                br.stop = True
+                with br.cond:
+                    br.cond.notify_all()
+
+    def broker(self, src: str) -> "_BrokerInbox | None":
+        return self._brokers.get(src)
 
     def recv(self, src: str, tag: str, timeout: float | None = None):
         """Blocking receive of one PROTOCOL frame from ``src``; the tag
         must match (the protocol is strict request/reply — anything else
-        is a desync worth crashing on)."""
-        kind, _, _, ftag, payload = self._read(src, timeout)
+        is a desync worth crashing on).  Over a broker the match is a
+        *selection*: queued frames of other tags (the pipelined next
+        round's ``enc_gh``) stay parked instead of tripping the desync
+        check."""
+        br = self._brokers.get(src)
+        if br is not None:
+            kind, _, _, ftag, payload = br.pop(
+                tag=tag, timeout=self.timeout if timeout is None
+                else timeout)
+        else:
+            kind, _, _, ftag, payload = self._read(src, timeout)
         if kind != KIND_PROTO or ftag != tag:
             raise TransportError(f"{self.party}: expected protocol frame "
                                  f"{tag!r} from {src}, got "
@@ -595,7 +744,12 @@ class TransportChannel(Channel):
         return payload
 
     def control_recv(self, src: str, tag: str):
-        kind, _, _, ftag, payload = self._read(src)
+        br = self._brokers.get(src)
+        if br is not None:
+            kind, _, _, ftag, payload = br.pop(tag=tag,
+                                               timeout=self.timeout)
+        else:
+            kind, _, _, ftag, payload = self._read(src)
         if kind != KIND_CTRL or ftag != tag:
             raise TransportError(f"{self.party}: expected control frame "
                                  f"{tag!r} from {src}, got "
@@ -609,6 +763,13 @@ class TransportChannel(Channel):
         return kind, tag, payload
 
     def try_recv_any(self, src: str):
+        br = self._brokers.get(src)
+        if br is not None:
+            got = br.try_pop()
+            if got is None:
+                return None
+            kind, _, _, tag, payload = got
+            return kind, tag, payload
         ep = self.peers.get(src)
         if ep is None or not ep.poll():
             return None
@@ -700,6 +861,7 @@ class TransportChannel(Channel):
                 for t in tags}
 
     def close(self) -> None:
+        self.stop_broker()
         for ep in self.peers.values():
             ep.close()
 
@@ -814,6 +976,21 @@ class PartyProcess:
         self._complete: set = set()    # trees whose table is final
         self._tree_snaps: dict = {}    # tree -> channel snapshot at its
                                        # enc_gh boundary (replay rollback)
+        self._tree_span: dict = {}     # base tree -> member count (round-
+                                       # forest: one enc_gh covers k trees)
+        # pipelined mode: a future tree's enc_gh arrives while the current
+        # tree is still splitting — its runtime is built eagerly (cipher-
+        # texts land device-resident) and staged here until the first
+        # assign_sync that references the new tree activates it
+        from ..core.frontier import FrontierBuffer
+        self._staged = FrontierBuffer()
+        self.staged_activations = 0    # trees that went through the
+                                       # stage->activate path (pipelining
+                                       # actually overlapped; test hook)
+        # handle() runs from the serve loop AND (loopback pipelining) from
+        # the guest's encrypt-pump thread via on_deliver: one frame's
+        # protocol mutation at a time, in arrival order
+        self._handle_lock = threading.RLock()
         self._load_state()
 
     # -- durable state (what a party persists to rejoin, DESIGN.md §11) -
@@ -889,18 +1066,30 @@ class PartyProcess:
 
     def pump(self) -> None:
         """Drain pending frames (loopback inline mode)."""
-        while True:
-            got = self.channel.try_recv_any("guest")
-            if got is None:
-                return
-            self.handle(*got)
+        with self._handle_lock:
+            while True:
+                got = self.channel.try_recv_any("guest")
+                if got is None:
+                    return
+                self.handle(*got)
 
     def handle(self, kind: int, tag: str, payload) -> bool:
+        with self._handle_lock:
+            return self._handle(kind, tag, payload)
+
+    def _handle(self, kind: int, tag: str, payload) -> bool:
         if kind == KIND_CTRL:
             return self._control(tag, payload)
         if tag == "enc_gh":
             self._begin_tree(payload)
         elif tag in ("assign_sync", "chosen_sid"):
+            tree = (payload.get("tree") if isinstance(payload, dict)
+                    else None)
+            if (tree is not None and self._current_tree is not None
+                    and int(tree) != self._current_tree):
+                # first frame of the NEXT pipelined tree: the staged
+                # runtime takes over, the previous tree is final
+                self._activate_tree(int(tree))
             self.hr.deliver(tag, payload)
             self.hr._outbox.clear()     # replies already shipped
         elif tag == "predict_req":
@@ -911,23 +1100,22 @@ class PartyProcess:
         return True
 
     # -- training -------------------------------------------------------
-    def _begin_tree(self, payload) -> None:
+    def _complete_tree(self, base: int) -> None:
+        """The tree (or whole round-forest span) rooted at ``base`` saw
+        its last update: it joins the durable floor a respawn can resume
+        from."""
+        for t in range(base, base + self._tree_span.get(base, 1)):
+            self._complete.add(t)
+
+    def _build_runtime(self, payload):
+        """Fresh engine + HostRuntime adopting this enc_gh batch — the
+        ciphertexts land device-resident here.  Round-forest batches
+        (``forest`` = k > 1) additionally get per-member split-table
+        mirrors so serving export sees k member trees with local nids."""
         from ..core.histogram import CipherHistogram
         from ..core.tree import HostRuntime
         tree = int(payload["tree"])
-        if self._current_tree is not None and self._current_tree != tree:
-            # the previous tree's table saw its last update: it is now
-            # part of the durable floor a respawn can resume from
-            self._complete.add(self._current_tree)
-        if tree in self._tree_snaps:
-            # a REPLAYED tree (the guest rolled back to this boundary
-            # after a fault): roll our accounting and seq counters back
-            # too, so the replay's frames are counted fresh, exactly once
-            self.channel.restore(self._tree_snaps[tree])
-            self._complete.discard(tree)
-        self._current_tree = tree
-        self._persist_state()       # durable state AS OF this boundary
-        self._tree_snaps[tree] = self.channel.snapshot()
+        k = int(payload.get("forest", 0) or 0)
         if self.cipher is None:
             from ..core.boosting import cipher_kwargs
             from ..core.he import get_cipher
@@ -938,10 +1126,61 @@ class PartyProcess:
                                  sparse=self.params.sparse,
                                  use_pallas=self.params.use_pallas,
                                  stats=self.stats)
-        self.hr = HostRuntime(hid=self.hid, data=self.data, engine=engine)
-        self.hr.bind(self.params, self.cipher, self.channel, self.stats)
-        self.hr.deliver("enc_gh", payload)
-        self.tables[tree] = self.hr.table
+        hr = HostRuntime(hid=self.hid, data=self.data, engine=engine)
+        hr.bind(self.params, self.cipher, self.channel, self.stats)
+        hr.deliver("enc_gh", payload)
+        if k > 1:
+            sinks = {m: {} for m in range(k)}
+            hr.table_sinks = sinks
+            for m in range(k):
+                self.tables[tree + m] = sinks[m]
+            self._tree_span[tree] = k
+        else:
+            self.tables[tree] = hr.table
+            self._tree_span[tree] = 1
+        return hr
+
+    def _begin_tree(self, payload) -> None:
+        tree = int(payload["tree"])
+        if (getattr(self.params, "pipeline", False)
+                and self._current_tree is not None
+                and self._current_tree != tree):
+            # pipelined prefetch: this tree's ciphertexts arrived while
+            # the current tree is still splitting.  Build its runtime
+            # eagerly — wire+decode+device placement hidden behind the
+            # in-flight tree's compute — but do NOT disturb the active
+            # state; the first assign_sync naming this tree activates it.
+            self._staged.stage(tree, self._build_runtime(payload))
+            return
+        if self._current_tree is not None and self._current_tree != tree:
+            # the previous tree's table saw its last update: it is now
+            # part of the durable floor a respawn can resume from
+            self._complete_tree(self._current_tree)
+        if tree in self._tree_snaps:
+            # a REPLAYED tree (the guest rolled back to this boundary
+            # after a fault): roll our accounting and seq counters back
+            # too, so the replay's frames are counted fresh, exactly once
+            self.channel.restore(self._tree_snaps[tree])
+            for t in range(tree, tree + self._tree_span.get(tree, 1)):
+                self._complete.discard(t)
+        self._current_tree = tree
+        self._persist_state()       # durable state AS OF this boundary
+        self._tree_snaps[tree] = self.channel.snapshot()
+        self.hr = self._build_runtime(payload)
+
+    def _activate_tree(self, tree: int) -> None:
+        if not self._staged.staged(tree):
+            raise TransportError(
+                f"host{self.hid}: assign_sync references tree {tree} but "
+                f"no staged enc_gh (current {self._current_tree}) — "
+                f"protocol desync")
+        if self._current_tree is not None:
+            self._complete_tree(self._current_tree)
+        self._current_tree = tree
+        self._persist_state()
+        self._tree_snaps[tree] = self.channel.snapshot()
+        self.hr = self._staged.activate(tree)
+        self.staged_activations += 1
 
     # -- serving --------------------------------------------------------
     def _serve_setup(self, payload) -> None:
@@ -952,7 +1191,7 @@ class PartyProcess:
         if self._current_tree is not None:
             # training is over: the in-flight tree's table is final —
             # make it durable before serving depends on it
-            self._complete.add(self._current_tree)
+            self._complete_tree(self._current_tree)
             self._current_tree = None
             self._persist_state()
         keys = [(int(ti), int(nid)) for ti, nid in payload["keys"]]
@@ -1082,6 +1321,12 @@ def host_main(port: int, hid: int, params, X_host,
                               export_dir=export_dir, state_dir=state_dir)
         else:
             channel.peers["guest"] = ep
+        if getattr(params, "pipeline", False):
+            # async inbox (DESIGN.md §12): accept the pipelined guest's
+            # next-round enc_gh off the wire while this round computes.
+            # Restarted per connection — a re-dial leaves the previous
+            # broker poisoned on the dead endpoint.
+            channel.start_broker("guest")
         channel.control_send(
             "guest", "hello",
             {"hid": hid, "run_id": run_id, "resume": pp.resume_info()})
@@ -1338,6 +1583,15 @@ class MultiHostRun:
             ckpt_dir: str | None = None, save_every: int = 1,
             max_retries: int = 3, retry_backoff: float = 0.05):
         from ..core.boosting import VerticalBoosting
+        if resilient and getattr(self.params, "pipeline", False):
+            # the resilient loop's replay anchor is the enc_gh boundary
+            # of ONE in-flight tree; pipelining keeps a second tree's
+            # enc_gh in flight past that boundary, so a rollback could
+            # not decide which staged state to discard.  Train pipelined
+            # OR resilient, not both.
+            raise ValueError("pipeline=True is incompatible with "
+                             "resilient=True: the replay boundary admits "
+                             "a single in-flight tree")
         # per-fit accounting on BOTH sides of the wire: the model's Stats
         # are fresh, so the channel ledgers and host Stats must be too,
         # or a refit on a long-lived run double-counts
