@@ -1,0 +1,67 @@
+"""CI bigdata smoke: 1M-row out-of-core training under a hard RSS bound.
+
+Exercises the full §13 streaming path — sketch binning over a generated
+``RowBlocks`` source, chunked encrypt->ship, block-wise frontier
+accumulation — at a row count where the monolithic int32 bin matrix plus
+width-padded device ciphertexts would already cost ~1 GB, and FAILS (exit
+1) if the process peak RSS exceeds ``--max-rss-mb``.  The bound is the
+regression tripwire: an accidental O(rows) materialization anywhere in
+the streamed path (a full-width cts upload, an un-chunked encode, an
+int32 bin copy) blows straight through it.
+
+    PYTHONPATH=src python -m benchmarks.bigdata_smoke [--rows 1000000]
+                                                      [--max-rss-mb 2048]
+"""
+
+from __future__ import annotations
+
+import argparse
+import resource
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main(rows: int, max_rss_mb: float) -> int:
+    import numpy as np
+
+    from repro.core import SBTParams, VerticalBoosting
+    from repro.data import synthetic_tabular_stream
+
+    d, block = 16, 65_536
+    n_guest = max(2, d // 8)
+    blocks, y = synthetic_tabular_stream(rows, d, block=block, seed=0)
+    p = SBTParams(n_trees=1, max_depth=3, n_bins=16, cipher="plain",
+                  key_bits=256, seed=1, row_block=block)
+    model = VerticalBoosting(p)
+    model.fit(blocks.select_columns(0, n_guest), y,
+              [blocks.select_columns(n_guest, d)])
+    st = model.stats
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+
+    n_blocks = -(-rows // block)
+    enc_msgs = model.channel.summary()["enc_gh"]["msgs"]
+    assert enc_msgs == n_blocks, (enc_msgs, n_blocks)
+    assert st.peak_block_bytes > 0 and st.peak_cts_bytes > 0
+    # device-side residency must be O(block), nowhere near O(rows)
+    width = model.cipher.hist_width
+    assert st.peak_cts_bytes <= 2 * block * width * 4, st.peak_cts_bytes
+    assert np.isfinite(model.train_score_).all()
+
+    print(f"bigdata_smoke: rows={rows} block={block} "
+          f"peak_rss_mb={rss_mb:.0f} (bound {max_rss_mb:.0f}) "
+          f"peak_cts_bytes={st.peak_cts_bytes} "
+          f"peak_block_bytes={st.peak_block_bytes} enc_gh_msgs={enc_msgs}")
+    if rss_mb > max_rss_mb:
+        print(f"FAIL: peak RSS {rss_mb:.0f} MB exceeds the "
+              f"{max_rss_mb:.0f} MB budget", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=1_000_000)
+    ap.add_argument("--max-rss-mb", type=float, default=2048)
+    a = ap.parse_args()
+    sys.exit(main(a.rows, a.max_rss_mb))

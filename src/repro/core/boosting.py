@@ -22,7 +22,8 @@ import time
 import numpy as np
 
 from . import encoding, mo_encoding
-from .binning import BinnedData, bin_features
+from ..data.pipeline import RowBlocks
+from .binning import BinnedData, bin_features, bin_features_stream
 from .goss import goss_sample
 from .he import get_cipher
 from .histogram import CipherHistogram
@@ -75,6 +76,14 @@ class SBTParams:
                                        # frontier engine shards instances
                                        # over "data" and the layer histogram
                                        # node axis over "model" (DESIGN §5/§7)
+    row_block: int = 0                 # out-of-core row-block size (§13):
+                                       # > 0 streams every O(rows) training
+                                       # stage (encrypt->ship, frontier
+                                       # accumulation, guest histograms) in
+                                       # blocks of this many rows whenever a
+                                       # batch exceeds it; 0 keeps the
+                                       # monolithic fast path.  Bit-identical
+                                       # either way (limb backends only)
 
 
 def cipher_kwargs(params: SBTParams) -> dict:
@@ -137,11 +146,8 @@ class VerticalBoosting:
         self.channel.reset_accounting()
         self._predictor = None            # stale after refit
         self._predictor_n_trees = -1
-        self.guest_data = bin_features(X_guest, p.n_bins, sparse=p.sparse,
-                                       use_pallas=p.use_pallas)
-        self.host_data = [bin_features(Xh, p.n_bins, sparse=p.sparse,
-                                       use_pallas=p.use_pallas)
-                          for Xh in X_hosts]
+        self.guest_data = self._bin(X_guest)
+        self.host_data = [self._bin(Xh) for Xh in X_hosts]
         y = np.asarray(y, np.float64)
         self._y = y
         n = len(y)
@@ -160,6 +166,20 @@ class VerticalBoosting:
                                if self.remote_hosts is not None
                                else len(X_hosts))
         return score
+
+    def _bin(self, X) -> BinnedData:
+        """Bin one party's features.  A pre-binned ``BinnedData`` passes
+        through; a chunked ``RowBlocks`` source takes the out-of-core
+        two-pass sketch path (§13); an in-memory array takes the
+        monolithic exact-quantile fit."""
+        p = self.params
+        if isinstance(X, BinnedData):
+            return X
+        if isinstance(X, RowBlocks):
+            return bin_features_stream(X, p.n_bins, sparse=p.sparse,
+                                       use_pallas=p.use_pallas)
+        return bin_features(X, p.n_bins, sparse=p.sparse,
+                            use_pallas=p.use_pallas)
 
     @property
     def trees_per_round(self) -> int:

@@ -16,12 +16,16 @@ from __future__ import annotations
 import numpy as np
 
 
-def compress_batch(cipher, cts, eta_s: int, b_slot: int):
+def compress_batch(cipher, cts, eta_s: int, b_slot: int, mesh=None):
     """Compress a batch of N ciphertexts into ceil(N / eta_s) packages.
 
     cts: for limb backends a (N, Ln) array; for pyobj an object array (N,).
     Returns (packages, group_sizes) where group_sizes[i] is how many source
     ciphertexts package i holds (the last group may be short).
+
+    ``mesh``: optional (data, model) jax Mesh — large batches shard the
+    shift-and-add over the "data" axis (see :func:`_sharded_compress`);
+    small ones keep the single-device path.
     """
     if eta_s < 1:
         raise ValueError("eta_s must be >= 1")
@@ -48,10 +52,12 @@ def compress_batch(cipher, cts, eta_s: int, b_slot: int):
             zero_ct = jnp.zeros((pad, cts.shape[-1]), cts.dtype)
             cts = jnp.concatenate([cts, zero_ct], axis=0)
         groups = cts.reshape(n_groups, eta_s, -1)
-        acc = groups[:, 0, :]
-        for s in range(1, eta_s):
-            acc = cipher.mul_pow2(acc, b_slot)
-            acc = cipher.add(acc, groups[:, s, :])
+        acc = _sharded_compress(cipher, groups, eta_s, b_slot, mesh)
+        if acc is None:
+            acc = groups[:, 0, :]
+            for s in range(1, eta_s):
+                acc = cipher.mul_pow2(acc, b_slot)
+                acc = cipher.add(acc, groups[:, s, :])
         return acc, sizes
     else:  # pyobj (Paillier oracle)
         cts = np.asarray(cts, dtype=object)
@@ -65,6 +71,52 @@ def compress_batch(cipher, cts, eta_s: int, b_slot: int):
                                  np.asarray([c], dtype=object))[0]
             packages[gi] = acc
         return packages, sizes
+
+
+def _sharded_compress(cipher, groups, eta_s: int, b_slot: int, mesh):
+    """Mesh-sharded shift-and-add over the package axis.
+
+    Every homomorphic op in Algorithm 4 (``mul_pow2`` then ``add``, slot by
+    slot) is row-wise over packages, so sharding the group axis over "data"
+    runs the whole compress with NO collective and stays bit-identical to
+    the single-device loop.  Gated exactly like the sharded decrypt/cumsum
+    paths: shard only when every data shard gets at least one full kernel
+    row block (``n_groups >= BLOCK_N * data_shards``); returns None below
+    the gate and the caller falls back."""
+    if mesh is None:
+        return None
+    dd = dict(mesh.shape).get("data", 1)
+    G = int(groups.shape[0])
+    from ..kernels.modmul.modmul import BLOCK_N
+    if dd <= 1 or G < BLOCK_N * dd:
+        return None
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from ..parallel.sharding import data_pad, gbdt_sharding
+    # pow2 bucketing caps distinct shard_map compilations at O(log max_G)
+    bucket = 1 << max(G - 1, 0).bit_length()
+    bucket += data_pad(mesh, bucket)
+    x = groups
+    if bucket > G:
+        # pad groups are all-zero ciphertexts: E(0) shift-and-adds to E(0)
+        x = jnp.pad(x, [(0, bucket - G), (0, 0), (0, 0)])
+    x = jax.device_put(x, gbdt_sharding(mesh, "split_infos", ndim=3))
+
+    def shard(xs):
+        acc = xs[:, 0, :]
+        for s in range(1, eta_s):
+            acc = cipher.mul_pow2(acc, b_slot)
+            acc = cipher.add(acc, xs[:, s, :])
+        return acc
+
+    out = shard_map(shard, mesh=mesh, in_specs=P("data", None, None),
+                    out_specs=P("data", None), check_rep=False)(x)
+    # land on one device before the decrypt consumer (jax-0.4.37 eager-
+    # mixing caveat, see kernels/histogram/ops.py)
+    return jax.device_put(out[:G], jax.devices()[0])
 
 
 def decompress_ints(plain_ints, sizes, eta_s: int, b_slot: int,

@@ -72,6 +72,37 @@ def _register():
 _register()
 
 
+class CtsBlocks:
+    """Host-compact encrypted-GH batch for the out-of-core path (§13).
+
+    Canonical radix-2^8 ciphertext limbs fit in uint8, so the full batch
+    lives host-side at 1/4 the device int32 footprint and is re-uploaded to
+    the device one fixed-size row block at a time by the streamed dispatch.
+    Blocks arrive independently (chunked ``enc_gh`` frames, or the guest's
+    own chunked encrypt loop); ``set_block`` is idempotent so a replayed
+    frame sequence reassembles the identical batch.
+    """
+
+    def __init__(self, n_rows: int, n_slots: int, limbs: int, block: int):
+        self.cts = np.zeros((n_rows, n_slots, limbs), np.uint8)
+        self.block = int(block)
+        self.n_rows = int(n_rows)
+        self._have: set = set()
+
+    @property
+    def n_blocks(self) -> int:
+        return -(-self.n_rows // self.block)
+
+    @property
+    def complete(self) -> bool:
+        return len(self._have) == self.n_blocks
+
+    def set_block(self, b: int, arr: np.ndarray) -> None:
+        start = b * self.block
+        self.cts[start: start + arr.shape[0]] = arr
+        self._have.add(int(b))
+
+
 class CipherFrontier:
     """Frontier manager for one (tree, host) pair on the cipher engine.
 
@@ -80,6 +111,13 @@ class CipherFrontier:
     device (sharded per the GBDT rule table when the engine has a
     multi-device mesh) and stay there; per layer only the small
     ``node_slot`` vector crosses the host boundary.
+
+    When the ciphertexts arrive as a :class:`CtsBlocks` the frontier runs
+    in *stream* mode instead (DESIGN.md §13): nothing O(rows) is placed on
+    device — bins stay at their compact host dtype, ciphertexts stay uint8
+    host-side — and the engine accumulates each layer over fixed-size row
+    blocks via :meth:`iter_stream_blocks`, so peak device memory is
+    O(block · nodes).
     """
 
     def __init__(self, engine, data: BinnedData, cts, channel=None,
@@ -96,6 +134,16 @@ class CipherFrontier:
                                         # frontier had to perform itself (0
                                         # when ciphertexts arrive born-
                                         # sharded at histogram width, §8)
+        self.stream_blocks = cts if isinstance(cts, CtsBlocks) else None
+        if self.stream_blocks is not None:
+            # out-of-core mode: no O(rows) device state, no full masked
+            # int32 host mirror — blocks are cast/masked on the fly
+            self.bins_np = data.bins
+            self._n_rows_dev = data.bins.shape[0]
+            self.state = FrontierState(bins=None, cts=None, hists={})
+            self.cts_flat = None
+            self.cts_obj = None
+            return
 
         bins_np = data.bins.astype(np.int32)
         if self.sparse:
@@ -151,6 +199,11 @@ class CipherFrontier:
             # materialized once per tree (sharding preserved: axis 0 = data)
             self.cts_flat = cts_wide.reshape(cts_wide.shape[0], -1)
             self.cts_obj = None
+            stats = getattr(engine, "stats", None)
+            if stats is not None:
+                # monolithic mode keeps the whole int32 batch device-resident
+                stats.peak_cts_bytes = max(stats.peak_cts_bytes,
+                                           int(cts_wide.size) * 4)
         else:
             self.state = FrontierState(bins=None, cts=None, hists={})
             self.cts_flat = None
@@ -182,6 +235,41 @@ class CipherFrontier:
         Returns the cache size after eviction."""
         self.evict([nid for nid in list(self.state.hists) if nid not in keep])
         return len(self.state.hists)
+
+    # -- out-of-core block iteration (DESIGN.md §13) --------------------
+    def iter_stream_blocks(self, node_slot, with_cts: bool = True):
+        """Yield ``(bins_blk, slot_blk, cts_wide_blk)`` fixed-size row
+        blocks for the streamed layer dispatch: bins cast to int32 and
+        sparse-masked on the fly, ciphertext limbs widened uint8 -> int32
+        at the cipher's histogram width.  The last block is padded to the
+        full block size with bins = -1 / slot = -1 / cts = 0 (clean
+        masking, one compiled launch shape).  ``node_slot`` may be the 2-D
+        member-slot matrix of a round-forest layer."""
+        sb = self.stream_blocks
+        block = sb.block
+        n = self.data.n_instances
+        node_slot = np.asarray(node_slot, np.int32)
+        width = self.engine.cipher.hist_width
+        n_slots = sb.cts.shape[1]
+        for start in range(0, n, block):
+            stop = min(start + block, n)
+            r = stop - start
+            bins_blk = np.full((block, self.data.n_features), -1, np.int32)
+            bins_blk[:r] = self.data.bins[start:stop]
+            if self.sparse:
+                zm = self.data.zero_mask[start:stop]
+                bins_blk[:r] = np.where(zm, -1, bins_blk[:r])
+            slot_blk = np.full((block,) + node_slot.shape[1:], -1, np.int32)
+            slot_blk[:r] = node_slot[start:stop]
+            cts_blk = None
+            if with_cts:
+                cts_blk = np.zeros((block, n_slots, width), np.int32)
+                cts_blk[:r, :, : sb.cts.shape[2]] = sb.cts[start:stop]
+                stats = getattr(self.engine, "stats", None)
+                if stats is not None:
+                    stats.peak_cts_bytes = max(stats.peak_cts_bytes,
+                                               cts_blk.nbytes)
+            yield bins_blk, slot_blk, cts_blk
 
     # -- per-layer ------------------------------------------------------
     def layer_slots(self, node_rows: dict, direct: list) -> np.ndarray:
@@ -265,6 +353,12 @@ class FrontierBuffer:
 
     def staged(self, key) -> bool:
         return key in self._staged
+
+    def peek(self, key):
+        """The staged entry for ``key`` WITHOUT activating it — chunked
+        ``enc_gh`` blocks (§13) keep assembling into a staged runtime
+        while the previous tree is still active."""
+        return self._staged[key]
 
     def activate(self, key):
         """Promote the staged entry for ``key`` to active and return it."""

@@ -40,7 +40,8 @@ from ..kernels.histogram import (allgather_wire_bytes, ciphertext_histogram,
                                  layer_ciphertext_histogram,
                                  layer_count_histogram, psum_wire_bytes,
                                  sharded_forest_ciphertext_histogram,
-                                 sharded_layer_ciphertext_histogram)
+                                 sharded_layer_ciphertext_histogram,
+                                 streamed_layer_ciphertext_histogram)
 from .binning import BinnedData
 
 # Round-forest global node ids: gid = member * GID_STRIDE + member-local nid.
@@ -50,11 +51,19 @@ GID_STRIDE = 1 << 20
 
 
 class PlainHistogram:
-    """Plaintext (g, h, count) histograms: (n_f, n_b) float64 / int64."""
+    """Plaintext (g, h, count) histograms: (n_f, n_b) float64 / int64.
 
-    def __init__(self, n_bins: int, sparse: bool = False):
+    ``row_block > 0`` makes the layer path iterate the concatenated row
+    index in contiguous chunks (out-of-core guest, DESIGN.md §13): the
+    O(rows) gather temporaries (bins / g / h / composite-index slices)
+    shrink to O(block) while every ``np.add.at`` still applies the same
+    additions to each cell in the same order — float64 accumulation is
+    sequential either way, so the result is bit-identical."""
+
+    def __init__(self, n_bins: int, sparse: bool = False, row_block: int = 0):
         self.n_bins = n_bins
         self.sparse = sparse
+        self.row_block = row_block
 
     def node_histogram(self, data: BinnedData, g: np.ndarray, h: np.ndarray,
                        rows: np.ndarray):
@@ -100,35 +109,46 @@ class PlainHistogram:
             slot_cat = np.concatenate(
                 [np.full(len(node_rows[nid]), k, np.int64)
                  for k, nid in enumerate(direct)])
-            bins = data.bins[rows_cat]                # (R, n_f)
-            n_f = bins.shape[1]
-            gr, hr = g[rows_cat], h[rows_cat]
+            n_f = data.n_features
             out_dim = np.asarray(g).shape[1:]
             G = np.zeros((n_f, n_d * n_b) + out_dim)
             H = np.zeros((n_f, n_d * n_b) + out_dim)
             C = np.zeros((n_f, n_d * n_b), np.int64)
-            comp = slot_cat[:, None] * n_b + bins     # composite (node, bin)
             sparse = self.sparse and data.zero_mask is not None
-            zmask = data.zero_mask[rows_cat] if sparse else None
-            for f in range(n_f):
+            if sparse:
+                gt = np.zeros((n_d,) + out_dim)
+                ht = np.zeros((n_d,) + out_dim)
+                ct = np.zeros(n_d, np.int64)
+            R = len(rows_cat)
+            step = self.row_block if self.row_block > 0 else max(R, 1)
+            # contiguous chunks of the concatenated index: each np.add.at
+            # sees the same per-cell addition sequence as one monolithic
+            # pass, so chunking changes peak memory, not a single bit
+            for s0 in range(0, R, step):
+                rc = rows_cat[s0: s0 + step]
+                sc = slot_cat[s0: s0 + step]
+                bins = data.bins[rc]                  # (r, n_f)
+                gr, hr = g[rc], h[rc]
+                comp = sc[:, None] * n_b + bins       # composite (node, bin)
+                zmask = data.zero_mask[rc] if sparse else None
+                for f in range(n_f):
+                    if sparse:
+                        keep = ~zmask[:, f]
+                        np.add.at(G[f], comp[keep, f], gr[keep])
+                        np.add.at(H[f], comp[keep, f], hr[keep])
+                        np.add.at(C[f], comp[keep, f], 1)
+                    else:
+                        np.add.at(G[f], comp[:, f], gr)
+                        np.add.at(H[f], comp[:, f], hr)
+                        np.add.at(C[f], comp[:, f], 1)
                 if sparse:
-                    keep = ~zmask[:, f]
-                    np.add.at(G[f], comp[keep, f], gr[keep])
-                    np.add.at(H[f], comp[keep, f], hr[keep])
-                    np.add.at(C[f], comp[keep, f], 1)
-                else:
-                    np.add.at(G[f], comp[:, f], gr)
-                    np.add.at(H[f], comp[:, f], hr)
-                    np.add.at(C[f], comp[:, f], 1)
+                    np.add.at(gt, sc, gr)
+                    np.add.at(ht, sc, hr)
+                    ct += np.bincount(sc, minlength=n_d)
             Gn = np.moveaxis(G.reshape((n_f, n_d, n_b) + out_dim), 1, 0)
             Hn = np.moveaxis(H.reshape((n_f, n_d, n_b) + out_dim), 1, 0)
             Cn = np.moveaxis(C.reshape(n_f, n_d, n_b), 1, 0)
             if sparse:
-                gt = np.zeros((n_d,) + out_dim)
-                ht = np.zeros((n_d,) + out_dim)
-                np.add.at(gt, slot_cat, gr)
-                np.add.at(ht, slot_cat, hr)
-                ct = np.bincount(slot_cat, minlength=n_d)
                 for f in range(n_f):
                     zb = int(data.zero_bins[f])
                     Gn[:, f, zb] += gt - Gn[:, f].sum(axis=1)
@@ -266,16 +286,23 @@ class CipherHistogram:
         if n_d and forest:
             slot_mat, member_local, n_local = frontier.layer_slots_forest(
                 node_rows, direct, forest, GID_STRIDE)
-            nh = frontier.bins_np.shape[0]
-            cnts_m = [np.asarray(layer_count_histogram(
-                frontier.bins_np, slot_mat[:nh, m], n_local,
-                n_b)).astype(np.int64) for m in range(forest)]
+            if frontier.stream_blocks is not None:
+                lazy_f, cnts_all = self._stream_layer(frontier, slot_mat,
+                                                      n_local, forest=forest)
+                cnts_m = list(cnts_all)
+                n_slots = frontier.stream_blocks.cts.shape[1]
+                width = self.cipher.hist_width
+            else:
+                nh = frontier.bins_np.shape[0]
+                cnts_m = [np.asarray(layer_count_histogram(
+                    frontier.bins_np, slot_mat[:nh, m], n_local,
+                    n_b)).astype(np.int64) for m in range(forest)]
+                lazy_f = self._forest_dispatch(frontier, slot_mat, n_local,
+                                               forest)
+                n, n_slots, width = frontier.state.cts.shape
             for kk, gid in enumerate(direct):
                 m, loc = member_local[gid]
                 counts[kk] = cnts_m[m][loc]
-            lazy_f = self._forest_dispatch(frontier, slot_mat, n_local,
-                                           forest)
-            n, n_slots, width = frontier.state.cts.shape
             lazy_f = lazy_f.reshape(forest, n_local, n_f, n_b, n_slots,
                                     width)
             # gather member-major blocks back into flat ``direct`` order
@@ -293,13 +320,20 @@ class CipherHistogram:
                     node_slot[node_rows[gid], member_local[gid][0]] = kk
         elif n_d:
             node_slot = frontier.layer_slots(node_rows, direct)
-            # node_slot is aligned with the (possibly mesh-padded) device
-            # bins; the plaintext counts run on the unpadded host mirror
-            counts = np.asarray(layer_count_histogram(
-                frontier.bins_np, node_slot[: frontier.bins_np.shape[0]],
-                n_d, n_b)).astype(np.int64)
-            lazy = self._layer_dispatch(frontier, node_slot, n_d)
-            n, n_slots, width = frontier.state.cts.shape
+            if frontier.stream_blocks is not None:
+                lazy, cnts_all = self._stream_layer(frontier, node_slot, n_d)
+                counts = cnts_all[0]
+                n_slots = frontier.stream_blocks.cts.shape[1]
+                width = self.cipher.hist_width
+            else:
+                # node_slot is aligned with the (possibly mesh-padded)
+                # device bins; the plaintext counts run on the unpadded
+                # host mirror
+                counts = np.asarray(layer_count_histogram(
+                    frontier.bins_np, node_slot[: frontier.bins_np.shape[0]],
+                    n_d, n_b)).astype(np.int64)
+                lazy = self._layer_dispatch(frontier, node_slot, n_d)
+                n, n_slots, width = frontier.state.cts.shape
             lazy = lazy.reshape(n_d, n_f, n_b, n_slots, width)
 
         if sparse:
@@ -310,7 +344,7 @@ class CipherHistogram:
                 canon_direct = self.cipher.reduce(lazy)
                 canon_direct = self._layer_sparse_fix(
                     frontier.data, canon_direct, frontier.state.cts,
-                    node_slot)
+                    node_slot, frontier=frontier)
                 zb = np.asarray(frontier.data.zero_bins, np.int64)
                 for k, nid in enumerate(direct):
                     for f in range(n_f):
@@ -345,6 +379,69 @@ class CipherHistogram:
                         frontier.count(par) - counts[slot_of[sib]])
         return out
 
+    def _stream_layer(self, frontier, node_slot: np.ndarray, n_nodes: int,
+                      forest: int = 0):
+        """Out-of-core layer accumulation (DESIGN.md §13): one pass over
+        the frontier's row blocks drives the streamed launch path while the
+        plaintext counts accumulate in the same pass.  Returns
+        ``(lazy, counts)`` where ``lazy`` matches the monolithic dispatch's
+        layout ((n_nodes, n_f, n_b, L) or (k, n_nodes, ...) for a forest)
+        and ``counts`` is (max(k, 1), n_nodes, n_f, n_b) int64."""
+        n_b = self.n_bins
+        n_f = frontier.data.n_features
+        k = max(forest, 1)
+        cnts = np.zeros((k, n_nodes, n_f, n_b), np.int64)
+        stats = self.stats
+        launches = [0]
+
+        def blocks():
+            for bins_blk, slot_blk, cts_blk in \
+                    frontier.iter_stream_blocks(node_slot):
+                if forest:
+                    for m in range(forest):
+                        cnts[m] += np.asarray(layer_count_histogram(
+                            bins_blk, slot_blk[:, m], n_nodes, n_b),
+                            np.int64)
+                else:
+                    cnts[0] += np.asarray(layer_count_histogram(
+                        bins_blk, slot_blk, n_nodes, n_b), np.int64)
+                yield bins_blk, slot_blk, cts_blk.reshape(
+                    cts_blk.shape[0], -1)
+
+        def on_block(nbytes):
+            self._count_launch()
+            launches[0] += 1
+            if stats is not None:
+                stats.peak_block_bytes = max(stats.peak_block_bytes,
+                                             int(nbytes))
+
+        # pow2 node padding: same compile-bucketing as the monolithic path
+        n_pad = 1 << max(n_nodes - 1, 0).bit_length()
+        multi = self._mesh_devices() > 1
+        lazy = streamed_layer_ciphertext_histogram(
+            blocks(), n_pad, n_b, forest=forest,
+            mesh=self.mesh if multi else None,
+            use_pallas=self.use_pallas, on_block=on_block)
+        if multi:
+            # same analytic collective ledger as the monolithic dispatch,
+            # paid once per block
+            sizes = dict(self.mesh.shape)
+            mm = sizes.get("model", 1)
+            npm = -(-n_pad // mm)
+            n_slots = frontier.stream_blocks.cts.shape[1]
+            shard_bytes = (k * npm * n_f * n_b * n_slots
+                           * self.cipher.hist_width * 4)
+            for _ in range(launches[0]):
+                if sizes.get("data", 1) > 1:
+                    frontier.collective(
+                        "hist_psum", psum_wire_bytes(self.mesh, shard_bytes))
+                if mm > 1:
+                    frontier.collective(
+                        "hist_allgather",
+                        allgather_wire_bytes(self.mesh, shard_bytes * mm))
+        lazy = lazy[:, :n_nodes] if forest else lazy[:n_nodes]
+        return lazy, cnts
+
     def _forest_dispatch(self, frontier, slot_mat: np.ndarray, n_local: int,
                          k: int):
         """One (tree, node)-batched accumulation dispatch for a round-forest
@@ -354,6 +451,11 @@ class CipherHistogram:
         state = frontier.state
         n_slots, width = state.cts.shape[1:]
         flat = frontier.cts_flat
+        if self.stats is not None:
+            self.stats.peak_block_bytes = max(
+                self.stats.peak_block_bytes,
+                (int(state.bins.size) + int(slot_mat.size)
+                 + int(flat.size)) * 4)
         n_pad = 1 << max(n_local - 1, 0).bit_length()
         if self._mesh_devices() > 1:
             lazy = sharded_forest_ciphertext_histogram(
@@ -385,6 +487,11 @@ class CipherHistogram:
         state = frontier.state
         n_slots, width = state.cts.shape[1:]
         flat = frontier.cts_flat          # flattened once per tree
+        if self.stats is not None:
+            self.stats.peak_block_bytes = max(
+                self.stats.peak_block_bytes,
+                (int(state.bins.size) + int(node_slot.size)
+                 + int(flat.size)) * 4)
         # pad the node axis to the next power of two: the node count is a
         # static kernel arg, so this caps distinct jit compilations at
         # O(log max_nodes) per tree shape instead of one per frontier size
@@ -427,13 +534,17 @@ class CipherHistogram:
         return out
 
     # -- paper tricks -------------------------------------------------------
-    def _layer_sparse_fix(self, data, hist, cts_wide, node_slot):
+    def _layer_sparse_fix(self, data, hist, cts_wide, node_slot,
+                          frontier=None):
         """Batched §6.2 recovery: per node, zero-bin += total - sum(bins).
 
         hist: (n_d, n_f, n_b, n_slots, L) canonical; cts_wide: (n, n_slots,
         width) padded limbs aligned with node_slot.  A 2-D node_slot is the
         round-forest global-slot matrix (one column per member: a row
-        contributes its ciphertext to up to one node per member tree)."""
+        contributes its ciphertext to up to one node per member tree).
+        ``cts_wide is None`` selects the out-of-core path: the per-node
+        totals accumulate over the frontier's row blocks (int32 scatter-adds
+        are exact and order-free, so the block split is bit-invisible)."""
         import jax
         import jax.numpy as jnp
         from .he import limbs
@@ -441,11 +552,21 @@ class CipherHistogram:
         width = self.cipher.hist_width
         # per-node ciphertext totals: one scatter-add (per member column in
         # forest mode) + one reduce
-        slot = np.where(node_slot < 0, n_d, node_slot)
-        tot_lazy = jnp.zeros((n_d + 1,) + tuple(cts_wide.shape[1:]),
-                             jnp.int32)
-        for col in (slot.T if slot.ndim == 2 else [slot]):
-            tot_lazy = tot_lazy.at[jnp.asarray(col)].add(cts_wide)
+        if cts_wide is None:
+            n_slots = frontier.stream_blocks.cts.shape[1]
+            tot_lazy = jnp.zeros((n_d + 1, n_slots, width), jnp.int32)
+            for _, slot_blk, cts_blk in \
+                    frontier.iter_stream_blocks(node_slot):
+                slot_b = np.where(slot_blk < 0, n_d, slot_blk)
+                cw = jnp.asarray(cts_blk)
+                for col in (slot_b.T if slot_b.ndim == 2 else [slot_b]):
+                    tot_lazy = tot_lazy.at[jnp.asarray(col)].add(cw)
+        else:
+            slot = np.where(node_slot < 0, n_d, node_slot)
+            tot_lazy = jnp.zeros((n_d + 1,) + tuple(cts_wide.shape[1:]),
+                                 jnp.int32)
+            for col in (slot.T if slot.ndim == 2 else [slot]):
+                tot_lazy = tot_lazy.at[jnp.asarray(col)].add(cts_wide)
         if self._mesh_devices() > 1:
             # cts live mesh-sharded; land the small per-node totals next to
             # the (single-device) gathered histograms before mixing

@@ -67,6 +67,10 @@ class Stats:
     host_wait_seconds: float = 0.0      # blocking decrypt+decode tail
     peak_hist_cache: int = 0    # max cached parent hists after any eviction
     peak_frontier: int = 0      # max frontier width (layer node count)
+    peak_cts_bytes: int = 0     # max device-resident ciphertext-batch bytes:
+                                # O(rows) monolithic, O(block) streamed
+    peak_block_bytes: int = 0   # max device bytes uploaded per histogram
+                                # launch (bins + slots + cts operands)
     n_predict_batches: int = 0  # serving-engine batches served
     n_predict_roundtrips: int = 0   # host predict_bits exchanges: exactly
                                     # ONE per (host, batch) in the
@@ -91,7 +95,8 @@ class Stats:
 
     # gauge fields are maxima, not counters: merging across parties must
     # take the max or a 2-host run would report 3x the real peak
-    _GAUGES = ("peak_hist_cache", "peak_frontier")
+    _GAUGES = ("peak_hist_cache", "peak_frontier", "peak_cts_bytes",
+               "peak_block_bytes")
 
     def merge_counts(self, other: dict) -> None:
         """Fold another party's ``as_dict()`` into this one: numeric

@@ -55,7 +55,7 @@ import numpy as np
 from . import compress as compress_mod
 from . import encoding, mo_encoding
 from .binning import BinnedData
-from .frontier import CipherFrontier, GuestFrontier
+from .frontier import CipherFrontier, CtsBlocks, GuestFrontier
 from .he import limbs
 from .histogram import GID_STRIDE, CipherHistogram, PlainHistogram
 from .party import Channel, Stats, ct_wire_bytes
@@ -246,6 +246,7 @@ class HostRuntime:
                                  # PartyProcess so serving export sees local
                                  # nids per member tree; None in-process)
     _outbox: dict = dataclasses.field(default_factory=dict)
+    _asm: dict | None = None     # in-flight chunked enc_gh assembly (§13)
 
     # -- wiring ---------------------------------------------------------
     def bind(self, params, cipher, channel, stats) -> None:
@@ -272,7 +273,44 @@ class HostRuntime:
     def begin_tree(self, msg: dict) -> None:
         """enc_gh: adopt the encrypted GH batch, restrict the binned view
         to the synced selected ids so row positions align with the
-        ciphertext batch, and build the device-resident frontier."""
+        ciphertext batch, and build the device-resident frontier.
+
+        A chunked frame (``"blk" in msg``, DESIGN.md §13) carries one row
+        block of the batch; blocks assemble host-side into a compact uint8
+        :class:`CtsBlocks` and the frontier is built in stream mode once
+        the last block lands.  blk 0 is the replay anchor: a re-delivered
+        sequence restarts assembly idempotently, matching the monolithic
+        frame's re-delivery semantics."""
+        if "blk" in msg:
+            self._begin_tree_block(msg)
+            return
+        sel = np.asarray(msg["sel_rows"])
+        self._adopt_tree(msg, sel, msg["cts"])
+
+    def _begin_tree_block(self, msg: dict) -> None:
+        b = int(msg["blk"])
+        tree = int(msg["tree"])
+        if b == 0:
+            cts0 = np.asarray(msg["cts"])
+            n = int(msg["n_rows"])
+            self._asm = {
+                "tree": tree, "msg0": msg,
+                "sel": np.zeros(n, np.int64),
+                "blocks": CtsBlocks(n, cts0.shape[1], cts0.shape[2],
+                                    int(msg["row_block"])),
+            }
+        elif self._asm is None or self._asm["tree"] != tree:
+            return        # duplicate mid-tree block after completion: drop
+        asm = self._asm
+        sel_blk = np.asarray(msg["sel_rows"])
+        start = b * asm["blocks"].block
+        asm["sel"][start: start + len(sel_blk)] = sel_blk
+        asm["blocks"].set_block(b, np.asarray(msg["cts"], np.uint8))
+        if asm["blocks"].complete:
+            self._asm = None
+            self._adopt_tree(asm["msg0"], asm["sel"], asm["blocks"])
+
+    def _adopt_tree(self, msg: dict, sel: np.ndarray, cts) -> None:
         import types
         self.codec = types.SimpleNamespace(**msg["codec"])
         # host-private shuffle stream: deterministic per (seed, tree, hid)
@@ -280,14 +318,20 @@ class HostRuntime:
         # ids identically without the stream ever crossing the wire
         self.shuffle_rng = np.random.default_rng(
             (int(msg["seed"]), 23, int(msg["tree"]), self.hid))
-        sel = np.asarray(msg["sel_rows"])
-        self.cts = msg["cts"]
+        self.cts = cts
         self.perms = {}
         self.table = {}
-        view = dataclasses.replace(
-            self.data, bins=self.data.bins[sel],
-            zero_mask=(self.data.zero_mask[sel]
-                       if self.data.zero_mask is not None else None))
+        n_all = self.data.bins.shape[0]
+        if isinstance(cts, CtsBlocks) and len(sel) == n_all \
+                and np.array_equal(sel, np.arange(n_all, dtype=sel.dtype)):
+            # identity selection (no GOSS): skip the O(rows) fancy-index
+            # copy of the compact bin matrix in stream mode
+            view = self.data
+        else:
+            view = dataclasses.replace(
+                self.data, bins=self.data.bins[sel],
+                zero_mask=(self.data.zero_mask[sel]
+                           if self.data.zero_mask is not None else None))
         self.frontier = CipherFrontier(self.engine, view, self.cts,
                                        channel=self.channel,
                                        party=f"host{self.hid}")
@@ -393,7 +437,8 @@ class HostRuntime:
             eta = codec.eta_s
             src = flat_all[:, 0, :] if limb else flat_all[:, 0]
             pkgs, sizes = compress_mod.compress_batch(
-                cipher, src, eta, codec.b_slot)
+                cipher, src, eta, codec.b_slot,
+                mesh=getattr(engine, "mesh", None))
             n_pkgs = len(sizes)
             self.stats.n_hom_scalar += int(np.sum(sizes - 1))
             self.stats.n_hom_add += int(np.sum(sizes - 1))
@@ -469,6 +514,10 @@ def _encrypt_all(ctx: TreeContext, g_sel: np.ndarray,
     in-memory limb layout.
     """
     p = ctx.params
+    blk = _stream_block(p, ctx.cipher, len(g_sel))
+    if blk:
+        _encrypt_all_chunked(ctx, g_sel, h_sel, blk)
+        return
     t0 = time.perf_counter()
     plain = ctx.codec.encode_plain(g_sel, h_sel)
     n, s, Lp = plain.shape
@@ -521,6 +570,76 @@ def _encrypt_all(ctx: TreeContext, g_sel: np.ndarray,
         ctx.channel.send("guest", f"host{host.hid}", "enc_gh", payload,
                          nbytes)
         host.deliver("enc_gh", payload)
+    ctx.enc_shipped = True
+
+
+def _stream_block(params, cipher, n: int) -> int:
+    """Row-block size for the out-of-core path, or 0 for monolithic.
+
+    Streaming engages only when a positive ``row_block`` is set, the batch
+    actually exceeds it, and the cipher is limb-backed (the python-int
+    Paillier oracle keeps the small-data monolithic path)."""
+    rb = int(getattr(params, "row_block", 0) or 0)
+    if rb > 0 and n > rb and cipher.backend == "limb":
+        return rb
+    return 0
+
+
+def _encrypt_all_chunked(ctx: TreeContext, g_sel: np.ndarray,
+                         h_sel: np.ndarray, block: int) -> None:
+    """Chunked encrypt->ship (DESIGN.md §13): one row block at a time.
+
+    Each block is encoded, encrypted on the single-device limb path, cast
+    to its canonical radix-2^8 uint8 limbs and broadcast under the same
+    ``enc_gh`` tag with framing fields (``blk``/``n_blocks``/``n_rows``/
+    ``row_block`` plus the block's slice of ``sel_rows``).  Encryption is
+    row-wise deterministic, so the concatenation of block ciphertexts is
+    bit-identical to the monolithic batch; per-block wire bytes sum to the
+    monolithic ledger total.  No party ever holds the full ciphertext
+    batch: the guest frees each block after the ship and hosts assemble
+    into a host-compact :class:`CtsBlocks`."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.modmul import encrypt_batch
+    p = ctx.params
+    n = len(g_sel)
+    n_blocks = -(-n // block)
+    Ln = ctx.cipher.Ln
+    wire_ct = ct_wire_bytes(ctx.cipher)
+    codec_view = {"n_slots": int(ctx.codec.n_slots),
+                  "compressible": bool(ctx.codec.compressible),
+                  "eta_s": int(getattr(ctx.codec, "eta_s", 0)),
+                  "b_slot": int(getattr(ctx.codec, "b_slot", 0))}
+    for host in ctx.hosts:
+        host.bind(ctx.params, ctx.cipher, ctx.channel, ctx.stats)
+    sel_rows = np.asarray(ctx.sel_rows)
+    for b in range(n_blocks):
+        t0 = time.perf_counter()
+        lo, hi = b * block, min((b + 1) * block, n)
+        plain = ctx.codec.encode_plain(g_sel[lo:hi], h_sel[lo:hi])
+        r, s, Lp = plain.shape
+        if ctx.cipher.name == "affine" and p.use_pallas:
+            cts = encrypt_batch(ctx.cipher, plain.reshape(r * s, Lp),
+                                out_width=Ln).reshape(r, s, Ln)
+        else:
+            cts = limbs.pad_limbs(
+                ctx.cipher.encrypt_limbs(jnp.asarray(plain)), Ln)
+        cts_u8 = np.asarray(jax.device_get(cts)).astype(np.uint8)
+        ctx.stats.n_encrypt += r * s
+        ctx.stats.encrypt_seconds += time.perf_counter() - t0
+        ctx.stats.peak_block_bytes = max(
+            ctx.stats.peak_block_bytes, int(cts_u8.nbytes) + r * 8)
+        payload = {"tree": int(ctx.tree_idx), "seed": int(p.seed),
+                   "forest": int(ctx.forest_k), "codec": codec_view,
+                   "blk": b, "n_blocks": n_blocks, "n_rows": n,
+                   "row_block": int(block),
+                   "sel_rows": sel_rows[lo:hi], "cts": cts_u8}
+        nbytes = r * s * wire_ct + r * 4
+        for host in ctx.hosts:
+            ctx.channel.send("guest", f"host{host.hid}", "enc_gh", payload,
+                             nbytes)
+            host.deliver("enc_gh", payload)
     ctx.enc_shipped = True
 
 
@@ -727,7 +846,8 @@ def grow_tree(ctx: TreeContext,
         else:
             _encrypt_all(ctx, g_sel, h_sel)
 
-    plain_engine = PlainHistogram(p.n_bins, sparse=p.sparse)
+    plain_engine = PlainHistogram(p.n_bins, sparse=p.sparse,
+                                 row_block=getattr(p, "row_block", 0))
     guest_frontier = GuestFrontier(plain_engine, ctx.guest_data, ctx.g, ctx.h)
 
     n_all = ctx.guest_data.n_instances
@@ -956,7 +1076,8 @@ def grow_forest(ctx: TreeContext, bags: list,
         else:
             _encrypt_all(ctx, g_sel, h_sel)
 
-    plain_engine = PlainHistogram(p.n_bins, sparse=p.sparse)
+    plain_engine = PlainHistogram(p.n_bins, sparse=p.sparse,
+                                 row_block=getattr(p, "row_block", 0))
     guest_frontier = GuestFrontier(plain_engine, ctx.guest_data, ctx.g, ctx.h)
 
     n_all = ctx.guest_data.n_instances

@@ -1,1 +1,2 @@
-from .pipeline import PrefetchLoader, SyntheticTokens, synthetic_tabular  # noqa: F401
+from .pipeline import (PrefetchLoader, RowBlocks, SyntheticTokens,  # noqa: F401
+                       synthetic_tabular, synthetic_tabular_stream)

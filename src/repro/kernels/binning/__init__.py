@@ -1,2 +1,4 @@
 from .ops import bucketize, fit_quantile_thresholds  # noqa: F401
 from .ref import bucketize_ref  # noqa: F401
+from .sketch import (DEFAULT_CAPACITY, QuantileSketch,  # noqa: F401
+                     fit_sketch, merge_sketch, sketch_thresholds)

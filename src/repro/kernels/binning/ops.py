@@ -7,6 +7,8 @@ import numpy as np
 
 from .binning import bucketize_pallas
 from .ref import bucketize_ref
+from .sketch import (DEFAULT_CAPACITY, QuantileSketch, fit_sketch,  # noqa: F401
+                     merge_sketch, sketch_thresholds)
 
 
 def fit_quantile_thresholds(values: np.ndarray, n_bins: int) -> np.ndarray:

@@ -1,0 +1,139 @@
+"""Mergeable per-feature quantile sketches for streaming threshold fitting.
+
+``fit_quantile_thresholds`` needs the full value matrix in memory; at the
+paper's tens-of-millions-of-rows regime that is the first O(rows) wall.
+The streaming path fits one sketch per row block (``fit_sketch``), merges
+them associatively (``merge_sketch``), and extracts the split points from
+the merged summary (``sketch_thresholds``).
+
+The sketch is a per-feature sorted array of distinct float64 values with
+int64 multiplicities -- i.e. an *exact* weighted empirical CDF.  As long
+as the number of distinct values per feature stays within ``capacity``,
+``sketch_thresholds`` reproduces ``fit_quantile_thresholds`` bit-for-bit:
+it evaluates the same ``np.quantile`` linear-interpolation rule (including
+numpy's symmetric ``_lerp`` branch at gamma >= 0.5) on weighted order
+statistics instead of on the materialized sort.  Past ``capacity`` the
+sketch compresses deterministically to rank-equi-spaced anchors, bounding
+the quantile rank error by n/capacity (the classic GK-style trade; FATE's
+``Quantile.convert_feature_to_bin`` makes the same exactness-for-memory
+trade on its production path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+DEFAULT_CAPACITY = 8192
+
+
+@dataclasses.dataclass
+class FeatureSketch:
+    values: np.ndarray   # (k,) float64, sorted, distinct
+    counts: np.ndarray   # (k,) int64, positive
+
+    @property
+    def n(self) -> int:
+        return int(self.counts.sum())
+
+
+@dataclasses.dataclass
+class QuantileSketch:
+    features: list        # list[FeatureSketch], one per feature
+    n_rows: int
+
+    @property
+    def n_features(self) -> int:
+        return len(self.features)
+
+
+def _compress(v: np.ndarray, c: np.ndarray, capacity: int):
+    """Deterministic rank-equi-spaced compression to <= capacity points.
+
+    Each distinct value is bucketed by the (weighted) rank of its midpoint;
+    within a bucket the last value absorbs the bucket's total count, so the
+    result stays sorted/distinct and preserves the total row count.
+    """
+    if len(v) <= capacity:
+        return v, c
+    cum = np.cumsum(c)
+    n = cum[-1]
+    mid = cum - c / 2.0
+    bucket = np.minimum((mid * capacity / n).astype(np.int64), capacity - 1)
+    # last index of each bucket actually present
+    last = np.nonzero(np.r_[bucket[1:] != bucket[:-1], True])[0]
+    out_v = v[last]
+    out_c = np.diff(np.r_[np.int64(0), cum[last]])
+    return out_v, out_c
+
+
+def fit_sketch(X_chunk: np.ndarray,
+               capacity: int = DEFAULT_CAPACITY) -> QuantileSketch:
+    """Sketch one row block: per-feature distinct float64 values + counts."""
+    X = np.asarray(X_chunk, np.float64)
+    feats = []
+    for f in range(X.shape[1]):
+        v, c = np.unique(X[:, f], return_counts=True)
+        v, c = _compress(v, c.astype(np.int64), capacity)
+        feats.append(FeatureSketch(values=v, counts=c))
+    return QuantileSketch(features=feats, n_rows=X.shape[0])
+
+
+def merge_sketch(a: QuantileSketch, b: QuantileSketch,
+                 capacity: int = DEFAULT_CAPACITY) -> QuantileSketch:
+    """Associative merge: sorted-merge the distinct values, add counts."""
+    assert a.n_features == b.n_features
+    feats = []
+    for fa, fb in zip(a.features, b.features):
+        v = np.concatenate([fa.values, fb.values])
+        c = np.concatenate([fa.counts, fb.counts])
+        order = np.argsort(v, kind="mergesort")
+        v, c = v[order], c[order]
+        keep = np.empty(len(v), bool)
+        keep[0] = True
+        keep[1:] = v[1:] != v[:-1]
+        idx = np.cumsum(keep) - 1
+        out_v = v[keep]
+        out_c = np.zeros(len(out_v), np.int64)
+        np.add.at(out_c, idx, c)
+        out_v, out_c = _compress(out_v, out_c, capacity)
+        feats.append(FeatureSketch(values=out_v, counts=out_c))
+    return QuantileSketch(features=feats, n_rows=a.n_rows + b.n_rows)
+
+
+def _weighted_quantiles(v: np.ndarray, c: np.ndarray,
+                        qs: np.ndarray) -> np.ndarray:
+    """np.quantile(.., method='linear') evaluated from an exact weighted
+    CDF: same virtual index q*(n-1), same floor/gamma split, and the same
+    symmetric lerp numpy uses (``b - diff*(1-t)`` when t >= 0.5) so the
+    float64 result is bit-identical to the materialized sort."""
+    cum = np.cumsum(c)
+    n = int(cum[-1])
+    virtual = qs * (n - 1)
+    prev = np.floor(virtual)
+    gamma = virtual - prev
+    above = virtual >= n - 1
+    prev_i = np.minimum(prev.astype(np.int64), n - 1)
+    next_i = np.minimum(prev_i + 1, n - 1)
+    lo = v[np.searchsorted(cum, prev_i, side="right")]
+    hi = v[np.searchsorted(cum, next_i, side="right")]
+    diff = hi - lo
+    res = lo + diff * gamma
+    res = np.where(gamma >= 0.5, hi - diff * (1.0 - gamma), res)
+    return np.where(above, v[-1], res)
+
+
+def sketch_thresholds(sk: QuantileSketch, n_bins: int) -> np.ndarray:
+    """Split points from a (merged) sketch: (n_f, n_b-1) fp32, +inf padded
+    -- the exact output contract of ``fit_quantile_thresholds``."""
+    qs = np.linspace(0, 1, n_bins + 1)[1:-1]
+    thr = np.empty((sk.n_features, len(qs)), np.float64)
+    for f, fs in enumerate(sk.features):
+        thr[f] = _weighted_quantiles(fs.values, fs.counts, qs)
+    thr = thr.astype(np.float32)
+    out = np.full_like(thr, np.inf)
+    for f in range(thr.shape[0]):
+        uniq = np.unique(thr[f])
+        out[f, : len(uniq)] = uniq
+    return out

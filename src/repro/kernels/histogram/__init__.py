@@ -2,5 +2,6 @@ from .ops import (allgather_wire_bytes, ciphertext_histogram,  # noqa: F401
                   count_histogram, forest_ciphertext_histogram,
                   layer_ciphertext_histogram, layer_count_histogram,
                   psum_wire_bytes, sharded_forest_ciphertext_histogram,
-                  sharded_layer_ciphertext_histogram)
+                  sharded_layer_ciphertext_histogram,
+                  streamed_layer_ciphertext_histogram)
 from .ref import forest_hist_ref, hist_ref, layer_hist_ref  # noqa: F401

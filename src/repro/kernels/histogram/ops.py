@@ -205,6 +205,95 @@ def sharded_forest_ciphertext_histogram(bins, node_slot, cts, n_nodes: int,
     return jax.device_put(out, jax.devices()[0])
 
 
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins"))
+def _layer_hist_segsum(bins, node_slot, cts, n_nodes: int, n_bins: int):
+    """Scatter-add accumulation of one row block: (n_nodes, n_f, n_b, L)
+    lazy int32 sums via a feature-vmapped segment_sum.  Bit-identical to the
+    kernel paths (int32 limb addition is exact and order-free) but with
+    O(block · L) temporaries instead of the reference einsum's
+    O(block · n_f · n_nodes · n_b) one-hot — the accumulation the streamed
+    dispatch uses where Pallas would run in interpret mode."""
+    nseg = n_nodes * n_bins
+
+    def one_feature(bcol):
+        ok = (node_slot >= 0) & (bcol >= 0)
+        idx = jnp.where(ok, node_slot * n_bins + bcol, nseg)
+        return jax.ops.segment_sum(cts, idx, num_segments=nseg + 1)[:nseg]
+
+    h = jax.vmap(one_feature, in_axes=1)(bins)      # (n_f, nseg, L)
+    return h.reshape(h.shape[0], n_nodes, n_bins,
+                     h.shape[-1]).transpose(1, 0, 2, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins"))
+def _forest_hist_segsum(bins, node_slot, cts, n_nodes: int, n_bins: int):
+    """Member-batched :func:`_layer_hist_segsum`: node_slot is (n_i, k);
+    returns (k, n_nodes, n_f, n_b, L) lazy sums."""
+    return jax.vmap(
+        lambda scol: _layer_hist_segsum(bins, scol, cts, n_nodes, n_bins),
+        in_axes=1)(node_slot)
+
+
+def streamed_layer_ciphertext_histogram(blocks, n_nodes: int, n_bins: int,
+                                        forest: int = 0, mesh=None,
+                                        use_pallas: bool = True,
+                                        interpret: bool | None = None,
+                                        on_block=None) -> jnp.ndarray:
+    """Out-of-core layer accumulation (DESIGN.md §13): iterate
+    ``(bins_blk, node_slot_blk, cts_blk)`` row blocks and sum their lazy
+    int32 partial histograms; the caller runs ONE ``cipher.reduce`` on the
+    result, exactly as for the monolithic dispatch.
+
+    Bit-identity is the §3 psum-then-carry algebra applied over *time*
+    instead of over devices: int32 limb addition is exact and order-free,
+    so per-block partial sums + one deferred carry-fix equal the monolithic
+    launch wherever the monolithic launch is itself exact (the cross-block
+    accumulator has the same ~2^31 per-(node, feature, bin, limb) headroom
+    as the kernel's own cross-tile accumulator).  Peak device memory is
+    O(block + nodes) per launch, not O(rows).
+
+    Per block the accumulation runs the mesh-sharded dispatch (when a
+    multi-device mesh is given), the Pallas kernel (compiled backends), or
+    the segment-sum path (CPU, where Pallas would interpret).  ``on_block``
+    is an accounting hook receiving the device bytes uploaded per launch.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    multi = mesh is not None and mesh.devices.size > 1
+    acc = None
+    for bins_blk, slot_blk, cts_blk in blocks:
+        bins_blk = jnp.asarray(bins_blk, jnp.int32)
+        slot_blk = jnp.asarray(slot_blk, jnp.int32)
+        cts_blk = jnp.asarray(cts_blk, jnp.int32)
+        if on_block is not None:
+            on_block(bins_blk.nbytes + slot_blk.nbytes + cts_blk.nbytes)
+        if multi:
+            if forest:
+                h = sharded_forest_ciphertext_histogram(
+                    bins_blk, slot_blk, cts_blk, n_nodes, n_bins, mesh,
+                    use_pallas=use_pallas, interpret=interpret)
+            else:
+                h = sharded_layer_ciphertext_histogram(
+                    bins_blk, slot_blk, cts_blk, n_nodes, n_bins, mesh,
+                    use_pallas=use_pallas, interpret=interpret)
+        elif use_pallas and not interpret:
+            if forest:
+                h = forest_hist_pallas(bins_blk, slot_blk, cts_blk, n_nodes,
+                                       n_bins, interpret=interpret)
+            else:
+                h = layer_hist_pallas(bins_blk, slot_blk, cts_blk, n_nodes,
+                                      n_bins, interpret=interpret)
+        else:
+            if forest:
+                h = _forest_hist_segsum(bins_blk, slot_blk, cts_blk, n_nodes,
+                                        n_bins)
+            else:
+                h = _layer_hist_segsum(bins_blk, slot_blk, cts_blk, n_nodes,
+                                       n_bins)
+        acc = h if acc is None else acc + h
+    return acc
+
+
 def psum_wire_bytes(mesh, shard_bytes: int) -> int:
     """Analytic intra-party collective cost of the layer psum: a ring
     all-reduce over the ``data`` axis moves 2·(d-1)/d · S bytes per device

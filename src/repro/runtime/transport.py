@@ -956,17 +956,32 @@ class PartyProcess:
     def __init__(self, hid: int, params, X_host, channel: TransportChannel,
                  export_dir: str | None = None,
                  state_dir: str | None = None):
-        from ..core.binning import bin_features
+        from ..core.binning import (BinnedData, bin_features,
+                                    bin_features_stream)
+        from ..data.pipeline import RowBlocks
         self.hid = hid
         self.params = params
         self.channel = channel
         self.export_dir = export_dir
         self.state_dir = state_dir
         self.stats = Stats()
-        self.data = bin_features(np.asarray(X_host), params.n_bins,
-                                 sparse=params.sparse,
-                                 use_pallas=params.use_pallas)
-        self.X_serve = np.asarray(X_host)
+        # out-of-core sources (§13): a pre-binned BinnedData (pickles lean —
+        # no device buffers — so it crosses the spawn boundary) or a chunked
+        # RowBlocks source skip the monolithic fit; raw serving rows then
+        # arrive per batch via the serve_data frame
+        if isinstance(X_host, BinnedData):
+            self.data = X_host
+            self.X_serve = np.zeros((0, self.data.bins.shape[1]))
+        elif isinstance(X_host, RowBlocks):
+            self.data = bin_features_stream(X_host, params.n_bins,
+                                            sparse=params.sparse,
+                                            use_pallas=params.use_pallas)
+            self.X_serve = np.zeros((0, self.data.bins.shape[1]))
+        else:
+            self.data = bin_features(np.asarray(X_host), params.n_bins,
+                                     sparse=params.sparse,
+                                     use_pallas=params.use_pallas)
+            self.X_serve = np.asarray(X_host)
         self.cipher = None
         self.hr = None              # current tree's HostRuntime
         self.tables: dict = {}      # tree_idx -> {nid: (fid, bid)}
@@ -1142,6 +1157,19 @@ class PartyProcess:
 
     def _begin_tree(self, payload) -> None:
         tree = int(payload["tree"])
+        if isinstance(payload, dict) and int(payload.get("blk", 0) or 0) > 0:
+            # later block of a chunked enc_gh (DESIGN.md §13): route to the
+            # runtime already assembling this tree — active, or
+            # pipelined-staged — with NO boundary actions; blk 0 was the
+            # tree boundary (snapshot/persist/stage happened there).  A
+            # block for a tree we are not assembling is a stale
+            # re-delivery after a replay restart (the replay anchor
+            # re-ships from blk 0): drop it.
+            if self._staged.staged(tree):
+                self._staged.peek(tree).deliver("enc_gh", payload)
+            elif self._current_tree == tree and self.hr is not None:
+                self.hr.deliver("enc_gh", payload)
+            return
         if (getattr(self.params, "pipeline", False)
                 and self._current_tree is not None
                 and self._current_tree != tree):
@@ -1405,7 +1433,13 @@ class MultiHostRun:
         self._host_keys = None          # serve_setup keys (for re-setup)
         self._round_snaps: dict = {}    # round -> guest channel snapshot
         self._mp_ctx = None
-        self._X_hosts = [np.asarray(X) for X in X_hosts]
+        from ..core.binning import BinnedData
+        from ..data.pipeline import RowBlocks
+        # pre-binned / chunked host sources pass through untouched (§13);
+        # note RowBlocks carries a closure, so socket spawn requires raw
+        # arrays or a (picklable, device-buffer-free) BinnedData
+        self._X_hosts = [X if isinstance(X, (BinnedData, RowBlocks))
+                         else np.asarray(X) for X in X_hosts]
         self._supervisor = None
         self._straggler = {}
 

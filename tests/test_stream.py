@@ -1,0 +1,323 @@
+"""Out-of-core data path (DESIGN.md §13): streaming quantile binning,
+block-wise frontier accumulation, chunked encrypt->ship.
+
+The load-bearing claim is bit-identity: a run with ``row_block > 0`` must
+produce byte-for-byte the trees, scores, and per-tag wire-byte totals of
+the monolithic run — over the in-process, loopback, and socket transports
+— while its peak resident footprint scales with the block size instead of
+the row count (asserted through the ``Stats`` peak gauges).  Streaming
+binning pins merged-sketch thresholds against the monolithic exact
+quantile fit, bit-exact below the sketch capacity.
+"""
+
+import pickle
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import SBTParams, VerticalBoosting
+from repro.core.binning import bin_features, bin_features_stream
+from repro.data.pipeline import (RowBlocks, synthetic_tabular,
+                                 synthetic_tabular_stream)
+from repro.kernels.binning import (fit_quantile_thresholds, fit_sketch,
+                                   merge_sketch, sketch_thresholds)
+from repro.runtime.transport import MultiHostRun
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count>=2")
+
+
+def _data(n=300, d=10, seed=3):
+    X, y = synthetic_tabular(n, d, seed=seed)
+    return X[:, :4], [X[:, 4:]], y
+
+
+def _sigs(model):
+    return [t.signature() for t in model.trees]
+
+
+def _fit(row_block, Xg, Xh, y, **kw):
+    base = dict(n_trees=2, max_depth=3, n_bins=16, cipher="plain",
+                key_bits=512, seed=1, row_block=row_block)
+    base.update(kw)
+    m = VerticalBoosting(SBTParams(**base))
+    m.fit(Xg, y, Xh)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# streaming binning: mergeable sketch vs monolithic exact fit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,seed", [((999, 5), 0), ((64, 3), 1),
+                                        ((2000, 2), 2)])
+def test_sketch_thresholds_match_exact_fit(shape, seed):
+    """Below capacity the merged sketch IS the exact empirical CDF, so its
+    thresholds must be bit-identical to ``fit_quantile_thresholds`` —
+    including duplicate-heavy and constant features."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(0, 1, shape).astype(np.float32)
+    X[:, 0] = np.round(X[:, 0])          # heavy duplicates
+    if shape[1] > 2:
+        X[:, 2] = 1.5                    # constant feature
+    for n_bins in (8, 32):
+        exact = fit_quantile_thresholds(X, n_bins)
+        blocks = RowBlocks.from_array(X, 100)
+        sk = None
+        for _, Xb in blocks:
+            part = fit_sketch(Xb, capacity=8192)
+            sk = part if sk is None else merge_sketch(sk, part, 8192)
+        thr = sketch_thresholds(sk, n_bins)
+        assert thr.dtype == exact.dtype
+        assert np.array_equal(thr, exact, equal_nan=True)
+
+
+def test_sketch_merge_order_invariant():
+    rng = np.random.default_rng(7)
+    X = rng.normal(0, 2, (900, 4)).astype(np.float32)
+    parts = [fit_sketch(X[i::3], 8192) for i in range(3)]
+    a = merge_sketch(merge_sketch(parts[0], parts[1], 8192), parts[2], 8192)
+    b = merge_sketch(parts[2], merge_sketch(parts[1], parts[0], 8192), 8192)
+    for fa, fb in zip(a.features, b.features):
+        assert np.array_equal(fa.values, fb.values)
+        assert np.array_equal(fa.counts, fb.counts)
+
+
+def test_sketch_compression_respects_capacity():
+    rng = np.random.default_rng(11)
+    X = rng.normal(0, 1, (5000, 1)).astype(np.float32)
+    sk = fit_sketch(X, capacity=128)
+    f = sk.features[0]
+    assert len(f.values) <= 128
+    assert np.all(np.diff(f.values) > 0)             # sorted distinct
+    assert int(f.counts.sum()) == 5000               # mass preserved
+    thr = sketch_thresholds(sk, 16)
+    finite = thr[0][np.isfinite(thr[0])]
+    assert np.all(np.diff(finite) > 0)
+
+
+def test_bin_features_stream_matches_monolithic():
+    rng = np.random.default_rng(5)
+    X = rng.normal(0, 1, (700, 6)).astype(np.float32)
+    X[rng.random(X.shape) < 0.3] = 0.0
+    for sparse in (False, True):
+        mono = bin_features(X, 16, sparse=sparse)
+        stream = bin_features_stream(RowBlocks.from_array(X, 128), 16,
+                                     sparse=sparse)
+        assert stream.bins.dtype == np.int8          # compact resident form
+        assert np.array_equal(stream.bins.astype(np.int32), mono.bins)
+        assert np.array_equal(stream.thresholds, mono.thresholds,
+                              equal_nan=True)
+        if sparse:
+            assert np.array_equal(stream.zero_bins, mono.zero_bins)
+            assert np.array_equal(stream.zero_mask, mono.zero_mask)
+
+
+# ---------------------------------------------------------------------------
+# RowBlocks / synthetic stream source
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prefetch", [0, 2])
+def test_row_blocks_iterates_in_order(prefetch):
+    X = np.arange(23 * 3, dtype=np.float32).reshape(23, 3)
+    rb = RowBlocks.from_array(X, 5)
+    rb.prefetch = prefetch
+    assert rb.n_blocks == 5
+    for rep in range(2):                 # re-iterable (two binning passes)
+        got = list(rb)
+        assert [s for s, _ in got] == [0, 5, 10, 15, 20]
+        assert np.array_equal(np.concatenate([b for _, b in got]), X)
+
+
+def test_synthetic_tabular_stream_deterministic():
+    blocks, y = synthetic_tabular_stream(500, 6, block=128, seed=4)
+    blocks2, y2 = synthetic_tabular_stream(500, 6, block=64, seed=4)
+    assert np.array_equal(y, y2)         # labels don't depend on block size
+    X1 = np.concatenate([b for _, b in blocks])
+    X2 = np.concatenate([b for _, b in blocks2])
+    assert X1.shape == (500, 6)
+    assert np.array_equal(X1, X2)
+    assert set(np.unique(y)) <= {0.0, 1.0}
+
+
+# ---------------------------------------------------------------------------
+# satellite: BinnedData pickles without device buffers
+# ---------------------------------------------------------------------------
+
+def test_binned_data_pickle_drops_device_cache():
+    X = np.random.default_rng(0).normal(0, 1, (50, 4)).astype(np.float32)
+    bd = bin_features(X, 8)
+    dev = bd.device_thresholds()
+    assert bd.device_thresholds() is dev             # cached
+    assert bd.__getstate__()["_thr_dev"] is None     # never pickled
+    rt = pickle.loads(pickle.dumps(bd))
+    assert rt._thr_dev is None                       # no buffer crossed
+    d2 = rt.device_thresholds()
+    assert rt.device_thresholds() is d2              # re-cached lazily
+    assert np.array_equal(np.asarray(d2), np.asarray(dev))
+
+
+# ---------------------------------------------------------------------------
+# tentpole: streaming == monolithic bit-identity (in-process)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cipher", ["plain", "affine"])
+@pytest.mark.parametrize("objective", ["binary", "multiclass"])
+def test_stream_bit_identical_inprocess(cipher, objective):
+    Xg, Xh, y = _data()
+    kw = dict(cipher=cipher)
+    if objective == "multiclass":
+        kw.update(objective="multiclass", n_classes=3)
+        y = (np.abs(np.concatenate([Xg, Xh[0]], axis=1)[:, 0] * 3)
+             .astype(int) % 3)
+    mono = _fit(0, Xg, Xh, y, **kw)
+    stream = _fit(64, Xg, Xh, y, **kw)
+    assert _sigs(mono) == _sigs(stream)
+    assert np.array_equal(mono.train_score_, stream.train_score_)
+    # per-tag BYTE totals are identical; message counts differ (enc_gh
+    # ships one frame per block), so compare bytes, not whole summaries
+    s0, s1 = mono.channel.summary(), stream.channel.summary()
+    assert set(s0) == set(s1)
+    for tag in s0:
+        assert s0[tag]["bytes"] == s1[tag]["bytes"], tag
+    n_blocks = -(-len(y) // 64)
+    assert s1["enc_gh"]["msgs"] == s0["enc_gh"]["msgs"] * n_blocks
+
+
+@pytest.mark.parametrize("kw", [dict(goss=True, top_rate=0.3,
+                                     other_rate=0.2),
+                                dict(sparse=True),
+                                dict(forest_size=2),
+                                dict(pipeline=True),
+                                dict(packing=False),
+                                dict(compression=False)])
+def test_stream_bit_identical_toggles(kw):
+    Xg, Xh, y = _data()
+    if kw.get("sparse"):
+        Xg = Xg.copy()
+        Xg[np.abs(Xg) < 0.4] = 0.0
+    mono = _fit(0, Xg, Xh, y, **kw)
+    stream = _fit(64, Xg, Xh, y, **kw)
+    assert _sigs(mono) == _sigs(stream)
+    assert np.array_equal(mono.train_score_, stream.train_score_)
+    s0, s1 = mono.channel.summary(), stream.channel.summary()
+    for tag in s0:
+        assert s0[tag]["bytes"] == s1[tag]["bytes"], tag
+
+
+def test_stream_gate_small_batch_stays_monolithic():
+    """row_block larger than the batch: the monolithic fast path runs —
+    one enc_gh frame per tree, same gauges as an untouched run."""
+    Xg, Xh, y = _data(n=200)
+    m = _fit(4096, Xg, Xh, y)
+    m0 = _fit(0, Xg, Xh, y)
+    assert m.channel.summary()["enc_gh"]["msgs"] == 2   # one per tree
+    assert m.stats.peak_block_bytes == m0.stats.peak_block_bytes
+    assert m.stats.peak_cts_bytes == m0.stats.peak_cts_bytes
+    assert _sigs(m) == _sigs(m0)
+
+
+# ---------------------------------------------------------------------------
+# satellite: peak gauges — stream is O(block), monolithic O(rows)
+# ---------------------------------------------------------------------------
+
+def test_peak_gauges_block_bounded():
+    Xg1, Xh1, y1 = _data(n=300, seed=3)
+    Xg2, Xh2, y2 = _data(n=600, seed=3)
+    mono1 = _fit(0, Xg1, Xh1, y1)
+    mono2 = _fit(0, Xg2, Xh2, y2)
+    st1 = _fit(50, Xg1, Xh1, y1)
+    st2 = _fit(50, Xg2, Xh2, y2)
+    # monolithic ciphertext residency scales with rows
+    assert mono2.stats.peak_cts_bytes == 2 * mono1.stats.peak_cts_bytes
+    # streamed residency is bounded by the block, not the row count
+    assert st1.stats.peak_cts_bytes == st2.stats.peak_cts_bytes
+    assert st2.stats.peak_cts_bytes < mono2.stats.peak_cts_bytes
+    assert st1.stats.peak_block_bytes == st2.stats.peak_block_bytes
+    assert st1.stats.peak_block_bytes > 0
+    # the streamed per-launch footprint is exactly one block's worth
+    width = mono1.cipher.hist_width
+    assert st1.stats.peak_cts_bytes == 50 * 1 * width * 4
+
+
+# ---------------------------------------------------------------------------
+# tentpole: bit-identity over real transports
+# ---------------------------------------------------------------------------
+
+def _run_transport(p, Xg, Xh, y, transport):
+    run = MultiHostRun(p, Xh, transport=transport)
+    try:
+        model = run.fit(Xg, y)
+        return _sigs(model), model.train_score_, run.channel.summary()
+    finally:
+        run.close()
+
+
+@pytest.mark.parametrize("kw", [dict(), dict(cipher="affine",
+                                             pipeline=True)])
+def test_stream_bit_identical_loopback(kw):
+    Xg, Xh, y = _data()
+    base = dict(n_trees=2, max_depth=3, n_bins=16, cipher="plain",
+                key_bits=512, seed=1, row_block=64)
+    base.update(kw)
+    p = SBTParams(**base)
+    mono = VerticalBoosting(p)
+    mono.fit(Xg, y, Xh)
+    sigs, score, summary = _run_transport(p, Xg, Xh, y, "loopback")
+    assert _sigs(mono) == sigs
+    assert np.array_equal(mono.train_score_, score)
+    # the streaming run's ledger must be identical ACROSS transports
+    assert mono.channel.summary() == summary
+
+
+def test_stream_bit_identical_socket():
+    Xg, Xh, y = _data(n=200)
+    p = SBTParams(n_trees=2, max_depth=3, n_bins=16, cipher="plain",
+                  key_bits=512, seed=1, row_block=64)
+    mono = VerticalBoosting(p)
+    mono.fit(Xg, y, Xh)
+    sigs, score, summary = _run_transport(p, Xg, Xh, y, "socket")
+    assert _sigs(mono) == sigs
+    assert np.array_equal(mono.train_score_, score)
+    assert mono.channel.summary() == summary
+
+
+# ---------------------------------------------------------------------------
+# satellite: mesh-sharded compress shuffle
+# ---------------------------------------------------------------------------
+
+@multi_device
+@pytest.mark.parametrize("cipher_name", ["plain", "affine"])
+def test_sharded_compress_parity(cipher_name):
+    from repro.core import compress as compress_mod
+    from repro.core.he import get_cipher
+    from repro.launch.mesh import make_gbdt_mesh
+    mesh = make_gbdt_mesh()
+    dd = dict(mesh.shape).get("data", 1)
+    kw = ({"bits": 512} if cipher_name == "plain"
+          else {"key_bits": 512, "seed": 0})
+    cipher = get_cipher(cipher_name, **kw)
+    rng = np.random.default_rng(0)
+    eta, b_slot = 3, 40
+    for n in (7, 256 * dd * 3 + 5):      # below / above the gate
+        cts = rng.integers(0, 256, (n, cipher.Ln)).astype(np.int32)
+        p0, s0 = compress_mod.compress_batch(cipher, cts, eta, b_slot)
+        p1, s1 = compress_mod.compress_batch(cipher, cts, eta, b_slot,
+                                             mesh=mesh)
+        assert np.array_equal(np.asarray(p0), np.asarray(p1))
+        assert np.array_equal(s0, s1)
+
+
+@multi_device
+def test_stream_bit_identical_on_mesh():
+    """Streamed accumulation under a live mesh: per-block sharded dispatch
+    must still reproduce the single-device monolithic run bit-for-bit."""
+    from repro.launch.mesh import make_gbdt_mesh
+    Xg, Xh, y = _data(n=400)
+    mono = _fit(0, Xg, Xh, y)
+    stream = _fit(64, Xg, Xh, y, mesh=make_gbdt_mesh())
+    assert _sigs(mono) == _sigs(stream)
+    assert np.array_equal(mono.train_score_, stream.train_score_)
