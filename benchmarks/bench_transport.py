@@ -106,8 +106,48 @@ def main(quick: bool = False):
             run.close()
 
     rows += _bench_resilience(params, Xg, Xh, y, ref, quick)
+    rows += _bench_trace_overhead(params, Xg, Xh, y, quick)
     emit(rows)
     return rows
+
+
+def _bench_trace_overhead(params, Xg, Xh, y, quick: bool):
+    """``transport/trace_overhead`` — the observability layer's cost when
+    ENABLED: paired fits with ``trace=True`` vs ``trace=False`` (min of 3
+    each), plus the merged event count.  The acceptance bound for the
+    DISABLED path is bit-identity + ≤2% (tests/test_obs.py); this row
+    tracks what turning tracing ON costs."""
+    import dataclasses
+
+    def one_fit(trace: bool) -> tuple:
+        p = dataclasses.replace(params, trace=trace)
+        run = MultiHostRun(p, [Xh], transport="loopback",
+                           export_dir=tempfile.mkdtemp())
+        try:
+            t0 = time.perf_counter()
+            run.fit(Xg, y)
+            dt = time.perf_counter() - t0
+            n_ev = len(run.trace()) if trace else 0
+            return dt, n_ev
+        finally:
+            run.close()
+
+    try:
+        reps = 2 if quick else 3
+        one_fit(False)                           # warm jits
+        t_off = min(one_fit(False)[0] for _ in range(reps))
+        pairs = [one_fit(True) for _ in range(reps)]
+        t_on = min(dt for dt, _ in pairs)
+        n_ev = pairs[0][1]
+        return [(
+            "transport/trace_overhead",
+            t_on * 1e6,
+            f"plain_us={t_off * 1e6:.0f};"
+            f"overhead_pct={(t_on / t_off - 1) * 100:.1f};"
+            f"events={n_ev}")]
+    except Exception as e:                       # noqa: BLE001
+        return [("transport/trace_overhead", 0.0,
+                 f"skipped={type(e).__name__}")]
 
 
 def _bench_resilience(params, Xg, Xh, y, ref, quick: bool):

@@ -28,6 +28,8 @@ from .goss import goss_sample
 from .he import get_cipher
 from .histogram import CipherHistogram
 from .loss import LogLoss, SoftmaxLoss
+from ..obs import trace as obs_trace
+from ..obs.trace import NULL_TRACER, Tracer
 from .party import Channel, Stats
 from .tree import (GUEST, FederatedTree, HostRuntime, MOCodec, NoPackCodec,
                    PackedCodec, TreeContext, _EncryptPump, _encrypt_all,
@@ -84,6 +86,11 @@ class SBTParams:
                                        # batch exceeds it; 0 keeps the
                                        # monolithic fast path.  Bit-identical
                                        # either way (limb backends only)
+    trace: bool = False                # structured tracing (DESIGN.md §14):
+                                       # record span/instant events into a
+                                       # bounded per-party ring buffer.
+                                       # Protocol- and model-neutral: only
+                                       # observation, never control flow
 
 
 def cipher_kwargs(params: SBTParams) -> dict:
@@ -102,6 +109,7 @@ class VerticalBoosting:
         self.tree_class: list[int] = []   # multiclass: class of each tree
         self.channel = Channel()
         self.stats = Stats()
+        self.tracer = NULL_TRACER
         self.init_score = None
         self._loss = None
         self._predictor = None            # cached packed serving engine
@@ -144,6 +152,17 @@ class VerticalBoosting:
         self.tree_class = []
         self.stats = Stats()
         self.channel.reset_accounting()
+        # guest tracer: params.trace makes a fresh per-fit buffer; an
+        # enabled process-default tracer (benchmark harness --trace) is
+        # inherited so benches need no plumbing; else the null tracer
+        # keeps every emission site one-bool-test cheap
+        if p.trace:
+            self.tracer = Tracer("guest")
+        elif obs_trace.current().enabled:
+            self.tracer = obs_trace.current()
+        else:
+            self.tracer = NULL_TRACER
+        self.channel.tracer = self.tracer
         self._predictor = None            # stale after refit
         self._predictor_n_trees = -1
         self.guest_data = self._bin(X_guest)
@@ -243,7 +262,9 @@ class VerticalBoosting:
                         nxt = ctxs[c + 1]
                         pump = _EncryptPump(nxt, nxt.g[nxt.sel_rows],
                                             nxt.h[nxt.sel_rows])
-                tree, leaf_rows = grow_tree(ctx, scheds[c])
+                with self.tracer.span("class", round=t, cls=c,
+                                      tree=ctx.tree_idx):
+                    tree, leaf_rows = grow_tree(ctx, scheds[c])
                 grown.append((tree, c, leaf_rows))
             if pump is not None:      # defensive: last class never pumps
                 pump.join()
@@ -261,7 +282,9 @@ class VerticalBoosting:
             self.trees.append(tree)
             self.tree_class.append(cls)
             self._apply(score, tree, leaf_rows, cls=cls)
-        self.stats.tree_seconds.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        self.stats.tree_seconds.append(dt)
+        self.tracer.complete("round", int(t0 * 1e9), int(dt * 1e9), round=t)
         return score
 
     def rollback_to_round(self, t: int) -> None:
@@ -293,7 +316,8 @@ class VerticalBoosting:
         p = self.params
         engines = [CipherHistogram(cipher, p.n_bins, sparse=p.sparse,
                                    use_pallas=p.use_pallas,
-                                   stats=self.stats, mesh=p.mesh)
+                                   stats=self.stats, mesh=p.mesh,
+                                   tracer=self.tracer)
                    for _ in self.host_data]
         return [HostRuntime(hid=i, data=d, engine=e)
                 for i, (d, e) in enumerate(zip(self.host_data, engines))]

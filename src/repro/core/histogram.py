@@ -173,13 +173,16 @@ class CipherHistogram:
     """Ciphertext histograms over limb arrays (or Paillier object arrays)."""
 
     def __init__(self, cipher, n_bins: int, sparse: bool = False,
-                 use_pallas: bool = True, stats=None, mesh=None):
+                 use_pallas: bool = True, stats=None, mesh=None,
+                 tracer=None):
+        from ..obs.trace import NULL_TRACER
         self.cipher = cipher
         self.n_bins = n_bins
         self.sparse = sparse
         self.use_pallas = use_pallas
         self.stats = stats          # optional party.Stats for launch counts
         self.mesh = mesh            # optional (data, model) mesh (DESIGN §5)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     def _mesh_devices(self) -> int:
         return self.mesh.devices.size if self.mesh is not None else 1
@@ -341,7 +344,8 @@ class CipherHistogram:
             # direct batch first, then subtract canonically -- still O(1)
             # vectorized cipher calls per layer.
             if n_d:
-                canon_direct = self.cipher.reduce(lazy)
+                with self.tracer.span("carry_fix", nodes=n_d):
+                    canon_direct = self.cipher.reduce(lazy)
                 canon_direct = self._layer_sparse_fix(
                     frontier.data, canon_direct, frontier.state.cts,
                     node_slot, frontier=frontier)
@@ -371,7 +375,8 @@ class CipherHistogram:
             ([jnp.stack(sub_lazy)] if sub_lazy else [])
         if not parts:
             return out
-        canon = self.cipher.reduce(jnp.concatenate(parts, axis=0))
+        with self.tracer.span("carry_fix", nodes=n_d + len(subtract)):
+            canon = self.cipher.reduce(jnp.concatenate(parts, axis=0))
         for k, nid in enumerate(direct):
             out[nid] = (canon[k], counts[k])
         for j, (nid, par, sib) in enumerate(subtract):
@@ -414,6 +419,8 @@ class CipherHistogram:
             if stats is not None:
                 stats.peak_block_bytes = max(stats.peak_block_bytes,
                                              int(nbytes))
+            self.tracer.instant("stream_block", blk=launches[0] - 1,
+                                nbytes=int(nbytes))
 
         # pow2 node padding: same compile-bucketing as the monolithic path
         n_pad = 1 << max(n_nodes - 1, 0).bit_length()

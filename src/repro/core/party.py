@@ -19,6 +19,9 @@ import dataclasses
 import math
 import threading
 
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import NULL_TRACER
+
 
 class PartyUnavailable(RuntimeError):
     """A remote party failed to answer within its serving deadline.
@@ -56,15 +59,6 @@ class Stats:
     coll_bytes: int = 0         # analytic bytes moved by those collectives
     n_cts_placements: int = 0   # host->device ciphertext re-placements the
                                 # frontier performed (0 = born sharded, §8)
-    encrypt_seconds: float = 0.0  # guest encrypt wall time (blocked once/tree)
-    prefetch_seconds: float = 0.0  # encrypt+ship wall time hidden behind
-                                   # other useful work by the pipelined
-                                   # prefetch pump (subset of encrypt time)
-    guest_hist_seconds: float = 0.0   # guest plaintext candidate time that
-                                      # ran while host cipher work was in
-                                      # flight (the overlapped window)
-    host_dispatch_seconds: float = 0.0  # async launch of the host pipeline
-    host_wait_seconds: float = 0.0      # blocking decrypt+decode tail
     peak_hist_cache: int = 0    # max cached parent hists after any eviction
     peak_frontier: int = 0      # max frontier width (layer node count)
     peak_cts_bytes: int = 0     # max device-resident ciphertext-batch bytes:
@@ -75,22 +69,50 @@ class Stats:
     n_predict_roundtrips: int = 0   # host predict_bits exchanges: exactly
                                     # ONE per (host, batch) in the
                                     # round-batched serving protocol
-    predict_seconds: float = 0.0    # serving engine wall time (bins->score)
-    tree_seconds: list = dataclasses.field(default_factory=list)
-    layer_overlap: list = dataclasses.field(default_factory=list)
-    # per layer: guest-window seconds / total candidate-phase seconds.  An
-    # UPPER bound on true concurrency: the host pipeline may drain before
-    # the guest window ends (measuring the drain would require a sync probe
-    # that serializes the very overlap being measured)
-    wire_overlap: list = dataclasses.field(default_factory=list)
-    # per tree: fraction of the encrypt+ship window that ran concurrently
-    # with other work (0.0 for sequential runs, where the guest blocks)
+    # Timing instruments (formerly float/list dataclass fields) live in a
+    # MetricsRegistry created per instance in __post_init__ and are
+    # reattached as generated properties below, so every existing call
+    # site (`stats.encrypt_seconds += dt`, `stats.tree_seconds.append`,
+    # `del stats.tree_seconds[t:]`) keeps its exact behavior.  They are
+    # NOT dataclass fields: the registry holds locks, which neither
+    # `dataclasses.asdict` (deepcopy) nor pickling would survive.
+    #
+    # _TIMERS (counter-backed floats):
+    #   encrypt_seconds     guest encrypt wall time (blocked once/tree)
+    #   prefetch_seconds    encrypt+ship wall time hidden behind other
+    #                       useful work by the pipelined prefetch pump
+    #   guest_hist_seconds  guest plaintext candidate time overlapped
+    #                       with in-flight host cipher work
+    #   host_dispatch_seconds  async launch of the host pipeline
+    #   host_wait_seconds   blocking decrypt+decode tail
+    #   predict_seconds     serving engine wall time (bins->score)
+    # _SERIES (list-backed):
+    #   tree_seconds        per-tree wall time
+    #   layer_overlap       per layer: guest-window / candidate-phase
+    #                       seconds (UPPER bound on true concurrency: the
+    #                       host pipeline may drain before the window ends)
+    #   wire_overlap        per tree: fraction of the encrypt+ship window
+    #                       that ran concurrently with other work
+    _TIMERS = ("encrypt_seconds", "prefetch_seconds", "guest_hist_seconds",
+               "host_dispatch_seconds", "host_wait_seconds",
+               "predict_seconds")
+    _SERIES = ("tree_seconds", "layer_overlap", "wire_overlap")
+
+    def __post_init__(self):
+        # plain instance attributes, invisible to dataclasses.asdict
+        self.metrics = MetricsRegistry()
+        self.unmerged: dict = {}
+        for name in self._TIMERS:
+            self.metrics.counter(name)
+        for name in self._SERIES:
+            self.metrics.series(name)
 
     def as_dict(self):
         d = dataclasses.asdict(self)
-        d["tree_seconds"] = list(self.tree_seconds)
-        d["layer_overlap"] = list(self.layer_overlap)
-        d["wire_overlap"] = list(self.wire_overlap)
+        for name in self._TIMERS:
+            d[name] = self.metrics.counter(name).value
+        for name in self._SERIES:
+            d[name] = list(self.metrics.series(name).data)
         return d
 
     # gauge fields are maxima, not counters: merging across parties must
@@ -103,7 +125,12 @@ class Stats:
         counters add, gauges max, per-tree/per-layer lists concatenate.
         Under the multi-host runtime each process tallies its own side of
         the work; merging reconstructs the single shared-Stats view of an
-        in-process run (``MultiHostRun.merged_stats``)."""
+        in-process run (``MultiHostRun.merged_stats``).
+
+        Version-skew safe: a key this build does not know (a newer peer's
+        counter) lands in :attr:`unmerged` — numerics add, lists concat —
+        instead of being silently dropped, so a rolling upgrade never
+        loses accounting."""
         for key, val in other.items():
             cur = getattr(self, key, None)
             if isinstance(cur, list):
@@ -111,6 +138,18 @@ class Stats:
             elif isinstance(cur, (int, float)) and not isinstance(cur, bool):
                 merged = max(cur, val) if key in self._GAUGES else cur + val
                 setattr(self, key, type(cur)(merged))
+            else:
+                prev = self.unmerged.get(key)
+                if isinstance(prev, list) and isinstance(val, list):
+                    self.unmerged[key] = prev + list(val)
+                elif (isinstance(prev, (int, float))
+                        and isinstance(val, (int, float))
+                        and not isinstance(prev, bool)
+                        and not isinstance(val, bool)):
+                    self.unmerged[key] = prev + val
+                else:
+                    self.unmerged[key] = (list(val) if isinstance(val, list)
+                                          else val)
 
     @property
     def overlap_fraction(self) -> float:
@@ -140,6 +179,34 @@ class Stats:
         return max(0.0, min(1.0, frac))
 
 
+def _timer_property(name: str) -> property:
+    def fget(self):
+        return self.metrics.counter(name).value
+
+    def fset(self, v):           # += and merge_counts setattr both land here
+        self.metrics.counter(name).set(float(v))
+
+    return property(fget, fset)
+
+
+def _series_property(name: str) -> property:
+    def fget(self):              # the LIVE list: append/extend/del work
+        return self.metrics.series(name).data
+
+    def fset(self, v):
+        data = self.metrics.series(name).data
+        data[:] = list(v)
+
+    return property(fget, fset)
+
+
+for _name in Stats._TIMERS:
+    setattr(Stats, _name, _timer_property(_name))
+for _name in Stats._SERIES:
+    setattr(Stats, _name, _series_property(_name))
+del _name
+
+
 class Channel:
     """Cross-party wire ledger plus a *separate* intra-party collective
     ledger: device collectives (the frontier engine's lazy-limb psum over
@@ -159,12 +226,21 @@ class Channel:
         # layer protocol: Counter += is read-modify-write, so ledger
         # mutation takes this lock (uncontended in sequential runs)
         self._lock = threading.Lock()
+        # per-channel tracer: every party owns its own Channel, so wire
+        # events attribute correctly even in single-process loopback mode
+        self.tracer = NULL_TRACER
 
     def send(self, src: str, dst: str, tag: str, payload, nbytes: int):
         with self._lock:
             self.ledger.append((src, dst, tag, int(nbytes)))
             self.totals[tag] += int(nbytes)
             self.msgs[tag] += 1
+        if self.tracer.enabled:
+            # the audited category: one instant per ledger append, with
+            # the exact nbytes the ledger recorded — per party, wire-event
+            # byte sums MUST equal the converged per-tag ledger totals
+            self.tracer.instant(tag, cat="wire", src=src, dst=dst,
+                                tag=tag, nbytes=int(nbytes))
         return payload
 
     def collective(self, party: str, kind: str, nbytes: int) -> None:

@@ -346,6 +346,7 @@ class HostRuntime:
         while this work is in flight; across processes the overlap is
         physical."""
         p = self.params
+        t0_host = time.perf_counter()
         splittable = [int(nid) for nid in plan["splittable"]]
         forest = int(plan.get("forest", 0) or 0)
 
@@ -452,6 +453,10 @@ class HostRuntime:
             nbytes = M * n_slots * wire + M * 8
             self.stats.n_packages += M * n_slots
         self._reply("split_infos", payload, nbytes)
+        self.channel.tracer.complete(
+            "host_layer", int(t0_host * 1e9),
+            int((time.perf_counter() - t0_host) * 1e9),
+            tree=int(plan.get("tree", -1)), nodes=len(splittable))
 
     def on_chosen_sid(self, msg: dict) -> None:
         """The guest committed to one of this host's shuffled candidates:
@@ -556,7 +561,10 @@ def _encrypt_all(ctx: TreeContext, g_sel: np.ndarray,
         ints = limbs.to_pyints(plain.reshape(n * s, Lp))
         cts = ctx.cipher.encrypt_ints(ints).reshape(n, s)
     ctx.stats.n_encrypt += n * s
-    ctx.stats.encrypt_seconds += time.perf_counter() - t0
+    dt = time.perf_counter() - t0
+    ctx.stats.encrypt_seconds += dt
+    ctx.channel.tracer.complete("encrypt", int(t0 * 1e9), int(dt * 1e9),
+                                tree=int(ctx.tree_idx), rows=int(n))
     nbytes = n * s * ct_wire_bytes(ctx.cipher) + n * 4   # + selected row ids
     codec_view = {"n_slots": int(ctx.codec.n_slots),
                   "compressible": bool(ctx.codec.compressible),
@@ -627,7 +635,11 @@ def _encrypt_all_chunked(ctx: TreeContext, g_sel: np.ndarray,
                 ctx.cipher.encrypt_limbs(jnp.asarray(plain)), Ln)
         cts_u8 = np.asarray(jax.device_get(cts)).astype(np.uint8)
         ctx.stats.n_encrypt += r * s
-        ctx.stats.encrypt_seconds += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        ctx.stats.encrypt_seconds += dt
+        ctx.channel.tracer.complete("encrypt_block", int(t0 * 1e9),
+                                    int(dt * 1e9), tree=int(ctx.tree_idx),
+                                    blk=int(b), rows=int(r))
         ctx.stats.peak_block_bytes = max(
             ctx.stats.peak_block_bytes, int(cts_u8.nbytes) + r * 8)
         payload = {"tree": int(ctx.tree_idx), "seed": int(p.seed),
@@ -828,6 +840,7 @@ def grow_tree(ctx: TreeContext,
     :class:`FederatedTree`, so a model held for serving (or exported via
     ``serving/export.py``) carries no row-level training residue."""
     p = ctx.params
+    t_tree = time.perf_counter()
     if feature_parties is None:
         feature_parties = lambda d: (True, [h.hid for h in ctx.hosts])
 
@@ -943,6 +956,19 @@ def grow_tree(ctx: TreeContext,
                     denom = t3 - t0
                     ctx.stats.layer_overlap.append(
                         (t2 - t1) / denom if denom > 0 else 0.0)
+            tr = ctx.channel.tracer
+            if tr.enabled:
+                # re-emit the already-measured phase floats as spans:
+                # perf_counter() and perf_counter_ns() share one clock
+                tkw = dict(tree=int(ctx.tree_idx), depth=int(depth))
+                tr.complete("dispatch", int(t0 * 1e9), int((t1 - t0) * 1e9),
+                            **tkw)
+                tr.complete("guest_hist", int(t1 * 1e9),
+                            int((t2 - t1) * 1e9), **tkw)
+                tr.complete("decrypt_wait", int(t2 * 1e9),
+                            int((t3 - t2) * 1e9), **tkw)
+                tr.complete("layer", int(t0 * 1e9), int((t3 - t0) * 1e9),
+                            nodes=len(splittable), **tkw)
 
         for nid in splittable:
             node = nodes[nid]
@@ -1035,6 +1061,10 @@ def grow_tree(ctx: TreeContext,
     leaf_rows = {n.nid: rows_all[n.nid] for n in nodes if n.left == -1}
     tree = FederatedTree(nodes=nodes,
                          host_tables=[h.table for h in ctx.hosts])
+    ctx.channel.tracer.complete(
+        "tree", int(t_tree * 1e9),
+        int((time.perf_counter() - t_tree) * 1e9),
+        tree=int(ctx.tree_idx), n_nodes=len(nodes))
     return tree, leaf_rows
 
 
@@ -1162,6 +1192,17 @@ def grow_forest(ctx: TreeContext, bags: list,
                     denom = t3 - t0
                     ctx.stats.layer_overlap.append(
                         (t2 - t1) / denom if denom > 0 else 0.0)
+            tr = ctx.channel.tracer
+            if tr.enabled:
+                tkw = dict(tree=int(ctx.tree_idx), depth=int(depth))
+                tr.complete("dispatch", int(t0 * 1e9), int((t1 - t0) * 1e9),
+                            **tkw)
+                tr.complete("guest_hist", int(t1 * 1e9),
+                            int((t2 - t1) * 1e9), **tkw)
+                tr.complete("decrypt_wait", int(t2 * 1e9),
+                            int((t3 - t2) * 1e9), **tkw)
+                tr.complete("layer", int(t0 * 1e9), int((t3 - t0) * 1e9),
+                            nodes=len(splittable), **tkw)
 
         for gid in splittable:
             m = gid // GID_STRIDE

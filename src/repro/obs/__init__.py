@@ -1,0 +1,21 @@
+"""Observability layer: structured tracing, metrics, cross-party merge.
+
+See DESIGN.md §14.  ``trace`` records, ``metrics`` aggregates,
+``export`` merges per-party buffers onto one clock-aligned timeline,
+writes Perfetto ``trace.json``, and audits wire events against the
+per-tag byte ledger.
+"""
+
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry, Series
+from .trace import NULL_TRACER, Tracer, current, set_default
+from .export import (audit_wire_events, estimate_offset, merge_traces,
+                     self_time, top_self_time, trace_summary, waterfall,
+                     wire_bytes_by_tag, write_perfetto)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "Series",
+    "NULL_TRACER", "Tracer", "current", "set_default",
+    "audit_wire_events", "estimate_offset", "merge_traces", "self_time",
+    "top_self_time", "trace_summary", "waterfall", "wire_bytes_by_tag",
+    "write_perfetto",
+]

@@ -1,0 +1,173 @@
+"""Cross-party trace merge, Perfetto export, waterfall, ledger audit.
+
+Each party records events against its OWN ``perf_counter_ns`` clock;
+merging shifts every host event by a per-peer offset estimated NTP-style
+from control round-trips: for a sample ``(t_send, peer_clock, t_recv)``
+taken on the guest clock, ``offset = peer_clock - (t_send + t_recv)/2``;
+among all samples (the ``trace_sync`` round-trip itself always provides
+one; supervisor heartbeat acks add more) the MINIMUM-RTT sample wins —
+its midpoint bounds the true offset tightest.  Guest events shift to
+host clocks by subtracting, host events to the guest timeline likewise,
+so the merged file has one timebase (the guest's).
+
+The merged trace is *audited*, not decorative: every ``cat == "wire"``
+instant carries the exact ``nbytes`` its ``Channel.send`` appended to
+the per-tag ledger, so per party the wire-event byte sums must equal
+that party's converged ledger totals (:func:`audit_wire_events`).
+Transport-level framed spans use ``cat == "transport"`` and are
+excluded — logical and physical views never double count.
+"""
+
+from __future__ import annotations
+
+import json
+
+
+def estimate_offset(samples) -> tuple:
+    """``samples``: iterable of ``(t_send_ns, peer_clock_ns, t_recv_ns)``
+    on the local clock.  Returns ``(offset_ns, rtt_ns)`` from the
+    minimum-RTT sample, or ``(0, 0)`` with no samples (loopback parties
+    share the process clock — zero offset is exact there)."""
+    best = None
+    for t0, peer, t1 in samples:
+        rtt = t1 - t0
+        off = peer - (t0 + t1) // 2
+        if best is None or rtt < best[1]:
+            best = (off, rtt)
+    return best if best is not None else (0, 0)
+
+
+def merge_traces(parties) -> list:
+    """``parties``: list of dicts ``{party, pid, events, offset_ns}``
+    (``offset_ns`` = party clock minus guest clock; 0 for the guest).
+    Returns one flat, time-sorted list of normalized event dicts on the
+    guest timeline:
+    ``{party, pid, tid, ph, name, cat, ts_ns, dur_ns, attrs}``."""
+    out = []
+    for p in parties:
+        off = int(p.get("offset_ns", 0))
+        for ev in p["events"]:
+            ph, name, cat, ts, dur, tid, attrs = ev
+            out.append({"party": p["party"], "pid": int(p["pid"]),
+                        "tid": int(tid), "ph": ph, "name": name,
+                        "cat": cat, "ts_ns": int(ts) - off,
+                        "dur_ns": int(dur), "attrs": dict(attrs or {})})
+    out.sort(key=lambda e: e["ts_ns"])
+    return out
+
+
+def write_perfetto(path: str, merged: list, parties=None) -> None:
+    """Write Chrome/Perfetto ``trace.json`` (``ui.perfetto.dev`` opens
+    it directly).  ``ts``/``dur`` are microseconds."""
+    events = []
+    if parties:
+        for p in parties:
+            events.append({"ph": "M", "name": "process_name",
+                           "pid": int(p["pid"]), "tid": 0,
+                           "args": {"name": str(p["party"])}})
+    for e in merged:
+        ev = {"ph": e["ph"], "name": e["name"], "cat": e["cat"],
+              "pid": e["pid"], "tid": e["tid"],
+              "ts": e["ts_ns"] / 1e3, "args": e["attrs"]}
+        if e["ph"] == "X":
+            ev["dur"] = e["dur_ns"] / 1e3
+        else:
+            ev["s"] = "t"                   # thread-scoped instant
+        events.append(ev)
+    with open(path, "w") as f:
+        json.dump({"traceEvents": events,
+                   "displayTimeUnit": "ms"}, f)
+
+
+def self_time(merged: list) -> dict:
+    """Per-name self time (ns) over complete events: nested-interval
+    attribution per (pid, tid) — a span's self time is its duration
+    minus the durations of spans nested inside it."""
+    by_track: dict = {}
+    for e in merged:
+        if e["ph"] == "X":
+            by_track.setdefault((e["pid"], e["tid"]), []).append(e)
+    out: dict = {}
+    for track in by_track.values():
+        track.sort(key=lambda e: (e["ts_ns"], -e["dur_ns"]))
+        stack: list = []                    # (end_ns, name, [child_ns])
+        for e in track:
+            end = e["ts_ns"] + e["dur_ns"]
+            while stack and stack[-1][0] <= e["ts_ns"]:
+                done = stack.pop()
+                out[done[1]] = out.get(done[1], 0) + done[3] - done[2][0]
+            if stack:
+                stack[-1][2][0] += e["dur_ns"]
+            stack.append((end, e["name"], [0], e["dur_ns"]))
+        while stack:
+            done = stack.pop()
+            out[done[1]] = out.get(done[1], 0) + done[3] - done[2][0]
+    return out
+
+
+def top_self_time(merged: list, k: int = 3) -> list:
+    st = self_time(merged)
+    top = sorted(st.items(), key=lambda kv: -kv[1])[:k]
+    return [{"name": n, "self_ms": ns / 1e6} for n, ns in top]
+
+
+def trace_summary(merged: list, dropped: int = 0, k: int = 3) -> dict:
+    """Machine-readable digest for ``benchmarks/run.py --json``."""
+    return {"events": len(merged), "dropped": int(dropped),
+            "top_self_time": top_self_time(merged, k)}
+
+
+def waterfall(merged: list) -> str:
+    """Plain-text per-tree summary: for each ``tree`` attr seen on
+    training spans, one line per (party, span name) with call count and
+    total milliseconds, in first-seen order."""
+    trees: dict = {}
+    for e in merged:
+        if e["ph"] != "X" or e["cat"] not in ("train", "serve"):
+            continue
+        t = e["attrs"].get("tree")
+        if t is None:
+            continue
+        key = (e["party"], e["name"])
+        agg = trees.setdefault(int(t), {})
+        cnt, tot = agg.get(key, (0, 0))
+        agg[key] = (cnt + 1, tot + e["dur_ns"])
+    lines = []
+    for t in sorted(trees):
+        lines.append(f"tree {t}")
+        for (party, name), (cnt, tot) in sorted(
+                trees[t].items(), key=lambda kv: -kv[1][1]):
+            lines.append(f"  {party:<8} {name:<16} x{cnt:<4} "
+                         f"{tot / 1e6:9.3f} ms")
+    return "\n".join(lines)
+
+
+def wire_bytes_by_tag(events) -> dict:
+    """Per-tag byte sums over one party's ``cat == "wire"`` events.
+    Accepts raw tracer event tuples/lists or normalized dicts."""
+    out: dict = {}
+    for ev in events:
+        if isinstance(ev, dict):
+            cat, attrs = ev["cat"], ev["attrs"]
+        else:
+            cat, attrs = ev[2], ev[6]
+        if cat != "wire":
+            continue
+        tag = attrs["tag"]
+        out[tag] = out.get(tag, 0) + int(attrs["nbytes"])
+    return out
+
+
+def audit_wire_events(events, ledger_totals) -> dict:
+    """Cross-check one party's wire events against its per-tag ledger
+    totals.  Returns ``{tag: (traced_bytes, ledger_bytes)}`` for every
+    mismatch — empty means the trace is exact.  Only meaningful on
+    fault-free runs: ``Channel.restore`` rolls the ledger back but
+    already-emitted events stay in the ring (DESIGN.md §14)."""
+    traced = wire_bytes_by_tag(events)
+    bad = {}
+    for tag in set(traced) | {t for t, v in dict(ledger_totals).items() if v}:
+        t, l = traced.get(tag, 0), int(dict(ledger_totals).get(tag, 0))
+        if t != l:
+            bad[tag] = (t, l)
+    return bad

@@ -39,6 +39,7 @@ import os
 import random
 import time
 
+from ..obs import trace as obs_trace
 from .transport import TransportError, peek_frame_header
 
 SEND, RECV = "send", "recv"
@@ -164,6 +165,13 @@ class FaultyEndpoint:
         if rule is None:
             return frame
         self.injected.append((type(rule).__name__, tag, count))
+        # chaos endpoints are created before the party's channel exists,
+        # so injection events ride the PROCESS-default tracer (set by
+        # PartyProcess / the guest once tracing is on)
+        obs_trace.current().instant(
+            "fault_injected", cat="chaos", rule=type(rule).__name__,
+            tag=tag, count=int(count), direction=direction,
+            tree=int(self.tree), layer=int(self.layer))
         if isinstance(rule, Delay):
             time.sleep(rule.seconds)
             return frame

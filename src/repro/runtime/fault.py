@@ -47,6 +47,8 @@ class Heartbeat:
             self.beat()
 
     def beat(self):
+        # on-disk format unchanged (external babysitters parse it); only
+        # the LIVENESS JUDGEMENT below moved off the wall clock
         with open(self.path, "w") as f:
             f.write(str(time.time()))
 
@@ -58,12 +60,29 @@ class Heartbeat:
     def stop(self):
         self._stop.set()
 
-    @staticmethod
-    def is_alive(path: str, timeout: float) -> bool:
+    # mtime observations per path: (last mtime seen, monotonic clock at
+    # the moment it changed).  Comparing ``time.time() - mtime`` against
+    # the timeout was wrong under NTP: a forward wall-clock step ages a
+    # perfectly fresh beat past the timeout (spurious wedged-host verdict
+    # -> pointless restart), a backward step revives a dead one.  A peer
+    # is now wedged only when its mtime has been UNCHANGED for ``timeout``
+    # seconds of the observer's own monotonic clock.
+    _watch: dict = {}
+    _watch_lock = threading.Lock()
+
+    @classmethod
+    def is_alive(cls, path: str, timeout: float) -> bool:
         try:
-            return time.time() - os.path.getmtime(path) < timeout
+            mtime = os.path.getmtime(path)
         except OSError:
             return False
+        now = time.monotonic()
+        with cls._watch_lock:
+            prev = cls._watch.get(path)
+            if prev is None or prev[0] != mtime:
+                cls._watch[path] = (mtime, now)
+                return True
+            return now - prev[1] < timeout
 
 
 class StragglerPolicy:
@@ -130,9 +149,11 @@ class ResilientLoop:
         initial = (start_step, state)
         while step < n_steps:
             try:
-                t0 = time.time()
+                # monotonic: a wall-clock (NTP) step during the step_fn
+                # call must not read as a straggler strike
+                t0 = time.monotonic()
                 state = self.step_fn(state, self.next_batch(step))
-                self.straggler.observe(time.time() - t0)
+                self.straggler.observe(time.monotonic() - t0)
                 step += 1
                 retries = 0
                 if step % self.save_every == 0:

@@ -48,6 +48,9 @@ from collections import Counter, deque
 import numpy as np
 
 from ..core.party import Channel, Stats
+from ..obs import trace as obs_trace
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import NULL_TRACER, Tracer
 
 KIND_PROTO = 0          # protocol message: enters the wire-byte ledger
 KIND_CTRL = 1           # runtime control (hello/serve_setup/stats/bye):
@@ -486,22 +489,38 @@ class _BrokerInbox:
             with self.cond:
                 self.inbox.setdefault(got[3], deque()).append(got)
                 self.order.append(got[3])
+                depth = len(self.order)
                 self.cond.notify_all()
+            ch.metrics.gauge("broker_depth").observe(depth)
+            if ch.tracer.enabled:
+                ch.tracer.instant("broker_park", cat="transport",
+                                  src=self.src, tag=got[3], depth=depth)
+
+    def _waited(self, got, t_ns: int):
+        """Emit the protocol thread's park-to-pop wait as a span."""
+        tr = self.channel.tracer
+        if tr.enabled:
+            tr.complete("broker_pop", t_ns, time.perf_counter_ns() - t_ns,
+                        cat="transport", src=self.src, tag=got[3])
+        return got
 
     def pop(self, tag: str | None = None, timeout: float | None = None):
         """Next ingested frame — arrival order, or first frame of ``tag``."""
+        t_ns = (time.perf_counter_ns() if self.channel.tracer.enabled
+                else 0)
         deadline = (None if timeout is None
                     else time.monotonic() + timeout)
         with self.cond:
             while True:
                 if tag is None:
                     if self.order:
-                        return self.inbox[self.order.popleft()].popleft()
+                        return self._waited(
+                            self.inbox[self.order.popleft()].popleft(), t_ns)
                 else:
                     q = self.inbox.get(tag)
                     if q:
                         self.order.remove(tag)   # earliest entry of tag
-                        return q.popleft()
+                        return self._waited(q.popleft(), t_ns)
                 if self.err is not None:
                     raise self.err
                 budget = (None if deadline is None
@@ -573,6 +592,10 @@ class TransportChannel(Channel):
         self._mirror_lock = threading.Lock()    # rx/tx byte counters are
                                         # touched by broker + send threads
         self._jitter = _random.Random(len(party) * 2654435761 + 17)
+        # transport-plane instruments (per-tag RTT histograms, broker
+        # queue depth, retry count) — separate from Stats.metrics, which
+        # holds TRAINING timers; both surface through the status frame
+        self.metrics = MetricsRegistry()
 
     def _send_lock(self, dst: str):
         lock = self._send_locks.get(dst)
@@ -596,6 +619,11 @@ class TransportChannel(Channel):
                     raise PartyUnavailable(peer, str(e)) from e
                 if attempt == self.max_retries:
                     raise
+                self.metrics.counter("transport_retries").add()
+                if self.tracer.enabled:
+                    self.tracer.instant("retry", cat="transport", peer=peer,
+                                        attempt=attempt + 1,
+                                        error=type(e).__name__)
                 if self.reconnect is not None:
                     self.reconnect(peer)    # may raise PeerRestarted
                 time.sleep(delay + self._jitter.uniform(0.0, delay / 2))
@@ -631,10 +659,18 @@ class TransportChannel(Channel):
             self._enc_memo = (payload, payload_bytes)
         frame = encode_frame(kind, src, dst, tag, nbytes, None,
                              payload_bytes=payload_bytes, seq=seq)
+        t_ns = time.perf_counter_ns() if self.tracer.enabled else 0
         with self._send_lock(dst):
             ep.send_bytes(frame)
         with self._mirror_lock:
             self.tx_bytes[tag] += len(frame) + 4    # + length prefix
+        if self.tracer.enabled:
+            # physical view (framed bytes incl. prefix): cat "transport",
+            # never "wire" — the ledger audit must not see frame overhead
+            self.tracer.complete("ship", t_ns,
+                                 time.perf_counter_ns() - t_ns,
+                                 cat="transport", dst=dst, tag=tag,
+                                 seq=int(seq), nbytes=len(frame) + 4)
         # a retried send re-enters here through peers[dst] (possibly a
         # fresh endpoint) with the SAME seq: the receiver dedupes
 
@@ -649,6 +685,14 @@ class TransportChannel(Channel):
         kind, fsrc, fdst, tag, seq, nbytes, payload = decode_frame(frame)
         with self._mirror_lock:
             self.rx_bytes[tag] += len(frame) + 4
+        if kind == KIND_PROTO:
+            # per-tag round-trip (recv-start to frame decoded) — feeds
+            # the status snapshot alongside the straggler policy's view
+            self.metrics.histogram(f"rtt:{tag}").observe(
+                time.perf_counter() - t0)
+        if self.tracer.enabled:
+            self.tracer.instant("recv", cat="transport", src=fsrc, tag=tag,
+                                seq=int(seq), nbytes=len(frame) + 4)
         if self.on_rtt is not None and kind == KIND_PROTO:
             self.on_rtt(fsrc, tag, time.perf_counter() - t0)
         if kind == KIND_CTRL and tag == "error":
@@ -846,6 +890,7 @@ class TransportChannel(Channel):
         self.rx_bytes.clear()
         self.send_seq.clear()
         self.last_seen.clear()
+        self.metrics.clear()        # per-fit, like the byte counters
 
     @property
     def total_tx_bytes(self) -> int:
@@ -955,7 +1000,8 @@ class PartyProcess:
 
     def __init__(self, hid: int, params, X_host, channel: TransportChannel,
                  export_dir: str | None = None,
-                 state_dir: str | None = None):
+                 state_dir: str | None = None,
+                 own_process: bool = False):
         from ..core.binning import (BinnedData, bin_features,
                                     bin_features_stream)
         from ..data.pipeline import RowBlocks
@@ -965,6 +1011,23 @@ class PartyProcess:
         self.export_dir = export_dir
         self.state_dir = state_dir
         self.stats = Stats()
+        if getattr(params, "trace", False):
+            # one tracer per party; in a spawned host process it is ALSO
+            # installed as the process default so chaos endpoints — which
+            # wrap the transport before this channel existed — land their
+            # injection instants here.  A loopback party shares the
+            # GUEST's process, so it must never touch the default: the
+            # enabled tracer would outlive this run and leak into later
+            # trace=False fits in the same process (chaos is never
+            # injected over loopback, so nothing is lost).
+            self.tracer = Tracer(f"host{hid}")
+            channel.tracer = self.tracer
+            if own_process:
+                obs_trace.set_default(self.tracer)
+        else:
+            # inherit whatever the embedder attached (NULL by default) —
+            # never clobber a benchmark's process-default tracer
+            self.tracer = channel.tracer
         # out-of-core sources (§13): a pre-binned BinnedData (pickles lean —
         # no device buffers — so it crosses the spawn boundary) or a chunked
         # RowBlocks source skip the monolithic fit; raw serving rows then
@@ -1140,7 +1203,7 @@ class PartyProcess:
         engine = CipherHistogram(self.cipher, self.params.n_bins,
                                  sparse=self.params.sparse,
                                  use_pallas=self.params.use_pallas,
-                                 stats=self.stats)
+                                 stats=self.stats, tracer=self.tracer)
         hr = HostRuntime(hid=self.hid, data=self.data, engine=engine)
         hr.bind(self.params, self.cipher, self.channel, self.stats)
         hr.deliver("enc_gh", payload)
@@ -1261,6 +1324,25 @@ class PartyProcess:
         self.channel.send(f"host{self.hid}", "guest", "predict_bits", pb,
                           self._serve_k * ((n + 7) // 8))
 
+    # -- introspection --------------------------------------------------
+    def status(self) -> dict:
+        """Live snapshot of this party: Stats, training metrics,
+        transport metrics, ledger, trace occupancy, protocol position.
+        The ``status`` control frame returns exactly this dict."""
+        return {"hid": self.hid,
+                "stats": self.stats.as_dict(),
+                "metrics": self.stats.metrics.snapshot(),
+                "transport": self.channel.metrics.snapshot(),
+                "ledger": self.channel.summary(),
+                "socket": self.channel.socket_summary(),
+                "trace": {"enabled": bool(self.tracer.enabled),
+                          "events": len(self.tracer),
+                          "dropped": int(self.tracer.dropped)},
+                "current_tree": (int(self._current_tree)
+                                 if self._current_tree is not None
+                                 else None),
+                "n_complete": len(self._complete)}
+
     # -- control --------------------------------------------------------
     def _control(self, tag: str, payload) -> bool:
         if tag == "serve_setup":
@@ -1277,19 +1359,40 @@ class PartyProcess:
             # fresh model the guest constructs
             self.stats = Stats()
             self.channel.reset_accounting()
+            self.tracer.clear()     # per-fit, like the ledger
         elif tag == "get_stats":
             self.channel.control_send(
                 "guest", "stats",
                 {"stats": self.stats.as_dict(),
                  "ledger": self.channel.summary(),
                  "socket": self.channel.socket_summary()})
+        elif tag == "status":
+            self.channel.control_send("guest", "status_reply",
+                                      self.status())
+        elif tag == "trace_sync":
+            # ship this party's trace ring to the guest, stamped with our
+            # perf_counter_ns clock: the guest's send/recv times around
+            # this round-trip give one NTP-style offset sample (min-RTT
+            # across these + heartbeat samples wins, obs/export.py)
+            self.channel.control_send(
+                "guest", "trace_dump",
+                {"hid": self.hid,
+                 "clock": time.perf_counter_ns(),
+                 "events": self.tracer.export_events(),
+                 "dropped": int(self.tracer.dropped)})
+            if isinstance(payload, dict) and payload.get("clear"):
+                self.tracer.clear()
         elif tag == "ping":
             self.channel.control_send("guest", "pong", payload)
         elif tag == "hb":
             # liveness probe from the guest's supervisor thread: the ack
             # is skimmed by the guest's recv loop, never blocking the
-            # protocol (a wedged host simply never reaches this branch)
-            self.channel.control_send("guest", "hb_ack", payload)
+            # protocol (a wedged host simply never reaches this branch).
+            # Echo the payload and add our monotonic clock — each ack is
+            # a free clock-offset sample for trace merging.
+            ack = dict(payload) if isinstance(payload, dict) else {}
+            ack["clock"] = time.perf_counter_ns()
+            self.channel.control_send("guest", "hb_ack", ack)
         elif tag == "resync":
             # reconnect barrier: by the time this frame is processed,
             # every reply this host owed for earlier frames has already
@@ -1346,7 +1449,8 @@ def host_main(port: int, hid: int, params, X_host,
             channel = TransportChannel(f"host{hid}", {"guest": ep},
                                        timeout)
             pp = PartyProcess(hid, params, X_host, channel,
-                              export_dir=export_dir, state_dir=state_dir)
+                              export_dir=export_dir, state_dir=state_dir,
+                              own_process=True)
         else:
             channel.peers["guest"] = ep
         if getattr(params, "pipeline", False):
@@ -1442,6 +1546,8 @@ class MultiHostRun:
                          else np.asarray(X) for X in X_hosts]
         self._supervisor = None
         self._straggler = {}
+        self._clock_samples = {}    # hid -> [(t_send, peer_clock, t_recv)]
+                                    # in guest perf_counter_ns (trace merge)
 
         self.channel = TransportChannel("guest", {}, timeout)
         if transport == "socket":
@@ -1565,6 +1671,8 @@ class MultiHostRun:
         barrier against every host — stale in-flight replies from the
         aborted attempt are drained unmirrored (the rolled-back snapshot
         already forgot their requests)."""
+        t_ns = (time.perf_counter_ns() if self.channel.tracer.enabled
+                else 0)
         hook, self.channel.reconnect = self.channel.reconnect, None
         try:
             if self.transport == "socket":
@@ -1601,6 +1709,10 @@ class MultiHostRun:
                         self._accept_hosts({hid}, self.timeout)
         finally:
             self.channel.reconnect = hook
+            if self.channel.tracer.enabled:
+                self.channel.tracer.complete(
+                    "resync", t_ns, time.perf_counter_ns() - t_ns,
+                    cat="transport", n_hosts=self.n_hosts)
 
     def _resume_floor(self) -> int | None:
         """Lowest boosting round any reconnected party can resume from,
@@ -1754,7 +1866,18 @@ class MultiHostRun:
         owns the socket reads) — record and swallow them."""
         if tag == "hb_ack":
             try:
-                self._last_ack[int(src[4:])] = time.monotonic()
+                hid = int(src[4:])
+                self._last_ack[hid] = time.monotonic()
+                if isinstance(payload, dict) and "clock" in payload \
+                        and "t_ns" in payload:
+                    # one NTP-style offset sample per ack (min-RTT sample
+                    # wins at merge time); bounded — samples only improve
+                    # while RTT keeps making new minimums anyway
+                    samples = self._clock_samples.setdefault(hid, [])
+                    if len(samples) < 256:
+                        samples.append((int(payload["t_ns"]),
+                                        int(payload["clock"]),
+                                        time.perf_counter_ns()))
             except (ValueError, AttributeError):
                 pass
             return True
@@ -1771,8 +1894,9 @@ class MultiHostRun:
             now = time.monotonic()
             for hid in range(self.n_hosts):
                 try:
-                    self.channel.control_send(f"host{hid}", "hb",
-                                              {"t": now})
+                    self.channel.control_send(
+                        f"host{hid}", "hb",
+                        {"t": now, "t_ns": time.perf_counter_ns()})
                 except Exception:                        # noqa: BLE001
                     continue        # training thread handles reconnects
                 if now - self._last_ack[hid] > self.liveness_timeout:
@@ -1931,6 +2055,55 @@ class MultiHostRun:
         merged.merge_counts(self.model.stats.as_dict())
         for hs in self.host_stats():
             merged.merge_counts(hs["stats"])
+        return merged
+
+    def party_status(self, hid: int = 0) -> dict:
+        """Live introspection of one host party over the control plane:
+        Stats, training + transport metric snapshots, ledger, trace
+        occupancy, protocol position (``PartyProcess.status``)."""
+        self.channel.control_send(f"host{hid}", "status", None)
+        return self.channel.control_recv(f"host{hid}", "status_reply")
+
+    def collect_traces(self, clear: bool = False) -> list:
+        """One ``trace_sync`` round-trip per host.  Returns
+        ``[{hid, events, dropped, samples}]`` where ``samples`` are
+        ``(t_send, peer_clock, t_recv)`` clock-offset observations on
+        the guest clock — the sync round-trip itself always contributes
+        one; supervisor heartbeat acks (when liveness is on) add more."""
+        out = []
+        for hid in range(self.n_hosts):
+            t0 = time.perf_counter_ns()
+            self.channel.control_send(f"host{hid}", "trace_sync",
+                                      {"clear": bool(clear)})
+            dump = self.channel.control_recv(f"host{hid}", "trace_dump")
+            t1 = time.perf_counter_ns()
+            samples = list(self._clock_samples.get(hid, ()))
+            samples.append((t0, int(dump["clock"]), t1))
+            out.append({"hid": hid, "events": dump["events"],
+                        "dropped": int(dump["dropped"]),
+                        "samples": samples})
+        return out
+
+    def trace(self, path: str | None = None) -> list:
+        """Merge the guest's trace with every host's (clock-aligned onto
+        the guest timeline) and optionally write Perfetto ``trace.json``
+        at ``path``.  Returns the merged, time-sorted event list."""
+        from ..obs.export import (estimate_offset, merge_traces,
+                                  write_perfetto)
+        parties = []
+        gt = getattr(self.model, "tracer", None) if self.model else None
+        if gt is not None and gt.enabled:
+            parties.append({"party": "guest", "pid": 0,
+                            "events": gt.export_events(), "offset_ns": 0})
+        for dump in self.collect_traces():
+            off, _ = estimate_offset(dump["samples"])
+            parties.append({"party": f"host{dump['hid']}",
+                            "pid": dump["hid"] + 1,
+                            "events": dump["events"],
+                            "offset_ns": off})
+        merged = merge_traces(parties)
+        if path:
+            write_perfetto(path, merged, parties)
         return merged
 
     def ping(self, hid: int = 0) -> float:

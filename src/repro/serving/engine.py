@@ -215,6 +215,7 @@ class FederatedPredictor:
                              f"got {len(host_parts)}")
         n = guest_bins.shape[0]
         self.stats.n_predict_batches += 1
+        tracer = self.channel.tracer
 
         # pad instances to the next power of two, then to the packed-byte
         # granule (x mesh data extent when sharded).  The pow2 bucketing
@@ -233,13 +234,15 @@ class FederatedPredictor:
 
         blocks = []
         if self._bits[0] is not None:
-            blocks.append(self._bits[0].packed(guest_bins, n_pad))
+            with tracer.span("serve_bins", cat="serve", rows=int(n)):
+                blocks.append(self._bits[0].packed(guest_bins, n_pad))
         # one round-trip per host per batch: the request carries the
         # instance ids (+ the pad extent so both sides bucket alike), the
         # reply the packed bit block.  ALL requests go out before any
         # reply is collected, so remote hosts compute their bit blocks
         # concurrently (latency = max over hosts, not the sum) — the same
         # dispatch-then-collect shape as the training layer batch.
+        t_rt = time.perf_counter()
         pending = []                        # (block slot, party, i)
         down: list = []                     # typed per-party failures
         # ONE request object for all hosts: the transport's broadcast
@@ -285,19 +288,25 @@ class FederatedPredictor:
             # was consumed: never a hang, never an answer scored from a
             # subset of the parties' bits
             raise down[0]
+        tracer.complete("serve_roundtrip", int(t_rt * 1e9),
+                        int((time.perf_counter() - t_rt) * 1e9),
+                        cat="serve", hosts=len(self.hosts))
 
         if blocks and g.depth > 0:
-            bits = (blocks[0] if len(blocks) == 1
-                    else jnp.concatenate(blocks, axis=0))
-            node0 = jnp.broadcast_to(jnp.asarray(g.roots),
-                                     (n_pad, g.n_trees))
-            if self.mesh is not None:
-                from ..parallel.sharding import gbdt_sharding
-                bits = jax.device_put(
-                    bits, gbdt_sharding(self.mesh, "serve_bits"))
-                node0 = jax.device_put(
-                    node0, gbdt_sharding(self.mesh, "serve_route"))
-            node = np.asarray(_route(bits, self._step, node0, g.depth))[:n]
+            with tracer.span("serve_route", cat="serve", rows=int(n),
+                             trees=int(g.n_trees)):
+                bits = (blocks[0] if len(blocks) == 1
+                        else jnp.concatenate(blocks, axis=0))
+                node0 = jnp.broadcast_to(jnp.asarray(g.roots),
+                                         (n_pad, g.n_trees))
+                if self.mesh is not None:
+                    from ..parallel.sharding import gbdt_sharding
+                    bits = jax.device_put(
+                        bits, gbdt_sharding(self.mesh, "serve_bits"))
+                    node0 = jax.device_put(
+                        node0, gbdt_sharding(self.mesh, "serve_route"))
+                node = np.asarray(_route(bits, self._step, node0,
+                                         g.depth))[:n]
         else:                               # every tree is a lone leaf
             node = np.broadcast_to(g.roots, (n, g.n_trees))
 
@@ -315,5 +324,8 @@ class FederatedPredictor:
             score = np.tile(g.init_score, (n, 1))
             for t in range(g.n_trees):
                 score += w[:, t]
-        self.stats.predict_seconds += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.stats.predict_seconds += dt
+        tracer.complete("serve_batch", int(t0 * 1e9), int(dt * 1e9),
+                        cat="serve", rows=int(n))
         return score
