@@ -1,0 +1,31 @@
+"""Privacy-boundary & protocol static analysis (DESIGN.md §15).
+
+Three AST passes over ``src/repro`` plus one small lint, run by one CLI
+(``python -m repro.analysis --json``):
+
+* **secret-taint** (:mod:`.taint`): call-graph-aware flow analysis from
+  declared secret sources (Paillier/affine private-key attributes,
+  plaintext g/h tensors, raw labels) to declared sinks (``Channel.send``
+  payloads, the frame codec, serving export writers).  Sanitizers —
+  functions marked ``@declassifies`` (batch encryption, predict-bit
+  packing, protocol-revealed aggregates) — cut the flow.
+* **wire-schema** (:mod:`.wire`): every tag used at a send/recv/deliver
+  site must resolve to the schema registry (:mod:`.schema`); dynamic tag
+  forwarding is allowed only at declared generic plumbing sites.
+* **lock-discipline** (:mod:`.locks`): declared guarded attributes of
+  the threaded classes may only be touched under their owning lock (or
+  from their declared owner methods).
+* **dtype-preservation** (:mod:`.dtype`): ``asarray`` without an
+  explicit ``dtype=`` on restore/codec paths (the float64→float32
+  canonicalization bug class).
+
+Findings diff against a checked-in baseline (``baseline.json`` next to
+this package): CI fails only on *new* findings.
+
+Only :mod:`.registry` (the contract declarations + ``declassifies``)
+and :mod:`.schema` (the wire-tag registry + runtime conformance checks)
+are imported by production code; the passes themselves are tooling.
+"""
+
+from .registry import declassifies  # noqa: F401  (re-export: the one
+                                    # symbol production code decorates with)

@@ -1,0 +1,95 @@
+"""CLI: run all analysis passes and diff against the baseline.
+
+    python -m repro.analysis --json
+    python -m repro.analysis --json --root src/repro
+    python -m repro.analysis --update-baseline
+
+Exit status 1 iff there are findings not covered by the baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from . import astutil, dtype, locks, report, taint, wire
+
+_PKG_DIR = os.path.dirname(os.path.abspath(__file__))
+_DEFAULT_ROOT = os.path.dirname(_PKG_DIR)          # src/repro
+_DEFAULT_BASELINE = os.path.join(_PKG_DIR, "baseline.json")
+
+PASSES = (
+    ("taint", taint.run),
+    ("wire", wire.run),
+    ("locks", locks.run),
+    ("dtype", dtype.run),
+)
+
+
+def analyze(root: str) -> list:
+    modules = astutil.load_tree(root)
+    findings = []
+    for _, run in PASSES:
+        findings.extend(run(modules))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--root", default=_DEFAULT_ROOT,
+                    help="source root to analyze (default: the repro "
+                         "package)")
+    ap.add_argument("--baseline", default=_DEFAULT_BASELINE,
+                    help="baseline findings file")
+    ap.add_argument("--json", action="store_true",
+                    help="emit a machine-readable report on stdout")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to the current findings "
+                         "and exit 0")
+    args = ap.parse_args(argv)
+
+    findings = analyze(args.root)
+
+    if args.update_baseline:
+        report.save_baseline(args.baseline, findings)
+        print(f"baseline updated: {len(findings)} finding(s) -> "
+              f"{args.baseline}", file=sys.stderr)
+        return 0
+
+    baseline = report.load_baseline(args.baseline)
+    new, known, stale = report.diff_against_baseline(findings, baseline)
+
+    if args.json:
+        out = {
+            "root": args.root,
+            "summary": {
+                "total": len(findings), "new": len(new),
+                "baselined": len(known), "stale_baseline": len(stale),
+            },
+            "new": [f.to_dict() for f in new],
+            "baselined": [f.to_dict() for f in known],
+            "stale_baseline": stale,
+        }
+        json.dump(out, sys.stdout, indent=2)
+        sys.stdout.write("\n")
+    else:
+        for f in new:
+            print(f"NEW   {f}")
+        for f in known:
+            print(f"known {f}")
+        for e in stale:
+            print(f"stale [{e['pass']}/{e['rule']}] {e['module']} "
+                  f"({e['qualname']}): {e['detail']}")
+
+    if new:
+        print(f"{len(new)} unbaselined finding(s); run with "
+              f"--update-baseline only if each is an accepted, reviewed "
+              f"exception.", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

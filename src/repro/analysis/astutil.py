@@ -1,0 +1,129 @@
+"""Shared AST plumbing for the analysis passes.
+
+Loads every module under a source root once, indexes functions/methods
+by qualified name, and annotates each node with its parent (the stdlib
+``ast`` has no parent links, and both the wire and lock passes need
+"am I inside a ``with self._lock:`` body / which function am I in").
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+
+
+@dataclasses.dataclass
+class Module:
+    relpath: str            # path relative to the source root, "/"-separated
+    path: str               # absolute path
+    tree: ast.Module
+    source: str
+
+
+@dataclasses.dataclass
+class Func:
+    module: Module
+    qualname: str           # "Class.method" or "function"
+    node: ast.AST           # FunctionDef | AsyncFunctionDef
+    cls: str | None         # owning class name, if a method
+
+
+def load_tree(root: str, skip_dirs: tuple = ("analysis",)) -> list[Module]:
+    """Parse every ``*.py`` under ``root`` except ``skip_dirs`` (the
+    analyzer does not analyze itself — its fixture-like registries would
+    drown the report in false positives)."""
+    mods = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d != "__pycache__"
+                             and os.path.relpath(os.path.join(dirpath, d),
+                                                 root).replace(os.sep, "/")
+                             not in skip_dirs)
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            with open(path, "r", encoding="utf-8") as f:
+                src = f.read()
+            mods.append(Module(rel, path, ast.parse(src, filename=path), src))
+    return mods
+
+
+def link_parents(tree: ast.Module) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._parent = node  # type: ignore[attr-defined]
+
+
+def parents(node: ast.AST):
+    """Yield ancestors, innermost first (requires :func:`link_parents`)."""
+    cur = getattr(node, "_parent", None)
+    while cur is not None:
+        yield cur
+        cur = getattr(cur, "_parent", None)
+
+
+def enclosing_func(node: ast.AST) -> ast.AST | None:
+    for p in parents(node):
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return p
+    return None
+
+
+def enclosing_class(node: ast.AST) -> ast.ClassDef | None:
+    for p in parents(node):
+        if isinstance(p, ast.ClassDef):
+            return p
+    return None
+
+
+def index_funcs(mod: Module) -> list[Func]:
+    """Every function/method in the module, with Class.method qualnames.
+    Nested functions get ``outer.<locals>.inner``-style names collapsed
+    to ``outer.inner`` — precise enough for name-based resolution."""
+    out = []
+
+    def visit(node, prefix, cls):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{child.name}"
+                out.append(Func(mod, q, child, cls))
+                visit(child, f"{q}.", cls)
+            elif isinstance(child, ast.ClassDef):
+                visit(child, f"{prefix}{child.name}.", child.name)
+            else:
+                visit(child, prefix, cls)
+
+    visit(mod.tree, "", None)
+    return out
+
+
+def callee_name(call: ast.Call) -> str | None:
+    """Last name segment of the callee: ``a.b.send(...)`` → ``send``."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def decorator_names(node) -> set:
+    """Bare decorator names, unwrapping one call level:
+    ``@declassifies("...")`` → ``declassifies``."""
+    names = set()
+    for d in getattr(node, "decorator_list", ()):
+        t = d.func if isinstance(d, ast.Call) else d
+        if isinstance(t, ast.Attribute):
+            names.add(t.attr)
+        elif isinstance(t, ast.Name):
+            names.add(t.id)
+    return names
+
+
+def const_str(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None

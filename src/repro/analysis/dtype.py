@@ -1,0 +1,55 @@
+"""Dtype-preservation lint: ``asarray`` without ``dtype=`` on restore
+and codec paths.
+
+With jax's x64 mode off, ``jnp.asarray(x)`` silently canonicalizes
+float64 → float32 — the PR 6 checkpoint-restore bug class.  On the
+declared paths (``registry.DTYPE_LINT_PATHS``: checkpoint restore, the
+wire codec, serving export) every ``asarray`` must pin its dtype, either
+with an explicit ``dtype=`` keyword or a second positional argument.
+Intentional canonicalization sites live in the baseline.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from . import astutil, registry
+from .report import Finding
+
+
+def _on_lint_path(relpath: str) -> bool:
+    for p in registry.DTYPE_LINT_PATHS:
+        if relpath == p or (p.endswith("/") and relpath.startswith(p)):
+            return True
+    return False
+
+
+def run(modules) -> list:
+    findings, seen = [], set()
+    for mod in modules:
+        if not _on_lint_path(mod.relpath):
+            continue
+        astutil.link_parents(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and astutil.callee_name(node) == "asarray"):
+                continue
+            if len(node.args) >= 2:        # positional dtype
+                continue
+            if any(k.arg == "dtype" for k in node.keywords):
+                continue
+            fn = astutil.enclosing_func(node)
+            cls = astutil.enclosing_class(fn) if fn is not None else None
+            qual = ("" if fn is None else
+                    (f"{cls.name}.{fn.name}" if cls else fn.name))
+            try:
+                arg = ast.unparse(node.args[0])[:40] if node.args else "?"
+            except Exception:
+                arg = "?"
+            f = Finding("dtype", mod.relpath, qual, "asarray-no-dtype",
+                        f"asarray('{arg}') without explicit dtype on a "
+                        f"restore/codec path", getattr(node, "lineno", 0))
+            if f.fingerprint not in seen:
+                seen.add(f.fingerprint)
+                findings.append(f)
+    return findings

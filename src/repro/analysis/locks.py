@@ -1,0 +1,101 @@
+"""Lock-discipline pass: guarded attributes only under their lock.
+
+Contracts are declared in ``registry.LOCK_CONTRACTS``.  Two kinds:
+
+* ``kind="lock"`` — every ``self.<attr>`` access (read or write) on a
+  guarded attribute must sit inside a ``with self.<lock>:`` block or in
+  one of the contract's declared methods (for classes whose public
+  entry points take the lock once and fan out to private helpers).
+* ``kind="methods"`` — the attribute is owned by the declared methods
+  (thread-ownership / join-ordering discipline instead of a mutex).
+
+``__init__`` is always exempt: construction precedes sharing.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from . import astutil, registry
+from .report import Finding
+
+
+def _under_lock(node: ast.AST, lock: str) -> bool:
+    for p in astutil.parents(node):
+        if isinstance(p, (ast.With, ast.AsyncWith)):
+            for item in p.items:
+                ctx = item.context_expr
+                if isinstance(ctx, ast.Attribute) and ctx.attr == lock \
+                        and isinstance(ctx.value, ast.Name) \
+                        and ctx.value.id == "self":
+                    return True
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            break
+    return False
+
+
+def _find_class(mod, name: str):
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+class LockPass:
+    def __init__(self, modules):
+        self.by_rel = {m.relpath: m for m in modules}
+        self.findings = []
+        self._seen = set()
+
+    def run(self) -> list:
+        for c in registry.LOCK_CONTRACTS:
+            mod = self.by_rel.get(c["module"])
+            if mod is None:
+                continue
+            astutil.link_parents(mod.tree)
+            cls = _find_class(mod, c["cls"])
+            if cls is None:
+                self._emit(mod, mod.tree, f'{c["cls"]}', "missing-class",
+                           f"declared class {c['cls']} not found")
+                continue
+            self._check_class(mod, cls, c)
+        return self.findings
+
+    def _check_class(self, mod, cls: ast.ClassDef, c: dict) -> None:
+        guarded = set(c["guarded"])
+        methods = set(c.get("methods") or ())
+        lock = c.get("lock")
+        for node in ast.walk(cls):
+            if not (isinstance(node, ast.Attribute)
+                    and node.attr in guarded
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == "self"):
+                continue
+            fn = astutil.enclosing_func(node)
+            if fn is None or fn.name == "__init__":
+                continue
+            owner = astutil.enclosing_class(fn)
+            if owner is not cls:            # nested class: not ours
+                continue
+            qual = f"{cls.name}.{fn.name}"
+            if fn.name in methods:
+                continue
+            if c["kind"] == "lock" and _under_lock(node, lock):
+                continue
+            mode = ("write" if isinstance(node.ctx, (ast.Store, ast.Del))
+                    else "read")
+            want = (f"'with self.{lock}'" if c["kind"] == "lock"
+                    else "its declared owner methods")
+            self._emit(mod, node, qual, "unlocked-access",
+                       f"guarded attr '{node.attr}' {mode} outside {want}")
+
+    def _emit(self, mod, node, qual, rule, detail) -> None:
+        f = Finding("locks", mod.relpath, qual, rule, detail,
+                    getattr(node, "lineno", 0))
+        if f.fingerprint not in self._seen:
+            self._seen.add(f.fingerprint)
+            self.findings.append(f)
+
+
+def run(modules) -> list:
+    return LockPass(modules).run()

@@ -1,0 +1,194 @@
+"""Declared privacy & concurrency contracts — the analyzer's registries.
+
+This module is imported by PRODUCTION code (for :func:`declassifies` and
+:data:`SECRET_FIELD_NAMES`) and therefore stays dependency-free: pure
+data plus one decorator.  The passes in this package read these
+declarations; changing a contract here is a reviewable privacy/
+concurrency decision, not an analyzer implementation detail.
+"""
+
+from __future__ import annotations
+
+# ---------------------------------------------------------------------------
+# sanitizers: the @declassifies decorator
+# ---------------------------------------------------------------------------
+
+def declassifies(reason: str):
+    """Declare a function a *sanitizer*: its result is no longer secret.
+
+    The taint pass treats any call to a decorated function as cutting the
+    source→sink flow.  ``reason`` documents WHY the output is safe to
+    disclose (encryption, an aggregate the protocol reveals by design,
+    one-bit packing) — it is the written form of the privacy argument
+    SecureBoost+ makes in prose.
+    """
+    def deco(fn):
+        fn.__declassifies__ = reason
+        return fn
+    return deco
+
+
+# Name-based backstop for the decorator (the pass detects ``@declassifies``
+# syntactically, but resolution is by callee name; keeping the declared
+# sanitizer names here makes the contract greppable and covers call sites
+# that resolve to several same-named methods across cipher classes).
+SANITIZER_NAMES = frozenset({
+    "encrypt_batch",        # kernels/modmul/ops.py — Pallas limb encrypt
+    "encrypt_limbs",        # core/he/affine.py — device-batch encrypt
+    "encrypt_ints",         # core/he/paillier.py, affine.py — oracle encrypt
+    "find_best_split",      # core/split.py — the split decision the
+                            # protocol reveals to every party by design
+    "leaf_weight",          # core/split.py — aggregate leaf statistic;
+                            # part of the disclosed model
+    "_packed_bits",         # serving/engine.py — one comparison bit per
+                            # (row, node); the serving protocol's unit of
+                            # disclosure
+    "packed_from_X",        # serving/engine.py — PartyBits wrapper over
+                            # _packed_bits
+})
+
+
+# ---------------------------------------------------------------------------
+# secret sources
+# ---------------------------------------------------------------------------
+
+# Private-key material: attribute reads of these names are secret sources
+# ANYWHERE in the tree (they are exactly what _strip_private_key deletes
+# from a host-side cipher).
+SECRET_KEY_ATTRS = frozenset({
+    "_lam", "_mu",                      # Paillier private key
+    "T_dec", "T_enc", "a_int", "a_inv_int",   # affine (symmetric) key
+})
+
+# Plaintext gradient/label tensors: parameter and ``self.<attr>`` names
+# seeded as secret, scoped to the modules that actually carry them (a
+# loop variable named ``h`` in serving code is a host handle, not a
+# hessian — scoping keeps the pass meaningful).
+TAINT_SOURCES = (
+    {
+        "modules": (
+            "core/tree.py", "core/boosting.py", "core/party.py",
+            "core/histogram.py", "core/frontier.py", "core/goss.py",
+            "core/loss.py", "core/encoding.py", "core/mo_encoding.py",
+            "core/split.py",
+        ),
+        "params": ("g", "h", "g_sel", "h_sel", "g_all", "h_all",
+                   "y", "y_true", "labels"),
+        "attrs": ("g", "h"),
+    },
+)
+
+# Sinks: callee name -> 0-based positional index of the payload argument
+# at a method call site (``obj.name(...)``), plus the keyword that names
+# it.  Anything tainted reaching one of these without passing a
+# sanitizer is a finding.
+TAINT_SINKS = (
+    {"name": "send", "arg": 3, "kwarg": "payload"},        # Channel.send
+    {"name": "control_send", "arg": 2, "kwarg": "payload"},
+    {"name": "deliver", "arg": 1, "kwarg": "payload"},     # in-process ship
+    {"name": "_reply", "arg": 1, "kwarg": "payload"},      # HostRuntime
+    {"name": "encode_payload", "arg": 0, "kwarg": "obj"},  # frame codec
+    {"name": "encode_frame", "arg": 5, "kwarg": "payload"},
+    {"name": "_write_party", "arg": 2, "kwarg": "arrays"}, # serving export
+)
+
+
+# ---------------------------------------------------------------------------
+# export audit (the at-rest half of the boundary, serving/export.py)
+# ---------------------------------------------------------------------------
+
+# Field names that must never appear as an array or manifest key in ANY
+# per-party export: plaintext gradients/labels and private-key material.
+SECRET_FIELD_NAMES = frozenset({
+    "g", "h", "g_sel", "h_sel", "y", "labels", "gh", "grad", "hess",
+}) | SECRET_KEY_ATTRS
+
+
+# ---------------------------------------------------------------------------
+# wire pass: where dynamic (non-literal) tags are legitimate
+# ---------------------------------------------------------------------------
+
+# Generic forwarding plumbing: these functions take the tag as a
+# parameter and pass it through; every literal tag they forward was
+# already checked at THEIR call sites.
+GENERIC_TAG_SITES = frozenset({
+    "TransportChannel.send",        # super().send(src, dst, tag, ...)
+    "TransportChannel._ingest",     # ledger mirror: Channel.send(self, ...)
+    "TransportChannel.recv",        # broker pop(tag=tag)
+    "TransportChannel.control_recv",
+    "HostRuntime._reply",           # channel.send(..., tag, ...)
+    "RemoteHostHandle.collect",     # channel.recv(peer, tag)
+    "PartyProcess._handle",         # hr.deliver(tag, payload)
+})
+
+# Variable names treated as "the tag" in comparisons / dispatch tables.
+TAG_VAR_NAMES = frozenset({"tag", "ftag", "until_ctrl"})
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline contracts (the seven threaded modules)
+# ---------------------------------------------------------------------------
+
+# kind="lock":    guarded attrs may be touched only inside
+#                 ``with self.<lock>:`` or from a declared method.
+# kind="methods": guarded attrs may be touched only from the declared
+#                 methods (ownership/join-ordering is the discipline).
+# ``__init__`` is always exempt (construction precedes sharing).
+LOCK_CONTRACTS = (
+    # broker inbox: reader thread parks frames, protocol thread pops
+    dict(module="runtime/transport.py", cls="_BrokerInbox", kind="lock",
+         lock="cond", guarded=("inbox", "order", "err"), methods=()),
+    # tx/rx byte mirrors: touched by send, broker and supervisor threads
+    dict(module="runtime/transport.py", cls="TransportChannel", kind="lock",
+         lock="_mirror_lock", guarded=("tx_bytes", "rx_bytes"), methods=()),
+    # party runtime: every protocol mutation runs under _handle_lock
+    # (serve loop vs. loopback encrypt-pump deliveries).  The declared
+    # methods are the ones handle()/_control() call with the lock held;
+    # resume_info/status run at quiesced points of the serve loop.
+    dict(module="runtime/transport.py", cls="PartyProcess", kind="lock",
+         lock="_handle_lock",
+         guarded=("hr", "tables", "server", "cipher", "X_serve",
+                  "_current_tree", "_complete", "_staged", "_tree_snaps",
+                  "_tree_span", "_serve_k"),
+         methods=("_handle", "_control", "_begin_tree", "_activate_tree",
+                  "_build_runtime", "_complete_tree", "_serve_setup",
+                  "_predict", "_persist_state", "_load_state", "status",
+                  "resume_info")),
+    # heartbeat supervisor: _last_ack is written by the recv-loop skim
+    # hook and the supervisor thread only (GIL-atomic dict item writes)
+    dict(module="runtime/transport.py", cls="MultiHostRun", kind="methods",
+         guarded=("_last_ack",),
+         methods=("_start_supervisor", "_skim_ctrl", "_supervise")),
+    # encrypt pump: _err/_done_t are written by the worker and read only
+    # after join() — join-ordering, owned by these two methods
+    dict(module="core/tree.py", cls="_EncryptPump", kind="methods",
+         guarded=("_err", "_done_t"), methods=("_run", "join")),
+    # prefetch loader: _step is worker-thread-private
+    dict(module="data/pipeline.py", cls="PrefetchLoader", kind="methods",
+         guarded=("_step",), methods=("_run",)),
+    # tracer ring
+    dict(module="obs/trace.py", cls="Tracer", kind="lock", lock="_lock",
+         guarded=("_events", "_emitted"), methods=()),
+    # metrics registry + the one compound instrument
+    dict(module="obs/metrics.py", cls="MetricsRegistry", kind="lock",
+         lock="_lock",
+         guarded=("_counters", "_gauges", "_histograms", "_series"),
+         methods=()),
+    dict(module="obs/metrics.py", cls="Histogram", kind="lock",
+         lock="_lock", guarded=("count", "total", "min", "max"),
+         methods=()),
+)
+
+
+# ---------------------------------------------------------------------------
+# dtype-preservation lint: restore/codec paths
+# ---------------------------------------------------------------------------
+
+# Module path prefixes where ``asarray`` without an explicit ``dtype=``
+# risks the float64→float32 canonicalization bug class (jax x64 off):
+# checkpoint restore, the wire codec, and serving export/import.
+DTYPE_LINT_PATHS = (
+    "checkpoint/",
+    "runtime/transport.py",
+    "serving/export.py",
+)

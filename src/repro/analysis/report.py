@@ -1,0 +1,74 @@
+"""Findings, fingerprints, and the baseline diff.
+
+A finding's *fingerprint* deliberately excludes line numbers: moving
+code around must not churn the baseline.  It hashes
+(pass, module relpath, enclosing qualname, rule, detail) — the same
+leak reported twice on different lines of one function is one
+fingerprint, which is the right granularity for "did a refactor
+introduce a NEW leak".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+
+
+@dataclasses.dataclass
+class Finding:
+    pass_name: str          # "taint" | "wire" | "locks" | "dtype"
+    module: str             # relpath under the source root
+    qualname: str           # enclosing function/method ("" = module level)
+    rule: str               # short machine id, e.g. "unsanitized-flow"
+    detail: str             # stable human description (no line numbers!)
+    line: int               # for navigation only; not fingerprinted
+
+    @property
+    def fingerprint(self) -> str:
+        key = "\x1f".join((self.pass_name, self.module, self.qualname,
+                           self.rule, self.detail))
+        return hashlib.sha256(key.encode("utf-8")).hexdigest()[:16]
+
+    def to_dict(self) -> dict:
+        return {
+            "pass": self.pass_name, "module": self.module,
+            "qualname": self.qualname, "rule": self.rule,
+            "detail": self.detail, "line": self.line,
+            "fingerprint": self.fingerprint,
+        }
+
+    def __str__(self) -> str:
+        where = f"{self.module}:{self.line}"
+        if self.qualname:
+            where += f" ({self.qualname})"
+        return f"[{self.pass_name}/{self.rule}] {where}: {self.detail}"
+
+
+def load_baseline(path: str) -> dict:
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return {}
+    return {e["fingerprint"]: e for e in data.get("findings", [])}
+
+
+def save_baseline(path: str, findings: list) -> None:
+    entries = sorted((f.to_dict() for f in findings),
+                     key=lambda e: (e["pass"], e["module"], e["qualname"],
+                                    e["rule"], e["detail"]))
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump({"findings": entries}, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def diff_against_baseline(findings: list, baseline: dict):
+    """Return (new, known, stale): findings not in the baseline, findings
+    covered by it, and baseline fingerprints no longer produced (fixed —
+    candidates for ``--update-baseline``)."""
+    produced = {f.fingerprint for f in findings}
+    new = [f for f in findings if f.fingerprint not in baseline]
+    known = [f for f in findings if f.fingerprint in baseline]
+    stale = [e for fp, e in sorted(baseline.items()) if fp not in produced]
+    return new, known, stale

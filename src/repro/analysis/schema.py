@@ -1,0 +1,199 @@
+"""Wire-protocol schema registry: every tag, in one place.
+
+Each frame the transport ships carries a tag; this module is the single
+registry mapping tag → kind (protocol vs control), allowed direction,
+and payload shape class.  Production protocol code
+(``runtime/transport.py``, ``core/tree.py``, ``serving/engine.py``)
+imports the tag CONSTANTS from here; the static wire pass
+(:mod:`.wire`) verifies no call site uses an unregistered tag; and the
+opt-in runtime conformance mode (:func:`validate`, enabled via
+:func:`set_conformance` or ``REPRO_WIRE_CONFORMANCE=1``) validates
+payloads at ship time.
+
+This module must stay import-light (no numpy/jax): the transport
+imports it on its hot path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+# frame kinds — canonical here; runtime/transport.py re-exports them
+KIND_PROTO = 0          # protocol message: enters the wire-byte ledger
+KIND_CTRL = 1           # runtime control: real socket traffic, never
+                        # ledger bytes
+
+
+class WireSchemaError(ValueError):
+    """A frame violates the registered schema (unregistered tag, wrong
+    kind, wrong direction, or a payload of the wrong shape class)."""
+
+
+# payload shape classes
+P_NONE = "none"         # payload is None
+P_STR = "str"           # a plain string (the error frame)
+P_ARRAY = "array"       # a tensor (numpy/jax duck-typed)
+P_DICT = "dict"         # a dict carrying at least the required keys
+P_ANY = "any"           # unconstrained
+
+# directions (src role -> dst role; every tag in this protocol is
+# asymmetric — the guest orchestrates, hosts answer)
+G2H = "g2h"
+H2G = "h2g"
+
+
+@dataclasses.dataclass(frozen=True)
+class WireTag:
+    tag: str
+    kind: int
+    direction: str
+    payload: str
+    requires: frozenset = frozenset()
+
+
+# -- protocol tags (KIND_PROTO: ledger bytes) -------------------------------
+ENC_GH = "enc_gh"               # encrypted g/h broadcast (tree boundary)
+ASSIGN_SYNC = "assign_sync"     # one layer plan per host
+SPLIT_INFOS = "split_infos"     # one candidate stack reply per host
+CHOSEN_SID = "chosen_sid"       # the committed split id + instance space
+ASSIGN_MASK = "assign_mask"     # host's go-left bitmask reply
+PREDICT_REQ = "predict_req"     # serving: instance ids for one batch
+PREDICT_BITS = "predict_bits"   # serving: packed decision bits reply
+
+# -- control tags (KIND_CTRL: never ledger bytes) ---------------------------
+HELLO = "hello"                 # host dial-in handshake
+ERROR = "error"                 # a peer's dying words
+SERVE_SETUP = "serve_setup"     # guest publishes bit-column key order
+SERVE_READY = "serve_ready"     # host finished its export/reload
+SERVE_DATA = "serve_data"       # out-of-band serving rows staging
+RESET_STATS = "reset_stats"     # refit: fresh Stats + accounting
+GET_STATS = "get_stats"         # stats request
+STATS = "stats"                 # stats reply
+STATUS = "status"               # live-introspection request
+STATUS_REPLY = "status_reply"   # live-introspection reply
+TRACE_SYNC = "trace_sync"       # trace collection round-trip (clock sync)
+TRACE_DUMP = "trace_dump"       # trace ring reply
+PING = "ping"                   # RTT probe
+PONG = "pong"                   # RTT echo
+HB = "hb"                       # supervisor heartbeat
+HB_ACK = "hb_ack"               # heartbeat ack (skimmed, clock sample)
+RESYNC = "resync"               # reconnect barrier request
+RESYNC_ACK = "resync_ack"       # reconnect barrier ack
+BYE = "bye"                     # orderly shutdown
+
+
+def _t(tag: str, kind: int, direction: str, payload: str,
+       requires: tuple = ()) -> WireTag:
+    return WireTag(tag, kind, direction, payload, frozenset(requires))
+
+
+REGISTRY: dict[str, WireTag] = {t.tag: t for t in (
+    _t(ENC_GH, KIND_PROTO, G2H, P_DICT,
+       ("tree", "seed", "forest", "codec", "cts")),
+    _t(ASSIGN_SYNC, KIND_PROTO, G2H, P_DICT,
+       ("tree", "node_of", "splittable", "modes")),
+    _t(SPLIT_INFOS, KIND_PROTO, H2G, P_DICT,
+       ("data", "sizes", "counts", "m")),
+    _t(CHOSEN_SID, KIND_PROTO, G2H, P_DICT, ("nid", "sid", "rows")),
+    _t(ASSIGN_MASK, KIND_PROTO, H2G, P_ARRAY),
+    _t(PREDICT_REQ, KIND_PROTO, G2H, P_DICT, ("ids", "n_pad")),
+    _t(PREDICT_BITS, KIND_PROTO, H2G, P_ARRAY),
+
+    _t(HELLO, KIND_CTRL, H2G, P_DICT, ("hid", "run_id", "resume")),
+    _t(ERROR, KIND_CTRL, H2G, P_STR),
+    _t(SERVE_SETUP, KIND_CTRL, G2H, P_DICT, ("keys",)),
+    _t(SERVE_READY, KIND_CTRL, H2G, P_DICT, ("k",)),
+    _t(SERVE_DATA, KIND_CTRL, G2H, P_DICT, ("X",)),
+    _t(RESET_STATS, KIND_CTRL, G2H, P_NONE),
+    _t(GET_STATS, KIND_CTRL, G2H, P_NONE),
+    _t(STATS, KIND_CTRL, H2G, P_DICT, ("stats", "ledger", "socket")),
+    _t(STATUS, KIND_CTRL, G2H, P_NONE),
+    _t(STATUS_REPLY, KIND_CTRL, H2G, P_DICT, ("hid", "stats")),
+    _t(TRACE_SYNC, KIND_CTRL, G2H, P_DICT, ("clear",)),
+    _t(TRACE_DUMP, KIND_CTRL, H2G, P_DICT,
+       ("hid", "clock", "events", "dropped")),
+    _t(PING, KIND_CTRL, G2H, P_DICT, ("t",)),
+    _t(PONG, KIND_CTRL, H2G, P_DICT, ("t",)),       # echo of ping
+    _t(HB, KIND_CTRL, G2H, P_DICT, ("t", "t_ns")),
+    _t(HB_ACK, KIND_CTRL, H2G, P_DICT, ("clock",)),
+    _t(RESYNC, KIND_CTRL, G2H, P_DICT, ("run",)),
+    _t(RESYNC_ACK, KIND_CTRL, H2G, P_DICT, ("run",)),  # echo of resync
+    _t(BYE, KIND_CTRL, G2H, P_NONE),
+)}
+
+PROTO_TAGS = frozenset(t for t, w in REGISTRY.items()
+                       if w.kind == KIND_PROTO)
+CTRL_TAGS = frozenset(t for t, w in REGISTRY.items()
+                      if w.kind == KIND_CTRL)
+
+
+# ---------------------------------------------------------------------------
+# runtime conformance mode (opt-in; validated at ship time)
+# ---------------------------------------------------------------------------
+
+_conformance = bool(int(os.environ.get("REPRO_WIRE_CONFORMANCE", "0") or 0))
+
+
+def set_conformance(on: bool) -> None:
+    """Toggle ship-time payload validation (process-wide)."""
+    global _conformance
+    _conformance = bool(on)
+
+
+def conformance_enabled() -> bool:
+    return _conformance
+
+
+def _role(party: str) -> str:
+    if party == "guest":
+        return "guest"
+    if isinstance(party, str) and party.startswith("host"):
+        return "host"
+    return "?"
+
+
+def validate(kind: int, src: str, dst: str, tag: str, payload) -> None:
+    """Raise :class:`WireSchemaError` unless (kind, src→dst, payload)
+    conforms to the registered schema for ``tag``.  Shape checks are
+    shallow (type + required keys) by design: conformance mode must
+    never perturb payload bytes or device placement."""
+    spec = REGISTRY.get(tag)
+    if spec is None:
+        raise WireSchemaError(f"unregistered wire tag {tag!r}")
+    if kind != spec.kind:
+        raise WireSchemaError(
+            f"{tag!r}: kind {kind} != registered "
+            f"{'PROTO' if spec.kind == KIND_PROTO else 'CTRL'}")
+    sr, dr = _role(src), _role(dst)
+    want_src, want_dst = (("guest", "host") if spec.direction == G2H
+                          else ("host", "guest"))
+    # src may be unknown at control_send sites on simulation channels;
+    # only flag a KNOWN role pointing the wrong way
+    if (sr not in ("?", want_src)) or (dr not in ("?", want_dst)):
+        raise WireSchemaError(
+            f"{tag!r}: direction {src!r}->{dst!r} violates registered "
+            f"{spec.direction}")
+    p = spec.payload
+    if p == P_NONE:
+        if payload is not None:
+            raise WireSchemaError(f"{tag!r}: payload must be None, got "
+                                  f"{type(payload).__name__}")
+    elif p == P_STR:
+        if not isinstance(payload, str):
+            raise WireSchemaError(f"{tag!r}: payload must be str, got "
+                                  f"{type(payload).__name__}")
+    elif p == P_ARRAY:
+        if not (hasattr(payload, "__array__")
+                or (hasattr(payload, "shape") and hasattr(payload, "dtype"))):
+            raise WireSchemaError(f"{tag!r}: payload must be a tensor, "
+                                  f"got {type(payload).__name__}")
+    elif p == P_DICT:
+        if not isinstance(payload, dict):
+            raise WireSchemaError(f"{tag!r}: payload must be dict, got "
+                                  f"{type(payload).__name__}")
+        missing = spec.requires - payload.keys()
+        if missing:
+            raise WireSchemaError(
+                f"{tag!r}: payload missing required keys "
+                f"{sorted(missing)}")

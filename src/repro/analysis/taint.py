@@ -1,0 +1,309 @@
+"""Secret-taint pass: declared sources → declared sinks, minus sanitizers.
+
+Flow-insensitive intra-procedural label propagation with per-function
+summaries iterated to a global fixpoint, so flows THROUGH helpers are
+seen (``f(g)`` where ``f`` forwards its argument to ``Channel.send``
+is a finding at the call site of ``f``).
+
+Labels are ``"secret"`` plus positional markers ``("p", i)``; a
+function's summary records which params reach its return value, whether
+the return is secret outright, and which params reach a sink
+(transitively).  Callee resolution is by last name segment against
+every function in the tree — several same-named candidates union their
+summaries, which over-approximates but never misses a registered flow.
+
+Precision decisions (documented, deliberate):
+
+* Secret sources are SCOPED: a parameter named ``h`` is a hessian in
+  ``core/*`` and a host handle in ``runtime/*`` — only the modules
+  declared in ``registry.TAINT_SOURCES`` seed those names.
+* Attribute reads taint only via declared attr names (``self.g``,
+  ``._lam``); object taint does not bleed through arbitrary attribute
+  access (``ctx.channel`` is not secret because ``ctx`` holds ``g``).
+* Calls to unknown functions propagate the union of their argument
+  labels (``jnp.exp(g)`` stays secret); a tiny allowlist of
+  size/predicate builtins (``len``, ``int``, …) returns clean so row
+  counts in payload dicts don't flag.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from . import astutil, registry
+from .report import Finding
+
+_CLEAN_BUILTINS = frozenset({
+    "len", "int", "bool", "str", "range", "isinstance", "hasattr",
+    "id", "repr", "type",
+})
+
+SECRET = "secret"
+
+
+class _Summary:
+    __slots__ = ("params", "returns_secret", "param_to_return",
+                 "param_to_sink")
+
+    def __init__(self, params):
+        self.params = params                # ordered param names
+        self.returns_secret = False
+        self.param_to_return = set()        # indices
+        self.param_to_sink = {}             # index -> sink callee name
+
+    def snapshot(self):
+        return (self.returns_secret, frozenset(self.param_to_return),
+                frozenset(self.param_to_sink))
+
+
+def _param_names(node) -> list:
+    a = node.args
+    names = [p.arg for p in (*a.posonlyargs, *a.args)]
+    # *args / keyword-only / **kwargs are not position-addressable in our
+    # summaries; taint through them falls back to the unknown-call rule.
+    return names
+
+
+def _source_scope(relpath: str):
+    """(params, attrs) seeded secret in this module, or (∅, ∅)."""
+    params, attrs = set(), set()
+    for grp in registry.TAINT_SOURCES:
+        if relpath in grp["modules"]:
+            params |= set(grp["params"])
+            attrs |= set(grp["attrs"])
+    return params, attrs
+
+
+class TaintPass:
+    def __init__(self, modules):
+        self.modules = modules
+        self.funcs = []                     # astutil.Func for every def
+        self.by_name = {}                   # last-name -> [Func]
+        self.sanitizers = set(registry.SANITIZER_NAMES)
+        self.sinks = {s["name"]: s for s in registry.TAINT_SINKS}
+        self.summaries = {}                 # id(node) -> _Summary
+        self.findings = []
+        self._seen = set()
+
+        for mod in modules:
+            astutil.link_parents(mod.tree)
+            for fn in astutil.index_funcs(mod):
+                self.funcs.append(fn)
+                self.by_name.setdefault(fn.node.name, []).append(fn)
+                if "declassifies" in astutil.decorator_names(fn.node):
+                    self.sanitizers.add(fn.node.name)
+                self.summaries[id(fn.node)] = _Summary(_param_names(fn.node))
+
+    # -- driving ------------------------------------------------------------
+
+    def run(self) -> list:
+        changed = True
+        rounds = 0
+        while changed and rounds < 32:      # summaries grow monotonically
+            changed = False
+            rounds += 1
+            for fn in self.funcs:
+                before = self.summaries[id(fn.node)].snapshot()
+                self._analyze(fn, emit=False)
+                if self.summaries[id(fn.node)].snapshot() != before:
+                    changed = True
+        for fn in self.funcs:               # final pass: emit findings
+            self._analyze(fn, emit=True)
+        return self.findings
+
+    # -- per-function analysis ---------------------------------------------
+
+    def _analyze(self, fn, emit: bool) -> None:
+        mod = fn.module
+        src_params, src_attrs = _source_scope(mod.relpath)
+        summ = self.summaries[id(fn.node)]
+        env = {}                            # var name -> set of labels
+        for i, p in enumerate(summ.params):
+            labels = {("p", i)}
+            if p in src_params:
+                labels.add(SECRET)
+            env[p] = labels
+
+        def expr_labels(node) -> set:
+            if node is None:
+                return set()
+            if isinstance(node, ast.Name):
+                return set(env.get(node.id, ()))
+            if isinstance(node, ast.Attribute):
+                if node.attr in registry.SECRET_KEY_ATTRS:
+                    return {SECRET}
+                if node.attr in src_attrs and isinstance(node.value, ast.Name):
+                    # self.g / ctx.h style reads in a source-scoped module
+                    return {SECRET}
+                return set()
+            if isinstance(node, ast.Call):
+                return call_labels(node)
+            if isinstance(node, ast.Constant):
+                return set()
+            # generic fallback: union over child expressions (covers
+            # BinOp, Subscript, Dict, List, comprehensions, IfExp, ...)
+            out = set()
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.expr):
+                    out |= expr_labels(child)
+                elif isinstance(child, (ast.comprehension, ast.keyword)):
+                    for sub in ast.iter_child_nodes(child):
+                        if isinstance(sub, ast.expr):
+                            out |= expr_labels(sub)
+            return out
+
+        def arg_exprs(call: ast.Call):
+            """Positional view of a call's args: (index, expr) plus
+            keyword name map."""
+            pos = list(enumerate(call.args))
+            kw = {k.arg: k.value for k in call.keywords if k.arg}
+            return pos, kw
+
+        def call_labels(call: ast.Call) -> set:
+            name = astutil.callee_name(call)
+            if name is None:
+                out = set()
+                for a in call.args:
+                    out |= expr_labels(a)
+                return out
+            check_sink(call, name)
+            if name in self.sanitizers:
+                return set()
+            if name in _CLEAN_BUILTINS and isinstance(call.func, ast.Name):
+                return set()
+            cands = self.by_name.get(name)
+            if not cands:
+                out = set()                 # unknown: propagate arg taint
+                for a in call.args:
+                    out |= expr_labels(a)
+                for k in call.keywords:
+                    out |= expr_labels(k.value)
+                return out
+            pos, kw = arg_exprs(call)
+            out = set()
+            bound = isinstance(call.func, ast.Attribute)
+            for cand in cands:
+                cs = self.summaries[id(cand.node)]
+                off = 1 if (bound and cand.cls is not None
+                            and cs.params[:1] == ["self"]) else 0
+                if cs.returns_secret:
+                    out.add(SECRET)
+                for i in cs.param_to_return:
+                    lab = labels_for_param(cs, i - off, pos, kw)
+                    out |= lab
+                # transitive param→sink: emit at THIS call site
+                for i, sink_name in cs.param_to_sink.items():
+                    lab = labels_for_param(cs, i - off, pos, kw)
+                    note_sink_hit(call, sink_name, lab,
+                                  pos[i - off][1] if 0 <= i - off < len(pos)
+                                  else call)
+            return out
+
+        def labels_for_param(cs, j, pos, kw) -> set:
+            if 0 <= j < len(pos):
+                return expr_labels(pos[j][1])
+            if 0 <= j < len(cs.params) and cs.params[j] in kw:
+                return expr_labels(kw[cs.params[j]])
+            return set()
+
+        def note_sink_hit(call, sink_name, labels, payload_expr):
+            if SECRET in labels:
+                report(call, sink_name, payload_expr)
+            for lab in labels:
+                if isinstance(lab, tuple):
+                    summ.param_to_sink.setdefault(lab[1], sink_name)
+
+        def check_sink(call: ast.Call, name: str) -> None:
+            sink = self.sinks.get(name)
+            if sink is None:
+                return
+            pos, kw = arg_exprs(call)
+            payload = None
+            if sink["kwarg"] in kw:
+                payload = kw[sink["kwarg"]]
+            elif sink["arg"] < len(pos):
+                payload = pos[sink["arg"]][1]
+            if payload is None:
+                return
+            note_sink_hit(call, name, expr_labels(payload), payload)
+
+        def report(call, sink_name, payload_expr) -> None:
+            if not emit:
+                return
+            try:
+                desc = ast.unparse(payload_expr)[:60]
+            except Exception:
+                desc = "<payload>"
+            f = Finding("taint", mod.relpath, fn.qualname,
+                        "unsanitized-flow",
+                        f"secret '{desc}' reaches sink {sink_name}()",
+                        getattr(call, "lineno", 0))
+            if f.fingerprint not in self._seen:
+                self._seen.add(f.fingerprint)
+                self.findings.append(f)
+
+        def bind(target, labels) -> None:
+            if isinstance(target, ast.Name):
+                env[target.id] = env.get(target.id, set()) | labels
+            elif isinstance(target, (ast.Tuple, ast.List)):
+                for t in target.elts:
+                    bind(t, labels)
+            elif isinstance(target, ast.Starred):
+                bind(target.value, labels)
+            # attribute/subscript targets: not tracked (declared attrs
+            # are seeded on READ; everything else is out of scope)
+
+        # flow-insensitive: sweep statements until the env stops growing
+        body = list(ast.walk(fn.node))
+        # exclude nested defs — they are analyzed as their own functions
+        nested = set()
+        for n in body:
+            if (isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and n is not fn.node):
+                for sub in ast.walk(n):
+                    nested.add(id(sub))
+                nested.discard(id(n))
+        stmts = [n for n in body if id(n) not in nested]
+
+        for _ in range(8):
+            size = sum(len(v) for v in env.values())
+            for n in stmts:
+                if isinstance(n, ast.Assign):
+                    lab = expr_labels(n.value)
+                    for t in n.targets:
+                        bind(t, lab)
+                elif isinstance(n, ast.AnnAssign) and n.value is not None:
+                    bind(n.target, expr_labels(n.value))
+                elif isinstance(n, ast.AugAssign):
+                    bind(n.target, expr_labels(n.value))
+                elif isinstance(n, (ast.For, ast.AsyncFor)):
+                    bind(n.target, expr_labels(n.iter))
+                elif isinstance(n, ast.withitem) and n.optional_vars:
+                    bind(n.optional_vars, expr_labels(n.context_expr))
+                elif isinstance(n, ast.NamedExpr):
+                    bind(n.target, expr_labels(n.value))
+            if sum(len(v) for v in env.values()) == size:
+                break
+
+        # one evaluation sweep over every expression statement/call so
+        # sink checks fire even outside assignments
+        for n in stmts:
+            if isinstance(n, ast.Call):
+                call_labels(n)
+
+        # returns → summary
+        for n in stmts:
+            if isinstance(n, ast.Return) and n.value is not None:
+                lab = expr_labels(n.value)
+                if SECRET in lab:
+                    summ.returns_secret = True
+                for item in lab:
+                    if isinstance(item, tuple):
+                        summ.param_to_return.add(item[1])
+        if fn.node.name in self.sanitizers:
+            summ.returns_secret = False
+            summ.param_to_return.clear()
+
+
+def run(modules) -> list:
+    return TaintPass(modules).run()

@@ -1,0 +1,176 @@
+"""Wire-schema pass: every tag at every send/recv site must resolve to
+the registry in :mod:`.schema`.
+
+Three site classes are checked:
+
+* **call sites** — ``send``/``control_send``/``recv``/``deliver``/… with
+  the tag at a known argument position (or keyword, for ``pop``/
+  ``drain``).  A string literal must be registered; an UPPER-case
+  constant must resolve to a registered tag through the schema module's
+  namespace; anything else is a *dynamic* tag, legal only inside the
+  declared generic-plumbing functions (``registry.GENERIC_TAG_SITES``).
+* **comparisons** — ``tag == X`` / ``ftag in (X, Y)`` where the literal
+  side must be registered (a typo'd tag in a dispatch condition is dead
+  protocol code, which is exactly the bug class this catches).
+* **dict dispatch** — ``{X: handler, ...}[tag]`` keys must be
+  registered.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from . import astutil, registry, schema
+from .report import Finding
+
+# callee name -> 0-based positional index of the tag argument
+TAG_CALLS = {
+    "send": 2, "control_send": 1, "recv": 1, "control_recv": 1,
+    "deliver": 0, "collect": 0, "_reply": 0, "pending": 0,
+}
+# callee name -> keyword that names the tag
+TAG_KWARGS = {"pop": "tag", "drain": "until_ctrl"}
+
+# schema-module constant name -> tag string (only registered tags)
+CONST_MAP = {
+    name: val for name, val in vars(schema).items()
+    if name.isupper() and isinstance(val, str) and val in schema.REGISTRY
+}
+
+
+def _const_ref(node: ast.AST) -> str | None:
+    """UPPER-case constant reference name, if the node is one."""
+    name = None
+    if isinstance(node, ast.Attribute):
+        name = node.attr
+    elif isinstance(node, ast.Name):
+        name = node.id
+    if name and name.isupper():
+        return name
+    return None
+
+
+class WirePass:
+    def __init__(self, modules):
+        self.modules = modules
+        self.findings = []
+        self._seen = set()
+
+    def run(self) -> list:
+        for mod in self.modules:
+            astutil.link_parents(mod.tree)
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Call):
+                    self._check_call(mod, node)
+                elif isinstance(node, ast.Compare):
+                    self._check_compare(mod, node)
+                elif isinstance(node, ast.Subscript):
+                    self._check_dispatch(mod, node)
+        return self.findings
+
+    # -- helpers ------------------------------------------------------------
+
+    def _qual(self, node) -> str:
+        fn = astutil.enclosing_func(node)
+        if fn is None:
+            return ""
+        cls = astutil.enclosing_class(fn)
+        return f"{cls.name}.{fn.name}" if cls else fn.name
+
+    def _emit(self, mod, node, rule, detail) -> None:
+        f = Finding("wire", mod.relpath, self._qual(node), rule, detail,
+                    getattr(node, "lineno", 0))
+        if f.fingerprint not in self._seen:
+            self._seen.add(f.fingerprint)
+            self.findings.append(f)
+
+    def _check_tag_expr(self, mod, call, callee, tag_expr) -> None:
+        lit = astutil.const_str(tag_expr)
+        if lit is not None:
+            if lit not in schema.REGISTRY:
+                self._emit(mod, call, "unregistered-tag",
+                           f"literal tag '{lit}' at {callee}() is not in "
+                           f"the schema registry")
+            return
+        ref = _const_ref(tag_expr)
+        if ref is not None:
+            if ref not in CONST_MAP:
+                self._emit(mod, call, "unknown-tag-constant",
+                           f"constant {ref} at {callee}() does not resolve "
+                           f"to a registered tag")
+            return
+        if self._qual(call) not in registry.GENERIC_TAG_SITES:
+            self._emit(mod, call, "dynamic-tag",
+                       f"non-literal tag at {callee}() outside declared "
+                       f"generic plumbing")
+
+    # -- site classes -------------------------------------------------------
+
+    def _check_call(self, mod, call: ast.Call) -> None:
+        name = astutil.callee_name(call)
+        if name in TAG_CALLS:
+            idx = TAG_CALLS[name]
+            if idx < len(call.args):
+                self._check_tag_expr(mod, call, name, call.args[idx])
+        elif name in TAG_KWARGS:
+            kw = TAG_KWARGS[name]
+            for k in call.keywords:
+                if k.arg != kw:
+                    continue
+                if isinstance(k.value, ast.Constant) and k.value.value is None:
+                    break                   # tag=None means "any frame"
+                self._check_tag_expr(mod, call, name, k.value)
+                break
+
+    def _is_tag_var(self, node) -> bool:
+        return (isinstance(node, ast.Name)
+                and node.id in registry.TAG_VAR_NAMES) or \
+               (isinstance(node, ast.Attribute)
+                and node.attr in registry.TAG_VAR_NAMES)
+
+    def _check_literals(self, mod, node, side) -> None:
+        exprs = side.elts if isinstance(side, (ast.Tuple, ast.List,
+                                               ast.Set)) else [side]
+        for e in exprs:
+            lit = astutil.const_str(e)
+            if lit is not None and lit not in schema.REGISTRY:
+                self._emit(mod, node, "unregistered-tag",
+                           f"tag compared against unregistered literal "
+                           f"'{lit}'")
+            else:
+                ref = _const_ref(e)
+                if ref is not None and ref not in CONST_MAP:
+                    self._emit(mod, node, "unknown-tag-constant",
+                               f"tag compared against unknown constant "
+                               f"{ref}")
+
+    def _check_compare(self, mod, node: ast.Compare) -> None:
+        sides = [node.left, *node.comparators]
+        if not any(self._is_tag_var(s) for s in sides):
+            return
+        for s in sides:
+            if not self._is_tag_var(s):
+                self._check_literals(mod, node, s)
+
+    def _check_dispatch(self, mod, node: ast.Subscript) -> None:
+        if not (isinstance(node.value, ast.Dict)
+                and self._is_tag_var(node.slice)):
+            return
+        for key in node.value.keys:
+            if key is None:
+                continue
+            lit = astutil.const_str(key)
+            if lit is not None and lit not in schema.REGISTRY:
+                self._emit(mod, node, "unregistered-tag",
+                           f"dispatch table key '{lit}' is not a "
+                           f"registered tag")
+            else:
+                ref = _const_ref(key)
+                if ref is not None and ref not in CONST_MAP:
+                    self._emit(mod, node, "unknown-tag-constant",
+                               f"dispatch table key {ref} does not resolve "
+                               f"to a registered tag")
+
+
+def run(modules) -> list:
+    return WirePass(modules).run()

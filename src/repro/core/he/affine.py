@@ -28,6 +28,7 @@ import random as _random
 import jax.numpy as jnp
 import numpy as np
 
+from ...analysis.registry import declassifies
 from . import limbs
 
 
@@ -61,6 +62,7 @@ class AffineCipher:
                 return cls(n, a, hist_headroom_limbs)
 
     # -- guest ---------------------------------------------------------
+    @declassifies("affine-scheme encryption: ciphertext limbs only")
     def encrypt_limbs(self, x):
         """x: (..., Lp) plaintext limbs with value < n -> ciphertext (..., Ln)."""
         L = x.shape[-1]
@@ -74,6 +76,7 @@ class AffineCipher:
             raise ValueError("plaintext out of range (>= modulus n)")
         return limbs.mod_mul_fixed(x, self.T_enc, self.bctx)
 
+    @declassifies("affine-scheme encryption: ciphertext limbs only")
     def encrypt_ints(self, xs) -> jnp.ndarray:
         return self.encrypt_limbs(jnp.asarray(limbs.from_pyints(list(xs), self.Ln)))
 

@@ -17,6 +17,8 @@ import random as _random
 
 import numpy as np
 
+from ...analysis.registry import declassifies
+
 _SMALL_PRIMES = [3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59,
                  61, 67, 71, 73, 79, 83, 89, 97]
 
@@ -78,6 +80,7 @@ class PaillierCipher:
         return (x - 1) // self.n
 
     # -- guest ---------------------------------------------------------
+    @declassifies("Paillier encryption: semantically secure ciphertexts")
     def encrypt_ints(self, xs) -> np.ndarray:
         # materialize once: len(list(xs)) on a generator would exhaust it,
         # leaving the enumerate below a None-filled object array

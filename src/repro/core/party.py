@@ -212,7 +212,16 @@ class Channel:
     ledger: device collectives (the frontier engine's lazy-limb psum over
     the "data" mesh axis, DESIGN.md §7) never cross a party boundary, so
     they must not inflate the protocol's wire-byte accounting — but they
-    are real interconnect traffic worth reporting for the scaling story."""
+    are real interconnect traffic worth reporting for the scaling story.
+
+    Every ``send``/``recv`` tag must be a registered wire tag
+    (``analysis/schema.py``, statically checked by
+    ``python -m repro.analysis``); the transport layer additionally
+    validates payload shapes at ship time when conformance mode is on
+    (``analysis.schema.set_conformance`` / ``REPRO_WIRE_CONFORMANCE=1``).
+    ``send`` payloads are a declared taint sink: anything secret
+    (plaintext g/h, labels, private-key material) must pass a
+    ``@declassifies`` sanitizer before reaching one."""
 
     def __init__(self):
         self.ledger = []

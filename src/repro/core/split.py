@@ -12,6 +12,8 @@ import dataclasses
 
 import numpy as np
 
+from ..analysis.registry import declassifies
+
 
 @dataclasses.dataclass
 class SplitCandidates:
@@ -33,6 +35,8 @@ class BestSplit:
     cnt_l: int
 
 
+@declassifies("aggregate leaf statistic: part of the model the protocol "
+              "discloses to every party by design")
 def leaf_weight(G, H, lam: float, learning_rate: float = 1.0):
     """eq 7 / eq 18 (vector form), scaled by the learning rate."""
     return -learning_rate * np.asarray(G) / (np.asarray(H) + lam)
@@ -62,6 +66,8 @@ def split_gains(g_l, h_l, G_tot, H_tot, lam: float):
     return 0.5 * (term(g_l, h_l) + term(g_r, h_r) - parent)
 
 
+@declassifies("the split decision (gain arg-max) the protocol reveals to "
+              "every party by design")
 def find_best_split(cands: list[SplitCandidates], G_tot, H_tot, n_tot: int,
                     lam: float, min_leaf: int = 1,
                     min_gain: float = 1e-6) -> BestSplit | None:

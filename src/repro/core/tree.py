@@ -52,6 +52,7 @@ from typing import Callable
 
 import numpy as np
 
+from ..analysis import schema as wire
 from . import compress as compress_mod
 from . import encoding, mo_encoding
 from .binning import BinnedData
@@ -257,9 +258,9 @@ class HostRuntime:
         self.channel, self.stats = channel, stats
 
     def deliver(self, tag: str, payload) -> None:
-        {"enc_gh": self.begin_tree,
-         "assign_sync": self.on_assign_sync,
-         "chosen_sid": self.on_chosen_sid}[tag](payload)
+        {wire.ENC_GH: self.begin_tree,
+         wire.ASSIGN_SYNC: self.on_assign_sync,
+         wire.CHOSEN_SID: self.on_chosen_sid}[tag](payload)
 
     def collect(self, tag: str):
         """Pop the pending reply the last handler emitted for ``tag``."""
@@ -431,7 +432,7 @@ class HostRuntime:
         counts_all = np.concatenate(counts_l)
         M = m * len(splittable)
 
-        wire = ct_wire_bytes(cipher)
+        ct_bytes = ct_wire_bytes(cipher)
         use_compress = (p.compression and codec.compressible
                         and codec.eta_s > 1)
         if use_compress:
@@ -445,14 +446,14 @@ class HostRuntime:
             self.stats.n_hom_add += int(np.sum(sizes - 1))
             payload = {"data": pkgs, "sizes": sizes, "counts": counts_all,
                        "m": m}
-            nbytes = n_pkgs * wire + M * 8
+            nbytes = n_pkgs * ct_bytes + M * 8
             self.stats.n_packages += n_pkgs
         else:
             payload = {"data": flat_all, "sizes": None, "counts": counts_all,
                        "m": m}
-            nbytes = M * n_slots * wire + M * 8
+            nbytes = M * n_slots * ct_bytes + M * 8
             self.stats.n_packages += M * n_slots
-        self._reply("split_infos", payload, nbytes)
+        self._reply(wire.SPLIT_INFOS, payload, nbytes)
         self.channel.tracer.complete(
             "host_layer", int(t0_host * 1e9),
             int((time.perf_counter() - t0_host) * 1e9),
@@ -474,7 +475,7 @@ class HostRuntime:
             m, loc = divmod(nid, GID_STRIDE)
             self.table_sinks.setdefault(m, {})[loc] = (fid, bid)
         go_left = self.data.bins[rows, fid] <= bid
-        self._reply("assign_mask", go_left, (len(go_left) + 7) // 8)
+        self._reply(wire.ASSIGN_MASK, go_left, (len(go_left) + 7) // 8)
 
 
 @dataclasses.dataclass
@@ -575,9 +576,9 @@ def _encrypt_all(ctx: TreeContext, g_sel: np.ndarray,
                "codec": codec_view, "cts": cts}
     for host in ctx.hosts:
         host.bind(ctx.params, ctx.cipher, ctx.channel, ctx.stats)
-        ctx.channel.send("guest", f"host{host.hid}", "enc_gh", payload,
+        ctx.channel.send("guest", f"host{host.hid}", wire.ENC_GH, payload,
                          nbytes)
-        host.deliver("enc_gh", payload)
+        host.deliver(wire.ENC_GH, payload)
     ctx.enc_shipped = True
 
 
@@ -649,9 +650,9 @@ def _encrypt_all_chunked(ctx: TreeContext, g_sel: np.ndarray,
                    "sel_rows": sel_rows[lo:hi], "cts": cts_u8}
         nbytes = r * s * wire_ct + r * 4
         for host in ctx.hosts:
-            ctx.channel.send("guest", f"host{host.hid}", "enc_gh", payload,
+            ctx.channel.send("guest", f"host{host.hid}", wire.ENC_GH, payload,
                              nbytes)
-            host.deliver("enc_gh", payload)
+            host.deliver(wire.ENC_GH, payload)
     ctx.enc_shipped = True
 
 
@@ -928,9 +929,9 @@ def grow_tree(ctx: TreeContext,
                     "modes": [(nid,) + tuple(hist_mode[nid])
                               for nid in splittable]}
             for h in active_hosts:
-                ctx.channel.send("guest", f"host{h.hid}", "assign_sync",
+                ctx.channel.send("guest", f"host{h.hid}", wire.ASSIGN_SYNC,
                                  plan, node_of.size * 4)
-                h.deliver("assign_sync", plan)
+                h.deliver(wire.ASSIGN_SYNC, plan)
         if splittable:
             t1 = time.perf_counter()
             if pre_cands is not None:
@@ -940,7 +941,7 @@ def grow_tree(ctx: TreeContext,
                     ctx, guest_frontier, splittable, rows_sel, hist_mode)
             t2 = time.perf_counter()
             for h in active_hosts:
-                pend = h.collect("split_infos")
+                pend = h.collect(wire.SPLIT_INFOS)
                 ctx.stats.n_split_roundtrips += 1
                 host_cands[h.hid] = _host_layer_finish(ctx, h.hid,
                                                        splittable, pend)
@@ -1004,10 +1005,10 @@ def grow_tree(ctx: TreeContext,
                 # a subset of the ascending ra, so no second message
                 host = next(h for h in ctx.hosts if h.hid == best.party)
                 msg = {"nid": nid, "sid": best.sid, "rows": ra}
-                ctx.channel.send("guest", f"host{host.hid}", "chosen_sid",
+                ctx.channel.send("guest", f"host{host.hid}", wire.CHOSEN_SID,
                                  msg, 8 + 4 * len(ra))
-                host.deliver("chosen_sid", msg)
-                go_left = np.asarray(host.collect("assign_mask"), bool)
+                host.deliver(wire.CHOSEN_SID, msg)
+                go_left = np.asarray(host.collect(wire.ASSIGN_MASK), bool)
                 go_left_sel = go_left[np.searchsorted(ra, fsel)]
                 node.party, node.sid = host.hid, best.sid
             node.gain = best.gain
@@ -1167,9 +1168,9 @@ def grow_forest(ctx: TreeContext, bags: list,
                     "modes": [(gid,) + tuple(hist_mode[gid])
                               for gid in splittable]}
             for h in active_hosts:
-                ctx.channel.send("guest", f"host{h.hid}", "assign_sync",
+                ctx.channel.send("guest", f"host{h.hid}", wire.ASSIGN_SYNC,
                                  plan, node_of.size * 4)
-                h.deliver("assign_sync", plan)
+                h.deliver(wire.ASSIGN_SYNC, plan)
         if splittable:
             t1 = time.perf_counter()
             if pre_cands is not None:
@@ -1179,7 +1180,7 @@ def grow_forest(ctx: TreeContext, bags: list,
                     ctx, guest_frontier, splittable, rows_sel, hist_mode)
             t2 = time.perf_counter()
             for h in active_hosts:
-                pend = h.collect("split_infos")
+                pend = h.collect(wire.SPLIT_INFOS)
                 ctx.stats.n_split_roundtrips += 1
                 host_cands[h.hid] = _host_layer_finish(ctx, h.hid,
                                                        splittable, pend)
@@ -1234,10 +1235,10 @@ def grow_forest(ctx: TreeContext, bags: list,
             else:
                 host = next(h for h in ctx.hosts if h.hid == best.party)
                 msg = {"nid": gid, "sid": best.sid, "rows": ra}
-                ctx.channel.send("guest", f"host{host.hid}", "chosen_sid",
+                ctx.channel.send("guest", f"host{host.hid}", wire.CHOSEN_SID,
                                  msg, 8 + 4 * len(ra))
-                host.deliver("chosen_sid", msg)
-                go_left = np.asarray(host.collect("assign_mask"), bool)
+                host.deliver(wire.CHOSEN_SID, msg)
+                go_left = np.asarray(host.collect(wire.ASSIGN_MASK), bool)
                 go_left_sel = go_left[np.searchsorted(ra, fsel)]
                 node.party, node.sid = host.hid, best.sid
             node.gain = best.gain

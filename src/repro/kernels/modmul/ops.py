@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from ...analysis.registry import declassifies
 from ...core.he import limbs
 from ..common import round_up
 from .modmul import mul_fixed_pallas
@@ -112,6 +113,7 @@ def _mesh_active(mesh) -> bool:
     return mesh is not None and mesh.devices.size > 1
 
 
+@declassifies("kernelized affine encryption: ciphertext limbs only")
 def encrypt_batch(cipher, plaintext_limbs, interpret: bool | None = None,
                   mesh=None, out_width: int | None = None):
     """Kernelized affine encryption of a (N, ..., Lp) plaintext batch.

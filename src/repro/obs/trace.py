@@ -116,7 +116,8 @@ class Tracer:
             return self._emitted - len(self._events)
 
     def __len__(self) -> int:
-        return len(self._events)
+        with self._lock:
+            return len(self._events)
 
     def export_events(self) -> list:
         """Codec-serializable snapshot: list of 7-element lists."""

@@ -39,6 +39,7 @@ import os
 import random
 import time
 
+from ..analysis import schema as wire
 from ..obs import trace as obs_trace
 from .transport import TransportError, peek_frame_header
 
@@ -152,10 +153,10 @@ class FaultyEndpoint:
             tag = "?"                   # frame: count it, match nothing
         key = (direction, tag)
         self.counts[key] = self.counts.get(key, 0) + 1
-        if tag == "enc_gh":
+        if tag == wire.ENC_GH:
             self.tree += 1
             self.layer = -1
-        elif tag == "assign_sync":
+        elif tag == wire.ASSIGN_SYNC:
             self.layer += 1
         return tag, self.counts[key]
 

@@ -47,14 +47,12 @@ from collections import Counter, deque
 
 import numpy as np
 
+from ..analysis import schema as wire
+from ..analysis.schema import KIND_CTRL, KIND_PROTO, WireSchemaError
 from ..core.party import Channel, Stats
 from ..obs import trace as obs_trace
 from ..obs.metrics import MetricsRegistry
 from ..obs.trace import NULL_TRACER, Tracer
-
-KIND_PROTO = 0          # protocol message: enters the wire-byte ledger
-KIND_CTRL = 1           # runtime control (hello/serve_setup/stats/bye):
-                        # real socket traffic, never ledger bytes
 
 _U32 = struct.Struct("!I")
 _I64 = struct.Struct("!q")
@@ -84,6 +82,18 @@ class RemoteError(TransportError):
 # claiming more than this is a corrupt/hostile length prefix — refusing
 # it bounds what a single bad u32 can make us allocate
 MAX_FRAME_BYTES = 1 << 30
+
+
+def conformance_check(kind, src, dst, tag, payload) -> None:
+    """Opt-in ship-time schema validation (``wire.set_conformance(True)``
+    or ``REPRO_WIRE_CONFORMANCE=1``).  A violation is a transport-layer
+    refusal — the frame never reaches the socket."""
+    if not wire.conformance_enabled():
+        return
+    try:
+        wire.validate(kind, src, dst, tag, payload)
+    except WireSchemaError as e:
+        raise TransportError(f"wire schema violation: {e}") from e
 
 
 # ---------------------------------------------------------------------------
@@ -649,6 +659,7 @@ class TransportChannel(Channel):
         ep = self.peers.get(dst)
         if ep is None:
             raise TransportError(f"{self.party}: no endpoint for {dst!r}")
+        conformance_check(kind, src, dst, tag, payload)
         # broadcast memo: the guest sends the SAME payload object to every
         # host back to back (enc_gh ciphertext batch, layer plans) — encode
         # it once, not once per destination (the enc_gh encode includes a
@@ -695,7 +706,7 @@ class TransportChannel(Channel):
                                 seq=int(seq), nbytes=len(frame) + 4)
         if self.on_rtt is not None and kind == KIND_PROTO:
             self.on_rtt(fsrc, tag, time.perf_counter() - t0)
-        if kind == KIND_CTRL and tag == "error":
+        if kind == KIND_CTRL and tag == wire.ERROR:
             # a peer's dying words: surface its actual failure instead
             # of a tag mismatch now / 'peer closed' later
             raise RemoteError(f"peer {fsrc} failed: {payload}")
@@ -708,7 +719,7 @@ class TransportChannel(Channel):
                 # once; and — except for enc_gh, the idempotent tree
                 # replay anchor — not re-delivered either, or a
                 # duplicated chosen_sid would corrupt the frontier.
-                if tag != "enc_gh":
+                if tag != wire.ENC_GH:
                     return None
             else:
                 self.last_seen[(fsrc, tag)] = seq
@@ -875,8 +886,9 @@ class TransportChannel(Channel):
                 break
             frame = ep.recv_bytes(timeout)
             kind, _, _, tag, _, _, payload = decode_frame(frame)
-            self.rx_bytes[tag] += len(frame) + 4
-            if kind == KIND_CTRL and tag == "error":
+            with self._mirror_lock:
+                self.rx_bytes[tag] += len(frame) + 4
+            if kind == KIND_CTRL and tag == wire.ERROR:
                 raise TransportError(f"peer {src} failed: {payload}")
             if kind == KIND_CTRL and tag == until_ctrl:
                 break
@@ -886,24 +898,28 @@ class TransportChannel(Channel):
     # -- socket accounting ---------------------------------------------
     def reset_accounting(self) -> None:
         super().reset_accounting()
-        self.tx_bytes.clear()
-        self.rx_bytes.clear()
+        with self._mirror_lock:
+            self.tx_bytes.clear()
+            self.rx_bytes.clear()
         self.send_seq.clear()
         self.last_seen.clear()
         self.metrics.clear()        # per-fit, like the byte counters
 
     @property
     def total_tx_bytes(self) -> int:
-        return sum(self.tx_bytes.values())
+        with self._mirror_lock:
+            return sum(self.tx_bytes.values())
 
     @property
     def total_rx_bytes(self) -> int:
-        return sum(self.rx_bytes.values())
+        with self._mirror_lock:
+            return sum(self.rx_bytes.values())
 
     def socket_summary(self) -> dict:
-        tags = sorted(set(self.tx_bytes) | set(self.rx_bytes))
-        return {t: {"tx": self.tx_bytes[t], "rx": self.rx_bytes[t]}
-                for t in tags}
+        with self._mirror_lock:
+            tags = sorted(set(self.tx_bytes) | set(self.rx_bytes))
+            return {t: {"tx": self.tx_bytes[t], "rx": self.rx_bytes[t]}
+                    for t in tags}
 
     def close(self) -> None:
         self.stop_broker()
@@ -957,7 +973,7 @@ class RemoteServingHost:
         self.serve_timeout = serve_timeout
 
     def predict_bits(self):
-        return self.channel.recv(f"host{self.hid}", "predict_bits",
+        return self.channel.recv(f"host{self.hid}", wire.PREDICT_BITS,
                                  self.serve_timeout)
 
 
@@ -1134,7 +1150,7 @@ class PartyProcess:
                 # on the guest's next recv
                 try:
                     self.channel.control_send(
-                        "guest", "error",
+                        "guest", wire.ERROR,
                         f"host{self.hid} {type(e).__name__}: {e}")
                 except Exception:              # noqa: BLE001
                     pass
@@ -1158,9 +1174,9 @@ class PartyProcess:
     def _handle(self, kind: int, tag: str, payload) -> bool:
         if kind == KIND_CTRL:
             return self._control(tag, payload)
-        if tag == "enc_gh":
+        if tag == wire.ENC_GH:
             self._begin_tree(payload)
-        elif tag in ("assign_sync", "chosen_sid"):
+        elif tag in (wire.ASSIGN_SYNC, wire.CHOSEN_SID):
             tree = (payload.get("tree") if isinstance(payload, dict)
                     else None)
             if (tree is not None and self._current_tree is not None
@@ -1170,7 +1186,7 @@ class PartyProcess:
                 self._activate_tree(int(tree))
             self.hr.deliver(tag, payload)
             self.hr._outbox.clear()     # replies already shipped
-        elif tag == "predict_req":
+        elif tag == wire.PREDICT_REQ:
             self._predict(payload)
         else:
             raise TransportError(f"host{self.hid}: unknown protocol tag "
@@ -1206,7 +1222,7 @@ class PartyProcess:
                                  stats=self.stats, tracer=self.tracer)
         hr = HostRuntime(hid=self.hid, data=self.data, engine=engine)
         hr.bind(self.params, self.cipher, self.channel, self.stats)
-        hr.deliver("enc_gh", payload)
+        hr.deliver(wire.ENC_GH, payload)
         if k > 1:
             sinks = {m: {} for m in range(k)}
             hr.table_sinks = sinks
@@ -1229,9 +1245,9 @@ class PartyProcess:
             # re-delivery after a replay restart (the replay anchor
             # re-ships from blk 0): drop it.
             if self._staged.staged(tree):
-                self._staged.peek(tree).deliver("enc_gh", payload)
+                self._staged.peek(tree).deliver(wire.ENC_GH, payload)
             elif self._current_tree == tree and self.hr is not None:
-                self.hr.deliver("enc_gh", payload)
+                self.hr.deliver(wire.ENC_GH, payload)
             return
         if (getattr(self.params, "pipeline", False)
                 and self._current_tree is not None
@@ -1301,7 +1317,7 @@ class PartyProcess:
         self.server = (PartyBits(half.table, half.thresholds, half.n_bins,
                                  use_pallas)
                        if half.table.k else None)
-        self.channel.control_send("guest", "serve_ready",
+        self.channel.control_send("guest", wire.SERVE_READY,
                                   {"k": self._serve_k})
 
     def _predict(self, req) -> None:
@@ -1321,7 +1337,7 @@ class PartyProcess:
         # round-trips are counted ONCE, at the guest's collect site (the
         # same place the in-process engine counts them) — not here, or
         # merged_stats would double-count every batch
-        self.channel.send(f"host{self.hid}", "guest", "predict_bits", pb,
+        self.channel.send(f"host{self.hid}", "guest", wire.PREDICT_BITS, pb,
                           self._serve_k * ((n + 7) // 8))
 
     # -- introspection --------------------------------------------------
@@ -1345,46 +1361,46 @@ class PartyProcess:
 
     # -- control --------------------------------------------------------
     def _control(self, tag: str, payload) -> bool:
-        if tag == "serve_setup":
+        if tag == wire.SERVE_SETUP:
             self._serve_setup(payload)
-        elif tag == "serve_data":
+        elif tag == wire.SERVE_DATA:
             # out-of-band data staging: in a real deployment each party
             # pulls the batch's rows from its OWN source; the control
             # plane simulates that arrival.  predict_req still carries
             # only instance ids.
             self.X_serve = np.asarray(payload["X"])
-        elif tag == "reset_stats":
+        elif tag == wire.RESET_STATS:
             # a refit starts: fresh Stats (the next enc_gh's engine binds
             # to it) and fresh per-fit wire accounting, mirroring the
             # fresh model the guest constructs
             self.stats = Stats()
             self.channel.reset_accounting()
             self.tracer.clear()     # per-fit, like the ledger
-        elif tag == "get_stats":
+        elif tag == wire.GET_STATS:
             self.channel.control_send(
-                "guest", "stats",
+                "guest", wire.STATS,
                 {"stats": self.stats.as_dict(),
                  "ledger": self.channel.summary(),
                  "socket": self.channel.socket_summary()})
-        elif tag == "status":
-            self.channel.control_send("guest", "status_reply",
+        elif tag == wire.STATUS:
+            self.channel.control_send("guest", wire.STATUS_REPLY,
                                       self.status())
-        elif tag == "trace_sync":
+        elif tag == wire.TRACE_SYNC:
             # ship this party's trace ring to the guest, stamped with our
             # perf_counter_ns clock: the guest's send/recv times around
             # this round-trip give one NTP-style offset sample (min-RTT
             # across these + heartbeat samples wins, obs/export.py)
             self.channel.control_send(
-                "guest", "trace_dump",
+                "guest", wire.TRACE_DUMP,
                 {"hid": self.hid,
                  "clock": time.perf_counter_ns(),
                  "events": self.tracer.export_events(),
                  "dropped": int(self.tracer.dropped)})
             if isinstance(payload, dict) and payload.get("clear"):
                 self.tracer.clear()
-        elif tag == "ping":
-            self.channel.control_send("guest", "pong", payload)
-        elif tag == "hb":
+        elif tag == wire.PING:
+            self.channel.control_send("guest", wire.PONG, payload)
+        elif tag == wire.HB:
             # liveness probe from the guest's supervisor thread: the ack
             # is skimmed by the guest's recv loop, never blocking the
             # protocol (a wedged host simply never reaches this branch).
@@ -1392,14 +1408,14 @@ class PartyProcess:
             # a free clock-offset sample for trace merging.
             ack = dict(payload) if isinstance(payload, dict) else {}
             ack["clock"] = time.perf_counter_ns()
-            self.channel.control_send("guest", "hb_ack", ack)
-        elif tag == "resync":
+            self.channel.control_send("guest", wire.HB_ACK, ack)
+        elif tag == wire.RESYNC:
             # reconnect barrier: by the time this frame is processed,
             # every reply this host owed for earlier frames has already
             # been written to the stream (frames are handled in order) —
             # the guest drains until this ack and the stream is clean
-            self.channel.control_send("guest", "resync_ack", payload)
-        elif tag == "bye":
+            self.channel.control_send("guest", wire.RESYNC_ACK, payload)
+        elif tag == wire.BYE:
             return False
         else:
             raise TransportError(f"host{self.hid}: unknown control tag "
@@ -1460,7 +1476,7 @@ def host_main(port: int, hid: int, params, X_host,
             # broker poisoned on the dead endpoint.
             channel.start_broker("guest")
         channel.control_send(
-            "guest", "hello",
+            "guest", wire.HELLO,
             {"hid": hid, "run_id": run_id, "resume": pp.resume_info()})
         try:
             pp.serve_forever()
@@ -1631,7 +1647,7 @@ class MultiHostRun:
             except TransportError:
                 ep.close()
                 continue
-            if tag != "hello" or hello.get("run_id") != self.run_id:
+            if tag != wire.HELLO or hello.get("run_id") != self.run_id:
                 ep.close()          # stale dialer from a previous run
                 continue
             hid = int(hello["hid"])
@@ -1639,7 +1655,8 @@ class MultiHostRun:
             if old is not None:
                 old.close()
             self.channel.peers[f"host{hid}"] = ep
-            self.channel.rx_bytes["hello"] += len(frame) + 4
+            with self.channel._mirror_lock:
+                self.channel.rx_bytes[wire.HELLO] += len(frame) + 4
             self._host_resume[hid] = hello.get("resume") or {}
             want.discard(hid)
 
@@ -1690,10 +1707,10 @@ class MultiHostRun:
             for hid in range(self.n_hosts):
                 for attempt in (0, 1):
                     try:
-                        self.channel.control_send(f"host{hid}", "resync",
+                        self.channel.control_send(f"host{hid}", wire.RESYNC,
                                                   {"run": self.run_id})
                         self.channel.drain(f"host{hid}",
-                                           until_ctrl="resync_ack",
+                                           until_ctrl=wire.RESYNC_ACK,
                                            timeout=self.timeout)
                         break
                     except TransportError:
@@ -1744,7 +1761,7 @@ class MultiHostRun:
         self.channel.serving_mode = False
         self.channel.reset_accounting()
         for hid in range(self.n_hosts):
-            self.channel.control_send(f"host{hid}", "reset_stats", None)
+            self.channel.control_send(f"host{hid}", wire.RESET_STATS, None)
         model = VerticalBoosting(self.params)
         model.channel = self.channel
         model.remote_hosts = [RemoteHostHandle(self.channel, hid)
@@ -1832,7 +1849,7 @@ class MultiHostRun:
         host is marked (``slow_hosts``) but never restarted — restarting
         it would lose real progress for no correctness gain.  Only the
         liveness supervisor (no hb_ack at all) restarts a host."""
-        if tag != "split_infos":
+        if tag != wire.SPLIT_INFOS:
             return
         from .fault import StragglerPolicy
         pol = self._straggler.get(src)
@@ -1864,7 +1881,7 @@ class MultiHostRun:
         """Recv-loop hook: heartbeat acks arrive interleaved with
         protocol replies (the supervisor pings while the training thread
         owns the socket reads) — record and swallow them."""
-        if tag == "hb_ack":
+        if tag == wire.HB_ACK:
             try:
                 hid = int(src[4:])
                 self._last_ack[hid] = time.monotonic()
@@ -1895,7 +1912,7 @@ class MultiHostRun:
             for hid in range(self.n_hosts):
                 try:
                     self.channel.control_send(
-                        f"host{hid}", "hb",
+                        f"host{hid}", wire.HB,
                         {"t": now, "t_ns": time.perf_counter_ns()})
                 except Exception:                        # noqa: BLE001
                     continue        # training thread handles reconnects
@@ -1931,7 +1948,7 @@ class MultiHostRun:
             self._serve_setup_host(hid)
         remote = []
         for hid in range(self.n_hosts):
-            ack = self.channel.control_recv(f"host{hid}", "serve_ready")
+            ack = self.channel.control_recv(f"host{hid}", wire.SERVE_READY)
             remote.append(RemoteServingHost(self.channel, hid,
                                             int(ack["k"]),
                                             self.serve_timeout))
@@ -1945,7 +1962,7 @@ class MultiHostRun:
 
     def _serve_setup_host(self, hid: int) -> None:
         self.channel.control_send(
-            f"host{hid}", "serve_setup",
+            f"host{hid}", wire.SERVE_SETUP,
             {"keys": [list(k) for k in self._host_keys[hid]],
              "export_dir": self._serve_out_dir})
 
@@ -1965,7 +1982,7 @@ class MultiHostRun:
                 self._accept_hosts({hid}, self.timeout)
                 self._align_seqs(hid)
                 self._serve_setup_host(hid)
-                ack = self.channel.control_recv(peer, "serve_ready")
+                ack = self.channel.control_recv(peer, wire.SERVE_READY)
             except PartyUnavailable:
                 raise
             except (TransportError, OSError) as e:
@@ -2006,7 +2023,7 @@ class MultiHostRun:
         deployment (the serving protocol itself still moves only
         instance ids and bit blocks)."""
         for hid, X in enumerate(X_hosts):
-            self.channel.control_send(f"host{hid}", "serve_data",
+            self.channel.control_send(f"host{hid}", wire.SERVE_DATA,
                                       {"X": np.asarray(X)})
 
     def predict_score(self, X_guest, X_hosts: list | None = None, *,
@@ -2044,8 +2061,8 @@ class MultiHostRun:
         """Each host's Stats/ledger/socket counters (control round-trip)."""
         out = []
         for hid in range(self.n_hosts):
-            self.channel.control_send(f"host{hid}", "get_stats", None)
-            out.append(self.channel.control_recv(f"host{hid}", "stats"))
+            self.channel.control_send(f"host{hid}", wire.GET_STATS, None)
+            out.append(self.channel.control_recv(f"host{hid}", wire.STATS))
         return out
 
     def merged_stats(self) -> Stats:
@@ -2061,8 +2078,8 @@ class MultiHostRun:
         """Live introspection of one host party over the control plane:
         Stats, training + transport metric snapshots, ledger, trace
         occupancy, protocol position (``PartyProcess.status``)."""
-        self.channel.control_send(f"host{hid}", "status", None)
-        return self.channel.control_recv(f"host{hid}", "status_reply")
+        self.channel.control_send(f"host{hid}", wire.STATUS, None)
+        return self.channel.control_recv(f"host{hid}", wire.STATUS_REPLY)
 
     def collect_traces(self, clear: bool = False) -> list:
         """One ``trace_sync`` round-trip per host.  Returns
@@ -2073,9 +2090,9 @@ class MultiHostRun:
         out = []
         for hid in range(self.n_hosts):
             t0 = time.perf_counter_ns()
-            self.channel.control_send(f"host{hid}", "trace_sync",
+            self.channel.control_send(f"host{hid}", wire.TRACE_SYNC,
                                       {"clear": bool(clear)})
-            dump = self.channel.control_recv(f"host{hid}", "trace_dump")
+            dump = self.channel.control_recv(f"host{hid}", wire.TRACE_DUMP)
             t1 = time.perf_counter_ns()
             samples = list(self._clock_samples.get(hid, ()))
             samples.append((t0, int(dump["clock"]), t1))
@@ -2109,8 +2126,8 @@ class MultiHostRun:
     def ping(self, hid: int = 0) -> float:
         """One control round-trip, seconds."""
         t0 = time.perf_counter()
-        self.channel.control_send(f"host{hid}", "ping", {"t": t0})
-        self.channel.control_recv(f"host{hid}", "pong")
+        self.channel.control_send(f"host{hid}", wire.PING, {"t": t0})
+        self.channel.control_recv(f"host{hid}", wire.PONG)
         return time.perf_counter() - t0
 
     def close(self, join_timeout: float = 30.0) -> None:
@@ -2119,7 +2136,7 @@ class MultiHostRun:
                                             # typed PartyUnavailable
         for hid in range(self.n_hosts):
             try:
-                self.channel.control_send(f"host{hid}", "bye", None)
+                self.channel.control_send(f"host{hid}", wire.BYE, None)
             except (TransportError, OSError):
                 pass        # peer already dead (crashed host, reset pipe)
         # join -> terminate -> join -> kill: a host wedged in a blocking

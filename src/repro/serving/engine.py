@@ -41,10 +41,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis import schema as wire
+from ..analysis.registry import declassifies
 from ..core.binning import BinnedData, apply_binning
 from ..core.party import Channel, PartyUnavailable, Stats
 
 
+@declassifies("one comparison bit per (row, owned node): the serving "
+              "protocol's unit of disclosure — never raw feature values")
 @jax.jit
 def _packed_bits(bins_T, fid, bid):
     """All of one party's decision bits in one fused pass.
@@ -107,6 +111,8 @@ class PartyBits:
         bins_T[:, : bins.shape[0]] = bins.T
         return _packed_bits(jnp.asarray(bins_T), self._fid, self._bid)
 
+    @declassifies("wrapper over _packed_bits: bins then packs to the "
+                  "one-bit-per-node disclosure unit")
     def packed_from_X(self, X, n_pad: int):
         return self.packed(self.bin(X), n_pad)
 
@@ -253,7 +259,7 @@ class FederatedPredictor:
             if party is None:
                 continue                    # party owns no internal nodes
             try:
-                self.channel.send("guest", f"host{h.hid}", "predict_req",
+                self.channel.send("guest", f"host{h.hid}", wire.PREDICT_REQ,
                                   req, n * 4)
             except PartyUnavailable as e:
                 # keep dispatching: every HEALTHY host must still get its
@@ -269,7 +275,7 @@ class FederatedPredictor:
                       else party.packed_from_X(host_parts[i], n_pad))
                 k = pb.shape[0]
                 pb = self.channel.send(f"host{h.hid}", "guest",
-                                       "predict_bits", pb,
+                                       wire.PREDICT_BITS, pb,
                                        k * ((n + 7) // 8))
                 pending.append(pb)
             else:

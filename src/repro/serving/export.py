@@ -27,6 +27,7 @@ import shutil
 
 import numpy as np
 
+from ..analysis.registry import SECRET_FIELD_NAMES
 from .packed import GuestHalf, HostHalf, PackedEnsemble, PartySlice
 
 FORMAT = "sbt-packed-serving"
@@ -37,11 +38,48 @@ _GUEST_ARRAYS = ("step", "roots", "tree_class", "leaf_w", "k_parties",
 _HOST_ARRAYS = ("fid", "bid", "thresholds")
 
 
+def _manifest_keys(obj) -> set:
+    keys = set()
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            keys.add(k)
+            keys |= _manifest_keys(v)
+    elif isinstance(obj, (list, tuple)):
+        for v in obj:
+            keys |= _manifest_keys(v)
+    return keys
+
+
+def _audit_party(manifest: dict, arrays: dict) -> None:
+    """At-rest half of the privacy boundary, checked at export time.
+
+    A per-party export may carry ONLY its role's declared arrays — a
+    guest half never ships host split content beyond its own slice, a
+    host half never ships guest structure/leaf weights — and no field
+    name anywhere (arrays or nested manifest keys) may collide with the
+    declared secret registry (plaintext g/h, labels, private-key
+    attributes).  This is the runtime twin of the static taint pass's
+    ``_write_party`` sink."""
+    role = manifest.get("role")
+    allowed = {"guest": _GUEST_ARRAYS, "host": _HOST_ARRAYS}.get(role)
+    if allowed is None:
+        raise ValueError(f"export audit: unknown party role {role!r}")
+    extra = set(arrays) - set(allowed)
+    if extra:
+        raise ValueError(f"export audit: {role} half carries undeclared "
+                         f"arrays {sorted(extra)}")
+    leaked = (set(arrays) | _manifest_keys(manifest)) & SECRET_FIELD_NAMES
+    if leaked:
+        raise ValueError(f"export audit: {role} half carries secret field "
+                         f"name(s) {sorted(leaked)}")
+
+
 def _write_party(party_dir: str, manifest: dict, arrays: dict) -> None:
     os.makedirs(party_dir, exist_ok=True)
     manifest = dict(manifest, format=FORMAT, version=VERSION,
                     arrays={k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                             for k, v in arrays.items()})
+    _audit_party(manifest, arrays)
     np.savez_compressed(os.path.join(party_dir, "arrays.npz"), **arrays)
     with open(os.path.join(party_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
@@ -49,7 +87,7 @@ def _write_party(party_dir: str, manifest: dict, arrays: dict) -> None:
 
 def _guest_payload(g: GuestHalf) -> tuple:
     init = (g.init_score if np.isscalar(g.init_score)
-            else np.asarray(g.init_score).tolist())
+            else np.asarray(g.init_score, np.float64).tolist())
     return ({"role": "guest", "objective": g.objective,
              "n_classes": g.n_classes, "n_bins": g.n_bins, "depth": g.depth,
              "n_trees": g.n_trees, "n_nodes": g.n_nodes,

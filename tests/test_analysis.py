@@ -1,0 +1,308 @@
+"""Tests for the static-analysis subsystem (DESIGN.md §15).
+
+Three layers of assurance:
+
+1. Unit tests of each pass against tiny synthetic source trees — the
+   taint pass catches direct / transitive / attribute leaks and honors
+   sanitizers; the wire pass refuses unregistered tags; the lock pass
+   flags unguarded access; the dtype pass flags naked ``asarray``.
+2. The analyzer runs CLEAN over the real tree: zero findings beyond the
+   reviewed baseline, and nothing in the baseline is stale.
+3. Seeded-mutation self-tests: three representative violations (a
+   plaintext-gradient leak under a fresh tag, an unregistered-tag send,
+   an unlocked guarded write) are injected into a COPY of the real
+   source, and each is caught by its pass as a NEW finding against the
+   shipped baseline — proof the CI gate actually fires.
+
+Plus runtime twins: the export audit (both leak directions) and the
+checkpoint float64 round-trip the dtype lint exists to protect.
+"""
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.analysis import astutil, locks, report, schema, taint, wire
+from repro.analysis import dtype as dtype_pass
+from repro.analysis.__main__ import _DEFAULT_ROOT as ROOT
+from repro.analysis.__main__ import analyze
+from repro.analysis.schema import WireSchemaError
+from repro.checkpoint import checkpoint as ckpt
+from repro.serving import export
+BASELINE = os.path.join(ROOT, "analysis", "baseline.json")
+
+
+# ---------------------------------------------------------------------------
+# schema registry
+# ---------------------------------------------------------------------------
+
+def test_registry_partitions_proto_and_ctrl():
+    assert schema.PROTO_TAGS and schema.CTRL_TAGS
+    assert not (schema.PROTO_TAGS & schema.CTRL_TAGS)
+    assert schema.PROTO_TAGS | schema.CTRL_TAGS == set(schema.REGISTRY)
+    for tag, spec in schema.REGISTRY.items():
+        assert spec.tag == tag
+        assert spec.direction in (schema.G2H, schema.H2G)
+
+
+def test_validate_refuses_each_violation_class():
+    ok = {"tree": 0, "seed": 1, "forest": 0, "codec": {}, "cts": None}
+    schema.validate(schema.KIND_PROTO, "guest", "host0", schema.ENC_GH, ok)
+    with pytest.raises(WireSchemaError, match="unregistered"):
+        schema.validate(schema.KIND_PROTO, "guest", "host0", "gh_debug", ok)
+    with pytest.raises(WireSchemaError, match="kind"):
+        schema.validate(schema.KIND_CTRL, "guest", "host0",
+                        schema.ENC_GH, ok)
+    with pytest.raises(WireSchemaError, match="direction"):
+        schema.validate(schema.KIND_PROTO, "host0", "guest",
+                        schema.ENC_GH, ok)
+    with pytest.raises(WireSchemaError, match="missing required"):
+        schema.validate(schema.KIND_PROTO, "guest", "host0",
+                        schema.ENC_GH, {"tree": 0})
+    with pytest.raises(WireSchemaError, match="must be None"):
+        schema.validate(schema.KIND_CTRL, "guest", "host0",
+                        schema.BYE, {"x": 1})
+    # unknown roles never flag direction (simulation channels say "?")
+    schema.validate(schema.KIND_PROTO, "?", "?", schema.ENC_GH, ok)
+
+
+def test_finding_fingerprint_ignores_line_numbers():
+    a = report.Finding("taint", "core/tree.py", "f", "r", "d", line=10)
+    b = report.Finding("taint", "core/tree.py", "f", "r", "d", line=99)
+    c = report.Finding("taint", "core/tree.py", "f", "r", "other", line=10)
+    assert a.fingerprint == b.fingerprint != c.fingerprint
+
+
+# ---------------------------------------------------------------------------
+# pass unit tests on synthetic trees
+# ---------------------------------------------------------------------------
+
+def _tree_from(tmp_path, files: dict):
+    root = tmp_path / "src"
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(src)
+    return astutil.load_tree(str(root))
+
+
+def test_taint_pass_direct_transitive_attr_and_sanitized(tmp_path):
+    mods = _tree_from(tmp_path, {"core/tree.py": (
+        "def helper(x):\n"
+        "    return x + 1\n"
+        "def leak_direct(ch, g):\n"
+        "    ch.send('guest', 'host0', 'gh_debug', g, 8)\n"
+        "def leak_transitive(ch, h):\n"
+        "    ch.send('guest', 'host0', 'gh_debug', helper(h), 8)\n"
+        "def leak_attr(ch, ctx):\n"
+        "    ch.send('guest', 'host0', 'gh_debug', ctx.g, 8)\n"
+        "def clean(ch, g, cipher):\n"
+        "    ch.send('guest', 'host0', 'enc_gh', cipher.encrypt_ints(g), 8)\n"
+        "def clean_len(ch, g):\n"
+        "    ch.send('guest', 'host0', 'enc_gh', {'n': len(g)}, 8)\n")})
+    found = {f.qualname for f in taint.run(mods)}
+    assert found == {"leak_direct", "leak_transitive", "leak_attr"}
+
+
+def test_wire_pass_unregistered_and_dynamic_tags(tmp_path):
+    mods = _tree_from(tmp_path, {"runtime/x.py": (
+        "import repro.analysis.schema as wire\n"
+        "def ok(ch, p):\n"
+        "    ch.send('guest', 'host0', wire.ENC_GH, p, 8)\n"
+        "    ch.send('guest', 'host0', 'assign_sync', p, 8)\n"
+        "def bad(ch, p, t):\n"
+        "    ch.send('guest', 'host0', 'gh_debug', p, 8)\n"
+        "    ch.send('guest', 'host0', t, p, 8)\n")})
+    rules = sorted((f.rule, f.qualname) for f in wire.run(mods))
+    assert rules == [("dynamic-tag", "bad"), ("unregistered-tag", "bad")]
+
+
+def test_lock_pass_synthetic(tmp_path):
+    # reuse a real contract: obs/trace.py Tracer guards _events via _lock
+    mods = _tree_from(tmp_path, {"obs/trace.py": (
+        "import threading\n"
+        "class Tracer:\n"
+        "    def __init__(self):\n"
+        "        self._events = []\n"          # __init__ exempt
+        "        self._lock = threading.Lock()\n"
+        "    def good(self):\n"
+        "        with self._lock:\n"
+        "            return len(self._events)\n"
+        "    def bad(self):\n"
+        "        return len(self._events)\n")})
+    found = [(f.qualname, f.rule) for f in locks.run(mods)]
+    assert found == [("Tracer.bad", "unlocked-access")]
+
+
+def test_dtype_pass_only_fires_on_lint_paths(tmp_path):
+    src = ("import numpy as np\n"
+           "def f(x):\n"
+           "    return np.asarray(x)\n"
+           "def g(x):\n"
+           "    return np.asarray(x, dtype=np.float64)\n")
+    mods = _tree_from(tmp_path, {"checkpoint/c.py": src,
+                                 "core/free.py": src})
+    found = [(f.module, f.qualname) for f in dtype_pass.run(mods)]
+    assert found == [("checkpoint/c.py", "f")]
+
+
+# ---------------------------------------------------------------------------
+# the real tree is clean (modulo the reviewed baseline)
+# ---------------------------------------------------------------------------
+
+def test_analyzer_clean_on_real_tree():
+    findings = analyze(ROOT)
+    new, known, stale = report.diff_against_baseline(
+        findings, report.load_baseline(BASELINE))
+    assert not new, "unbaselined findings:\n" + \
+        "\n".join(str(f) for f in new)
+    assert not stale, f"baseline entries no longer produced: {stale}"
+    assert known, "baseline diff saw no findings at all — passes broken?"
+
+
+def test_cli_json_report_exits_zero():
+    env = dict(os.environ, PYTHONPATH=os.path.dirname(ROOT),
+               JAX_PLATFORMS="cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--json"],
+        capture_output=True, text=True, env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    out = json.loads(proc.stdout)
+    assert out["summary"]["new"] == 0
+    assert out["summary"]["stale_baseline"] == 0
+    assert out["summary"]["total"] == out["summary"]["baselined"]
+
+
+# ---------------------------------------------------------------------------
+# seeded-mutation self-tests: each violation class is CAUGHT
+# ---------------------------------------------------------------------------
+
+def _mutated_tree(tmp_path, relpath: str, marker: str, insert: str):
+    """Copy the real package, splice ``insert`` right after ``marker`` in
+    ``relpath``, and return the parsed module list."""
+    root = str(tmp_path / "repro")
+    shutil.copytree(ROOT, root,
+                    ignore=shutil.ignore_patterns("__pycache__"))
+    path = os.path.join(root, relpath)
+    with open(path) as f:
+        src = f.read()
+    assert marker in src, f"mutation marker drifted in {relpath}"
+    with open(path, "w") as f:
+        f.write(src.replace(marker, marker + insert, 1))
+    return astutil.load_tree(root)
+
+
+def _new_findings(run, mods):
+    new, _, _ = report.diff_against_baseline(
+        run(mods), report.load_baseline(BASELINE))
+    return new
+
+
+_ENC_ALL_MARKER = ("    blk = _stream_block(p, ctx.cipher, len(g_sel))\n"
+                   "    if blk:\n"
+                   "        _encrypt_all_chunked(ctx, g_sel, h_sel, blk)\n"
+                   "        return")
+
+
+def test_mutation_plaintext_gradient_leak_is_caught(tmp_path):
+    """Shipping plaintext g_sel under a fresh tag from _encrypt_all must
+    surface as a NEW taint finding (not absorbed by the baseline)."""
+    mods = _mutated_tree(
+        tmp_path, "core/tree.py", _ENC_ALL_MARKER,
+        '\n    ctx.channel.send("guest", "host0", "gh_debug", g_sel, 8)')
+    new = _new_findings(taint.run, mods)
+    assert any(f.module == "core/tree.py" and f.rule == "unsanitized-flow"
+               and "g_sel" in f.detail for f in new), \
+        [str(f) for f in new]
+
+
+def test_mutation_unregistered_tag_send_is_caught(tmp_path):
+    mods = _mutated_tree(
+        tmp_path, "core/tree.py", _ENC_ALL_MARKER,
+        '\n    ctx.channel.send("guest", "host0", "dbg_probe", None, 0)')
+    new = _new_findings(wire.run, mods)
+    assert any(f.rule == "unregistered-tag" and "dbg_probe" in f.detail
+               for f in new), [str(f) for f in new]
+
+
+def test_mutation_unlocked_guarded_write_is_caught(tmp_path):
+    mods = _mutated_tree(
+        tmp_path, "runtime/transport.py",
+        "    def close(self) -> None:\n        self.stop_broker()",
+        '\n        self.tx_bytes["chaos"] += 1')
+    new = _new_findings(locks.run, mods)
+    assert any(f.qualname == "TransportChannel.close"
+               and f.rule == "unlocked-access"
+               and "tx_bytes" in f.detail for f in new), \
+        [str(f) for f in new]
+
+
+# ---------------------------------------------------------------------------
+# runtime export audit (satellite: both leak directions)
+# ---------------------------------------------------------------------------
+
+def _arrays(names):
+    return {k: np.zeros(1) for k in names}
+
+
+def test_export_audit_accepts_declared_halves():
+    export._audit_party({"role": "guest"}, _arrays(export._GUEST_ARRAYS))
+    export._audit_party({"role": "host"}, _arrays(export._HOST_ARRAYS))
+
+
+def test_export_audit_host_refuses_guest_content():
+    with pytest.raises(ValueError, match="undeclared"):
+        export._audit_party(
+            {"role": "host"},
+            _arrays(export._HOST_ARRAYS + ("leaf_w", "tree_class")))
+
+
+def test_export_audit_guest_refuses_extra_arrays():
+    with pytest.raises(ValueError, match="undeclared"):
+        export._audit_party(
+            {"role": "guest"},
+            _arrays(export._GUEST_ARRAYS + ("split_gain",)))
+
+
+def test_export_audit_refuses_secret_field_names_in_manifest():
+    # the secret registry is checked over NESTED manifest keys too
+    for secret in ("g", "labels", "_lam"):
+        with pytest.raises(ValueError, match="secret field"):
+            export._audit_party(
+                {"role": "host", "stats": {secret: [0.5]}},
+                _arrays(export._HOST_ARRAYS))
+
+
+def test_export_audit_refuses_unknown_role():
+    with pytest.raises(ValueError, match="unknown party role"):
+        export._audit_party({"role": "auditor"}, {})
+
+
+def test_write_party_audits_before_touching_disk(tmp_path):
+    out = str(tmp_path / "host0")
+    with pytest.raises(ValueError, match="undeclared"):
+        export._write_party(out, {"role": "host"},
+                            _arrays(export._HOST_ARRAYS + ("leaf_w",)))
+    assert not os.path.exists(os.path.join(out, "arrays.npz"))
+    assert not os.path.exists(os.path.join(out, "manifest.json"))
+
+
+# ---------------------------------------------------------------------------
+# dtype regression: the float64 state the lint protects stays float64
+# ---------------------------------------------------------------------------
+
+def test_restore_any_preserves_float64_bit_exact(tmp_path):
+    score = np.linspace(-3.0, 3.0, 17).astype(np.float64)
+    score[3] = 1.0 + 2.0 ** -40        # truncates to 1.0 in float32
+    ckpt.save(str(tmp_path / "ck"), 0, {"score": score,
+                                        "step": np.arange(3, dtype=np.int64)})
+    out = ckpt.restore_any(str(tmp_path / "ck"), 0)
+    f64 = [a for a in out.values() if a.dtype == np.float64]
+    assert len(f64) == 1
+    np.testing.assert_array_equal(f64[0], score)
+    assert f64[0][3] != np.float32(f64[0][3])      # the bit the lint guards

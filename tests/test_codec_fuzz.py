@@ -17,9 +17,12 @@ import time
 import numpy as np
 import pytest
 
-from repro.runtime.transport import (KIND_CTRL, KIND_PROTO, TransportError,
-                                     decode_frame, decode_payload,
-                                     encode_frame, encode_payload)
+from repro.analysis import schema as wire_schema
+from repro.runtime.transport import (KIND_CTRL, KIND_PROTO, LoopbackEndpoint,
+                                     TransportChannel, TransportError,
+                                     conformance_check, decode_frame,
+                                     decode_payload, encode_frame,
+                                     encode_payload)
 
 try:
     from hypothesis import given, settings
@@ -226,3 +229,127 @@ else:
     def test_hypothesis_unavailable_marker():
         pytest.skip("hypothesis not installed: property-based variants "
                     "skipped (seeded fuzz loops above still ran)")
+
+
+# ---------------------------------------------------------------------------
+# wire-schema conformance (opt-in runtime mode; DESIGN.md §15)
+#
+# Contract: with conformance ON, every schema-conformant frame still
+# encodes and decodes exactly as before (the mode never perturbs payload
+# bytes), and every NON-conformant frame raises TransportError at ship
+# time -- never a different exception, never a silent pass.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def conformance_on():
+    prev = wire_schema.conformance_enabled()
+    wire_schema.set_conformance(True)
+    yield
+    wire_schema.set_conformance(prev)
+
+
+def _conformant(spec):
+    """A minimal payload satisfying one registered tag's shape class."""
+    if spec.payload == wire_schema.P_NONE:
+        return None
+    if spec.payload == wire_schema.P_STR:
+        return "a peer's dying words"
+    if spec.payload == wire_schema.P_ARRAY:
+        return np.arange(4, dtype=np.uint8)
+    if spec.payload == wire_schema.P_DICT:
+        return {k: 0 for k in sorted(spec.requires)}
+    return b"unconstrained"                     # P_ANY
+
+
+def _endpoints(spec):
+    return (("guest", "host0") if spec.direction == wire_schema.G2H
+            else ("host0", "guest"))
+
+
+def test_every_registered_tag_roundtrips_under_conformance(conformance_on):
+    """All 26 registered tags: a conformant frame passes the ship-time
+    check AND survives the codec bit-for-bit."""
+    assert wire_schema.REGISTRY, "schema registry is empty?"
+    for tag, spec in sorted(wire_schema.REGISTRY.items()):
+        src, dst = _endpoints(spec)
+        payload = _conformant(spec)
+        conformance_check(spec.kind, src, dst, tag, payload)  # must not raise
+        frame = encode_frame(spec.kind, src, dst, tag, 7, payload, seq=3)
+        kind, fsrc, fdst, ftag, seq, nbytes, out = decode_frame(frame)
+        assert (kind, fsrc, fdst, ftag, seq, nbytes) == (
+            spec.kind, src, dst, tag, 3, 7)
+        if isinstance(payload, dict):
+            assert set(out) == set(payload)
+        elif spec.payload == wire_schema.P_ARRAY:
+            np.testing.assert_array_equal(out, payload)
+        elif spec.payload != wire_schema.P_ANY:
+            assert out == payload
+
+
+def _violations():
+    """(kind, src, dst, tag, payload) tuples that each break the schema
+    in exactly one way: wrong kind, reversed direction, wrong payload
+    type, or a missing required key."""
+    for tag, spec in sorted(wire_schema.REGISTRY.items()):
+        src, dst = _endpoints(spec)
+        good = _conformant(spec)
+        yield (1 - spec.kind, src, dst, tag, good)            # wrong kind
+        yield (spec.kind, dst, src, tag, good)                # wrong direction
+        if spec.payload == wire_schema.P_NONE:
+            yield (spec.kind, src, dst, tag, "not-none")
+        elif spec.payload == wire_schema.P_STR:
+            yield (spec.kind, src, dst, tag, None)
+        elif spec.payload == wire_schema.P_ARRAY:
+            yield (spec.kind, src, dst, tag, {"not": "a tensor"})
+        elif spec.payload == wire_schema.P_DICT:
+            yield (spec.kind, src, dst, tag, "not-a-dict")
+            if spec.requires:
+                short = dict(good)
+                short.pop(sorted(spec.requires)[0])
+                yield (spec.kind, src, dst, tag, short)
+    # unregistered tags are refused regardless of payload
+    yield (KIND_PROTO, "guest", "host0", "gh_debug", None)
+    yield (KIND_CTRL, "host0", "guest", "totally-made-up", {"x": 1})
+
+
+def test_nonconformant_frames_raise_transport_error(conformance_on):
+    for kind, src, dst, tag, payload in _violations():
+        with pytest.raises(TransportError):
+            conformance_check(kind, src, dst, tag, payload)
+
+
+def test_conformance_off_is_a_noop():
+    """With the mode off, the check never fires -- even for frames the
+    schema would refuse (zero-cost default; production opt-in only)."""
+    prev = wire_schema.conformance_enabled()
+    wire_schema.set_conformance(False)
+    try:
+        for kind, src, dst, tag, payload in _violations():
+            conformance_check(kind, src, dst, tag, payload)
+    finally:
+        wire_schema.set_conformance(prev)
+
+
+def test_codec_stays_schema_agnostic():
+    """The codec itself never enforces the schema: an unregistered-tag
+    frame still roundtrips (decode tolerance is a framing property), and
+    only the ship-time check refuses it."""
+    frame = encode_frame(KIND_PROTO, "guest", "host0", "gh_debug", 0,
+                         {"x": 1}, seq=9)
+    assert decode_frame(frame)[3] == "gh_debug"
+
+
+def test_ship_time_conformance_blocks_the_socket(conformance_on):
+    """End-to-end: a non-conformant send through a real TransportChannel
+    raises BEFORE any bytes reach the endpoint; a conformant control
+    frame still flows."""
+    a, b = LoopbackEndpoint.pair()
+    ch = TransportChannel("guest", {"host0": a}, timeout=5.0)
+    with pytest.raises(TransportError):
+        ch.send("guest", "host0", "gh_debug", np.zeros(3, np.uint8), 3)
+    assert not b.poll(), "non-conformant frame reached the wire"
+    ch.control_send("host0", wire_schema.PING, {"t": 0.0})
+    assert b.poll()
+    kind, _, _, tag, _, _, payload = decode_frame(b.recv_bytes())
+    assert (kind, tag) == (KIND_CTRL, wire_schema.PING)
+    assert payload == {"t": 0.0}
